@@ -1,0 +1,85 @@
+"""Shared benchmark helpers: timing, CSV emission, small trained models."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
+
+
+def time_call(fn, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Median wall-time per call in microseconds (CPU; jit-warmed)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def frechet_distance(a: np.ndarray, b: np.ndarray) -> float:
+    """Fréchet distance between two sample sets on flattened features —
+    the offline FID proxy (no Inception network is available)."""
+    a = a.reshape(a.shape[0], -1).astype(np.float64)
+    b = b.reshape(b.shape[0], -1).astype(np.float64)
+    mu_a, mu_b = a.mean(0), b.mean(0)
+    # diagonal-covariance Fréchet (stable for small sample counts)
+    va, vb = a.var(0) + 1e-8, b.var(0) + 1e-8
+    return float(np.sum((mu_a - mu_b) ** 2)
+                 + np.sum(va + vb - 2.0 * np.sqrt(va * vb)))
+
+
+def train_small_dit(cfg, key, steps: int = 150, batch: int = 16,
+                    lr: float = 2e-3, data=None, loss_kind: str = "eps"):
+    """Train the smoke DiT on synthetic latents so caching quality deltas
+    are measurable.  Returns (params, sched)."""
+    from repro.core import diffusion
+    from repro.data import BlobLatents, CondLatents
+    from repro import optim
+
+    params = diffusion.init_params(key, cfg)
+    sched = diffusion.vp_schedule()
+    if data is None:
+        data = BlobLatents(cfg.latent_shape, max(cfg.num_classes, 1), batch)
+    ocfg = optim.AdamWConfig(lr=lr, weight_decay=0.0,
+                             schedule=optim.cosine_schedule(10, steps))
+    ostate = optim.init_state(params)
+
+    def loss_fn(p, k, x0, label=None, memory=None):
+        if loss_kind == "rf":
+            return diffusion.rf_loss(cfg, p, k, x0, label=label, memory=memory)
+        return diffusion.eps_loss(cfg, p, k, x0, sched=sched, label=label,
+                                  memory=memory)
+
+    @jax.jit
+    def step(p, s, k, x0, label, memory):
+        l, g = jax.value_and_grad(loss_fn)(p, k, x0, label, memory)
+        p, s, _ = optim.apply_updates(ocfg, p, g, s)
+        return p, s, l
+
+    losses = []
+    for i in range(steps):
+        out = data.batch_at(i)
+        if isinstance(data, BlobLatents):
+            x0, label = out
+            memory = None
+        else:
+            x0, memory = out
+            label = None
+        params, ostate, l = step(params, ostate,
+                                 jax.random.fold_in(key, i), x0, label, memory)
+        losses.append(float(l))
+    return params, sched, losses

@@ -1,0 +1,48 @@
+"""Kernel micro-benchmarks: jnp reference path timings on CPU (the Pallas
+kernels are TPU targets validated in interpret mode — interpret execution
+is Python-speed, so wall-clock here times the XLA reference path) plus
+derived TPU-roofline estimates for the kernel shapes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.kernels.ref import flash_attention_ref, ssd_ref
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    # attention shapes: (B, L, H, KV, D) — DiT-XL block & a GQA LM block
+    for name, (b, l, h, kv, d) in [
+        ("dit_xl_attn", (2, 256, 16, 16, 72)),
+        ("gqa_4k", (1, 4096, 8, 2, 128)),
+    ]:
+        ks = jax.random.split(jax.random.fold_in(key, l), 3)
+        q = jax.random.normal(ks[0], (b, l, h, d), jnp.float32)
+        k = jax.random.normal(ks[1], (b, l, kv, d), jnp.float32)
+        v = jax.random.normal(ks[2], (b, l, kv, d), jnp.float32)
+        f = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v, causal=True))
+        us = common.time_call(f, q, k, v)
+        flops = 4.0 * b * h * l * l * d
+        tpu_us = flops / PEAK_FLOPS_BF16 * 1e6
+        common.emit(f"kernels/{name}", us,
+                    f"flops={flops:.3g};tpu_compute_bound_us={tpu_us:.1f}")
+
+    # SSD shape: mamba2-1.3b block
+    b, l, h, p, g, n = 1, 1024, 64, 64, 1, 128
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    a = jnp.exp(jax.random.uniform(ks[2], (h,)))
+    bb = jax.random.normal(ks[3], (b, l, g, n))
+    cc = jax.random.normal(ks[4], (b, l, g, n))
+    f = jax.jit(lambda *args: ssd_ref(*args, chunk=128)[0])
+    us = common.time_call(f, x, dt, a, bb, cc)
+    flops = 2 * b * l * 128 * h * (n + p) + 4 * b * l * h * p * n
+    common.emit("kernels/ssd_mamba2", us, f"flops={flops:.3g}")
+
+
+if __name__ == "__main__":
+    run()

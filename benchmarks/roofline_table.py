@@ -1,0 +1,62 @@
+"""§Roofline — assemble the per-(arch × shape × mesh) roofline table from
+the dry-run JSON results (results/dryrun/*.json)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import common
+from repro.launch.roofline import fmt_seconds
+
+
+def load_records(pattern: str = "results/dryrun/*.json"):
+    recs = []
+    for path in sorted(glob.glob(pattern)):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def markdown_table(recs) -> str:
+    hdr = ("| arch | shape | mesh | t_compute | t_memory | t_collective | "
+           "bottleneck | MODEL/HLO | peak GB/chip |")
+    sep = "|" + "---|" * 9
+    rows = [hdr, sep]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if not r.get("ok"):
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"FAIL: {r.get('error','')[:60]} | | | | | |")
+            continue
+        rf = r["roofline"]
+        peak = (r.get("memory") or {}).get("peak_bytes")
+        peak_s = f"{peak/1e9:.1f}" if peak else "?"
+        ratio = rf.get("useful_flops_ratio")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {fmt_seconds(rf['t_compute'])} | {fmt_seconds(rf['t_memory'])} "
+            f"| {fmt_seconds(rf['t_collective'])} | {rf['bottleneck']} "
+            f"| {ratio:.2f} | {peak_s} |" if ratio is not None else
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ? | ? | ? | ? | ? | {peak_s} |")
+    return "\n".join(rows)
+
+
+def run():
+    recs = load_records()
+    ok = [r for r in recs if r.get("ok")]
+    fail = [r for r in recs if not r.get("ok")]
+    common.emit("roofline/combos_ok", 0.0, f"count={len(ok)};fail={len(fail)}")
+    for r in ok:
+        rf = r["roofline"]
+        common.emit(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", 0.0,
+            f"tc={rf['t_compute']:.4g};tm={rf['t_memory']:.4g};"
+            f"tcoll={rf['t_collective']:.4g};bn={rf['bottleneck']};"
+            f"useful={rf.get('useful_flops_ratio') or 0:.3f}")
+    os.makedirs("results", exist_ok=True)
+    with open("results/roofline_table.md", "w") as f:
+        f.write(markdown_table(recs) + "\n")
+
+
+if __name__ == "__main__":
+    run()

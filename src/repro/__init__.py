@@ -1,0 +1,2 @@
+"""repro — SmoothCache on TPU: multi-pod JAX DiT framework."""
+__version__ = "0.1.0"

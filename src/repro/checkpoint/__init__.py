@@ -1,0 +1,1 @@
+from repro.checkpoint.io import restore, save  # noqa: F401

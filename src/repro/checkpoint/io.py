@@ -1,0 +1,108 @@
+"""Checkpoint IO: msgpack + raw numpy buffers (no orbax offline).
+
+Layout: a single ``.ckpt`` file holding a msgpack header (treedef paths,
+shapes, dtypes, offsets) followed by the concatenated raw array bytes.
+Host-gathered save / restore; under pjit the caller re-shards on load via
+``jax.device_put(tree, shardings)``.
+"""
+from __future__ import annotations
+
+import io
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+MAGIC = b"REPROCKPT1"
+
+
+def _flatten_with_paths(tree, prefix=""):
+    out = []
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out += _flatten_with_paths(tree[k], f"{prefix}/{k}")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out += _flatten_with_paths(v, f"{prefix}/{i}")
+    elif tree is None:
+        out.append((prefix, None))
+    else:
+        out.append((prefix, tree))
+    return out
+
+
+def save(path: str, tree: Any, metadata: Dict | None = None) -> None:
+    pairs = _flatten_with_paths(tree)
+    header = {"meta": metadata or {}, "entries": [], "kinds": _kinds(tree)}
+    payload = io.BytesIO()
+    for name, arr in pairs:
+        if arr is None:
+            header["entries"].append({"name": name, "none": True})
+            continue
+        a = np.asarray(jax.device_get(arr))
+        off = payload.tell()
+        payload.write(a.tobytes())
+        header["entries"].append({
+            "name": name, "shape": list(a.shape), "dtype": str(a.dtype),
+            "offset": off, "none": False})
+    hb = msgpack.packb(header)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(MAGIC)
+        f.write(len(hb).to_bytes(8, "little"))
+        f.write(hb)
+        f.write(payload.getvalue())
+    os.replace(tmp, path)
+
+
+def _kinds(tree):
+    """Minimal structure spec so restore can rebuild tuples vs lists."""
+    if isinstance(tree, dict):
+        return {"t": "dict", "c": {k: _kinds(v) for k, v in tree.items()}}
+    if isinstance(tree, tuple):
+        return {"t": "tuple", "c": [_kinds(v) for v in tree]}
+    if isinstance(tree, list):
+        return {"t": "list", "c": [_kinds(v) for v in tree]}
+    if tree is None:
+        return {"t": "none"}
+    return {"t": "leaf"}
+
+
+def restore(path: str):
+    """Returns (tree, metadata)."""
+    with open(path, "rb") as f:
+        magic = f.read(len(MAGIC))
+        assert magic == MAGIC, f"bad checkpoint magic in {path}"
+        hlen = int.from_bytes(f.read(8), "little")
+        header = msgpack.unpackb(f.read(hlen))
+        body = f.read()
+    leaves = {}
+    for e in header["entries"]:
+        if e.get("none"):
+            leaves[e["name"]] = None
+            continue
+        dt = np.dtype(e["dtype"])
+        n = int(np.prod(e["shape"])) if e["shape"] else 1
+        a = np.frombuffer(body, dt, count=n, offset=e["offset"])
+        leaves[e["name"]] = jnp.asarray(a.reshape(e["shape"]))
+    tree = _rebuild(header["kinds"], leaves, "")
+    return tree, header["meta"]
+
+
+def _rebuild(kind, leaves, prefix):
+    t = kind["t"]
+    if t == "dict":
+        return {k: _rebuild(v, leaves, f"{prefix}/{k}")
+                for k, v in kind["c"].items()}
+    if t == "tuple":
+        return tuple(_rebuild(v, leaves, f"{prefix}/{i}")
+                     for i, v in enumerate(kind["c"]))
+    if t == "list":
+        return [_rebuild(v, leaves, f"{prefix}/{i}")
+                for i, v in enumerate(kind["c"])]
+    if t == "none":
+        return None
+    return leaves[prefix]

@@ -1,0 +1,40 @@
+"""Architecture config registry: ``get(name)`` → module with full()/smoke().
+
+The 10 assigned architectures plus the paper's own three DiT families.
+"""
+from __future__ import annotations
+
+import importlib
+
+REGISTRY = {
+    # --- assigned pool ---
+    "recurrentgemma-2b":          "repro.configs.recurrentgemma_2b",
+    "gemma2-9b":                  "repro.configs.gemma2_9b",
+    "mamba2-1.3b":                "repro.configs.mamba2_1p3b",
+    "musicgen-medium":            "repro.configs.musicgen_medium",
+    "qwen3-14b":                  "repro.configs.qwen3_14b",
+    "qwen2.5-14b":                "repro.configs.qwen2_5_14b",
+    "deepseek-v3-671b":           "repro.configs.deepseek_v3_671b",
+    "minicpm3-4b":                "repro.configs.minicpm3_4b",
+    "internvl2-1b":               "repro.configs.internvl2_1b",
+    "llama4-maverick-400b-a17b":  "repro.configs.llama4_maverick_400b",
+    # --- the paper's own models ---
+    "dit-xl-256":                 "repro.configs.dit_xl",
+    "opensora-v12":               "repro.configs.opensora_v12",
+    "stable-audio-open":          "repro.configs.stable_audio_open",
+}
+
+ASSIGNED = [k for k in REGISTRY if k not in
+            ("dit-xl-256", "opensora-v12", "stable-audio-open")]
+PAPER_MODELS = ["dit-xl-256", "opensora-v12", "stable-audio-open"]
+
+
+def get_module(name: str):
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}")
+    return importlib.import_module(REGISTRY[name])
+
+
+def get(name: str, variant: str = "full"):
+    mod = get_module(name)
+    return getattr(mod, variant)()

@@ -1,0 +1,1 @@
+from repro.core import calibration, diffusion, executor, schedule, solvers  # noqa: F401

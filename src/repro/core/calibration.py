@@ -1,0 +1,94 @@
+"""SmoothCache calibration: run uncached sampling trajectories, record every
+layer's pre-residual branch output at every step, and build the per-type L1
+relative error curves of paper Fig. 2 / Eq. 4.
+
+The error at step s for lag k is
+
+    err[t][s, k] = mean_{j ∈ layers of type t}
+                   ||L̃_{j}(s) − L̃_{j}(s−k)||₁ / ||L̃_{j}(s)||₁
+
+averaged over calibration samples; per-sample curves are also returned so
+the Fig. 2 confidence intervals can be reproduced.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+
+
+def branch_outputs_by_type(cfg: ModelConfig, branch_tree) -> Dict[str, List[np.ndarray]]:
+    """Flatten the per-stage scan-stacked branch outputs into
+    {type: [per-layer arrays (B, N, d)] in depth order}."""
+    out: Dict[str, List[np.ndarray]] = {}
+    for si, st in enumerate(cfg.stages):
+        stage_branches = branch_tree[si]          # tuple per block in unit
+        for bi, b in enumerate(st.unit):
+            bo = stage_branches[bi]
+            names = b.branch_names()
+            types = b.branch_types()
+            for name, t in zip(names, types):
+                if bo is None or name not in bo:
+                    continue
+                arr = np.asarray(bo[name])        # (repeat, B, N, d)
+                for r in range(arr.shape[0]):
+                    out.setdefault(t, []).append(arr[r])
+    return out
+
+
+def l1_rel_error(a: np.ndarray, b: np.ndarray, axis=None) -> np.ndarray:
+    """||a − b||₁ / ||a||₁ (per-sample when axis keeps the batch dim)."""
+    num = np.sum(np.abs(a - b), axis=axis)
+    den = np.sum(np.abs(a), axis=axis) + 1e-12
+    return num / den
+
+
+def error_curves_from_trajectory(cfg: ModelConfig,
+                                 per_step: List[Dict[str, List[np.ndarray]]],
+                                 k_max: int = 3):
+    """per_step[s] = branch_outputs_by_type at sampling step s.
+
+    Returns (mean_curves {t: (S, K+1)}, per_sample {t: (B, S, K+1)}).
+    Entries with k > s are NaN; k=0 column is 0.
+    """
+    s_total = len(per_step)
+    types = sorted(per_step[0].keys())
+    bsz = per_step[0][types[0]][0].shape[0]
+    mean_curves = {t: np.full((s_total, k_max + 1), np.nan) for t in types}
+    per_sample = {t: np.full((bsz, s_total, k_max + 1), np.nan) for t in types}
+    for t in types:
+        for s in range(s_total):
+            per_sample[t][:, s, 0] = 0.0
+            mean_curves[t][s, 0] = 0.0
+            for k in range(1, min(k_max, s) + 1):
+                errs = []
+                for lj, (cur, prev) in enumerate(zip(per_step[s][t],
+                                                     per_step[s - k][t])):
+                    # per-sample L1 over all non-batch axes
+                    ax = tuple(range(1, cur.ndim))
+                    errs.append(l1_rel_error(cur, prev, axis=ax))
+                e = np.mean(np.stack(errs, 0), axis=0)   # layer-mean, (B,)
+                per_sample[t][:, s, k] = e
+                mean_curves[t][s, k] = float(np.mean(e))
+    return mean_curves, per_sample
+
+
+def calibrate(executor, params, key, batch: int, *, cond_args=None,
+              k_max: int = 3):
+    """Run one uncached sampling pass with ``batch`` calibration samples
+    (paper uses 10) and return (mean_curves, per_sample, trajectory x₀)."""
+    cond_args = cond_args or {}
+    per_step: List[Dict[str, List[np.ndarray]]] = []
+
+    def hook(s, branch_tree):
+        per_step.append(branch_outputs_by_type(executor.cfg, branch_tree))
+
+    x0 = executor.sample(params, key, batch, schedule=None,
+                         collect_hook=hook, **cond_args)
+    curves, per_sample = error_curves_from_trajectory(
+        executor.cfg, per_step, k_max=k_max)
+    return curves, per_sample, x0

@@ -1,0 +1,182 @@
+"""Diffusion wrapper: turns any repro backbone into a DiT denoiser.
+
+Adds patchify/unpatchify, sinusoidal timestep embedding → MLP, optional
+class-label embedding (with a CFG null class), and adaLN-zero conditioning
+(the backbone's blocks carry ``adaln=True``).  Works for image latents
+(H, W, C), video latents (T, H, W, C — spatial patchify, factorized
+attention) and audio latents (L, C).
+
+Prediction types: "eps" (DDPM/DDIM/DPM++) and "v_rf" (rectified flow).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L, transformer as T
+
+TIME_EMB_DIM = 256
+
+
+# ---------------------------------------------------------------------------
+# Patchify
+# ---------------------------------------------------------------------------
+
+def token_shape(cfg: ModelConfig):
+    """Returns (num_tokens, token_dim, video_shape or None)."""
+    ls = cfg.latent_shape
+    p = cfg.patch
+    if len(ls) == 3:    # (H, W, C) image
+        h, w, c = ls
+        return (h // p) * (w // p), p * p * c, None
+    if len(ls) == 4:    # (T, H, W, C) video — spatial patchify only
+        t, h, w, c = ls
+        s = (h // p) * (w // p)
+        return t * s, p * p * c, (t, s)
+    ll, c = ls          # (L, C) audio
+    assert p == 1
+    return ll, c, None
+
+
+def patchify(cfg: ModelConfig, x):
+    """x: (B, *latent_shape) → (B, N, token_dim)."""
+    p = cfg.patch
+    ls = cfg.latent_shape
+    b = x.shape[0]
+    if len(ls) == 3:
+        h, w, c = ls
+        x = x.reshape(b, h // p, p, w // p, p, c)
+        return x.transpose(0, 1, 3, 2, 4, 5).reshape(b, (h // p) * (w // p), p * p * c)
+    if len(ls) == 4:
+        t, h, w, c = ls
+        x = x.reshape(b, t, h // p, p, w // p, p, c)
+        return x.transpose(0, 1, 2, 4, 3, 5, 6).reshape(
+            b, t * (h // p) * (w // p), p * p * c)
+    return x
+
+
+def unpatchify(cfg: ModelConfig, tok):
+    p = cfg.patch
+    ls = cfg.latent_shape
+    b = tok.shape[0]
+    if len(ls) == 3:
+        h, w, c = ls
+        x = tok.reshape(b, h // p, w // p, p, p, c)
+        return x.transpose(0, 1, 3, 2, 4, 5).reshape(b, h, w, c)
+    if len(ls) == 4:
+        t, h, w, c = ls
+        x = tok.reshape(b, t, h // p, w // p, p, p, c)
+        return x.transpose(0, 1, 2, 4, 3, 5, 6).reshape(b, t, h, w, c)
+    return tok
+
+
+# ---------------------------------------------------------------------------
+# Wrapper params
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    assert cfg.task == "diffusion"
+    n_tok, tok_dim, _ = token_shape(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    p = {
+        "backbone": T.init_params(ks[0], cfg, dtype, adaln_dim=d),
+        "patch_in": {"w": L.dense_init(ks[1], tok_dim, d, dtype),
+                     "b": L.zeros((d,), dtype)},
+        "t_mlp": {"w1": L.dense_init(ks[2], TIME_EMB_DIM, d, dtype),
+                  "b1": L.zeros((d,), dtype),
+                  "w2": L.dense_init(ks[3], d, d, dtype),
+                  "b2": L.zeros((d,), dtype)},
+        # adaLN-zero final layer: cond → (shift, scale); zero-init out proj
+        "final_mod": {"w": L.zeros((d, 2 * d), dtype),
+                      "b": L.zeros((2 * d,), dtype)},
+        "out": {"w": L.zeros((d, tok_dim), dtype),
+                "b": L.zeros((tok_dim,), dtype)},
+    }
+    if cfg.num_classes:
+        # +1 slot = CFG null label
+        p["label_embed"] = L.embed_init(ks[4], cfg.num_classes + 1, d, dtype)
+    return p
+
+
+def _cond_vector(cfg: ModelConfig, params, t, label=None):
+    """t: (B,) diffusion time in [0, 1000) or [0,1]; label: (B,) int."""
+    te = L.sinusoidal_embedding(t.astype(jnp.float32), TIME_EMB_DIM)
+    te = jax.nn.silu(te @ params["t_mlp"]["w1"] + params["t_mlp"]["b1"])
+    te = te @ params["t_mlp"]["w2"] + params["t_mlp"]["b2"]
+    if label is not None and "label_embed" in params:
+        te = te + jnp.take(params["label_embed"], label, axis=0)
+    return te
+
+
+def apply(cfg: ModelConfig, params, x, t, *, label=None, memory=None,
+          skip=None, branch_caches=None, collect_branches=False,
+          use_flash=False):
+    """Denoiser: x (B, *latent_shape), t (B,) → prediction (B, *latent_shape).
+
+    Returns (pred, aux) with aux["branch"] holding per-layer pre-residual
+    branch outputs (the SmoothCache payload) when requested/needed."""
+    _, _, video_shape = token_shape(cfg)
+    tok = patchify(cfg, x)
+    h = tok @ params["patch_in"]["w"] + params["patch_in"]["b"]
+    # fixed sin-cos positional embedding over flattened tokens (DiT-style)
+    pos = jnp.arange(h.shape[1])
+    h = h + L.sinusoidal_embedding(pos, cfg.d_model)[None].astype(h.dtype)
+    cond = _cond_vector(cfg, params, t, label)
+    out, aux = T.forward(
+        cfg, params["backbone"], embeds=h, memory=memory, cond=cond,
+        skip=skip, branch_caches=branch_caches,
+        collect_branches=collect_branches or (skip is not None),
+        use_flash=use_flash, video_shape=video_shape)
+    mod = jax.nn.silu(cond) @ params["final_mod"]["w"] + params["final_mod"]["b"]
+    shift, scale = jnp.split(mod[:, None, :], 2, axis=-1)
+    out = out * (1.0 + scale) + shift
+    out = out @ params["out"]["w"] + params["out"]["b"]
+    return unpatchify(cfg, out), aux
+
+
+# ---------------------------------------------------------------------------
+# VP forward process + training losses
+# ---------------------------------------------------------------------------
+
+def vp_schedule(num_train_steps: int = 1000, beta_start: float = 1e-4,
+                beta_end: float = 2e-2):
+    betas = jnp.linspace(beta_start, beta_end, num_train_steps, dtype=jnp.float32)
+    alphas = 1.0 - betas
+    alpha_bar = jnp.cumprod(alphas)
+    return {"betas": betas, "alphas": alphas, "alpha_bar": alpha_bar}
+
+
+def q_sample(sched, x0, t, noise):
+    """VP forward: x_t = sqrt(ᾱ_t) x₀ + sqrt(1-ᾱ_t) ε.  t: (B,) int."""
+    ab = sched["alpha_bar"][t]
+    shape = (-1,) + (1,) * (x0.ndim - 1)
+    return (jnp.sqrt(ab).reshape(shape) * x0
+            + jnp.sqrt(1.0 - ab).reshape(shape) * noise)
+
+
+def eps_loss(cfg, params, key, x0, *, sched, label=None, memory=None):
+    """DDPM ε-prediction loss."""
+    kt, kn = jax.random.split(key)
+    b = x0.shape[0]
+    t = jax.random.randint(kt, (b,), 0, sched["betas"].shape[0])
+    noise = jax.random.normal(kn, x0.shape, x0.dtype)
+    xt = q_sample(sched, x0, t, noise)
+    pred, _ = apply(cfg, params, xt, t, label=label, memory=memory)
+    return jnp.mean(jnp.square(pred - noise))
+
+
+def rf_loss(cfg, params, key, x0, *, label=None, memory=None):
+    """Rectified-flow velocity loss: x_t = (1-t)x₀ + t·ε, v* = ε − x₀."""
+    kt, kn = jax.random.split(key)
+    b = x0.shape[0]
+    t = jax.random.uniform(kt, (b,))
+    noise = jax.random.normal(kn, x0.shape, x0.dtype)
+    shape = (-1,) + (1,) * (x0.ndim - 1)
+    xt = (1.0 - t).reshape(shape) * x0 + t.reshape(shape) * noise
+    pred, _ = apply(cfg, params, xt, t * 1000.0, label=label, memory=memory)
+    return jnp.mean(jnp.square(pred - (noise - x0)))

@@ -1,0 +1,219 @@
+"""SmoothCache execution engine.
+
+Runs a diffusion sampler where each step's per-type skip mask comes from a
+static `Schedule`.  Because masks are static, each distinct mask compiles to
+its own XLA program in which skipped layers are *absent* — the FLOP savings
+show up directly in ``compiled.cost_analysis()`` — and the branch cache is
+an explicit pytree threaded between steps (so under pjit it inherits the
+activation sharding: a cache hit also skips the layer's collectives).
+
+Classifier-free guidance doubles the batch ([cond; uncond]) exactly as in
+the paper's DiT-XL protocol; the cache covers both halves.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core import diffusion, schedule as schedule_lib
+from repro.core.solvers import Solver
+
+
+def merge_branch_caches(cfg: ModelConfig, computed, old):
+    """Fill skipped branches from the previous cache → full-structure cache."""
+    out = []
+    for si, st in enumerate(cfg.stages):
+        stage = []
+        comp_stage = computed[si] if computed is not None else None
+        for bi, b in enumerate(st.unit):
+            comp = comp_stage[bi] if comp_stage is not None else {}
+            comp = comp or {}
+            d = {}
+            for name in b.branch_names():
+                if name in comp and comp[name] is not None:
+                    d[name] = comp[name]
+                else:
+                    d[name] = old[si][bi][name]
+            stage.append(d)
+        out.append(tuple(stage))
+    return out
+
+
+class SmoothCacheExecutor:
+    """Owns the per-step jitted model variants (one per distinct skip mask)
+    and the sampling loop."""
+
+    def __init__(self, cfg: ModelConfig, solver: Solver, *,
+                 cfg_scale: Optional[float] = None, use_flash: bool = False,
+                 jit: bool = True):
+        assert cfg.task == "diffusion"
+        self.cfg = cfg
+        self.solver = solver
+        self.cfg_scale = cfg_scale
+        self.use_flash = use_flash
+        self._jit = jit
+        self._fns: Dict = {}
+
+    # -- model step ---------------------------------------------------------
+
+    def _model_call(self, params, x, t, label, memory, branch_caches, *,
+                    skip, collect):
+        """One denoiser evaluation (CFG-doubled when configured)."""
+        cfgm = self.cfg
+        if self.cfg_scale is not None:
+            x2 = jnp.concatenate([x, x], axis=0)
+            t2 = jnp.concatenate([t, t], axis=0)
+            lab2 = mem2 = None
+            if label is not None:
+                null = jnp.full_like(label, cfgm.num_classes)
+                lab2 = jnp.concatenate([label, null], axis=0)
+            if memory is not None:
+                mem2 = jnp.concatenate([memory, jnp.zeros_like(memory)], axis=0)
+            pred, aux = diffusion.apply(
+                cfgm, params, x2, t2, label=lab2, memory=mem2, skip=skip,
+                branch_caches=branch_caches, collect_branches=collect,
+                use_flash=self.use_flash)
+            c, u = jnp.split(pred, 2, axis=0)
+            out = u + self.cfg_scale * (c - u)
+        else:
+            pred, aux = diffusion.apply(
+                cfgm, params, x, t, label=label, memory=memory, skip=skip,
+                branch_caches=branch_caches, collect_branches=collect,
+                use_flash=self.use_flash)
+            out = pred
+        return out, aux["branch"]
+
+    def _get_fn(self, mask_key, has_cache: bool, collect: bool):
+        key = (mask_key, has_cache, collect)
+        if key in self._fns:
+            return self._fns[key]
+        skip = dict(mask_key)
+
+        def fn(params, x, t, label, memory, branch_caches):
+            # branch outputs are always collected while caching is active:
+            # any computed step may become the cache source for a later one
+            pred, computed = self._model_call(
+                params, x, t, label, memory,
+                branch_caches if has_cache else None,
+                skip=skip, collect=True)
+            if has_cache:
+                cache = merge_branch_caches(self.cfg, computed, branch_caches)
+            else:
+                cache = computed
+            return pred, cache
+
+        if self._jit:
+            fn = jax.jit(fn)
+        self._fns[key] = fn
+        return fn
+
+    def _get_plain_fn(self):
+        if "plain" in self._fns:
+            return self._fns["plain"]
+
+        def fn(params, x, t, label, memory):
+            pred, _ = self._model_call(params, x, t, label, memory, None,
+                                       skip=None, collect=False)
+            return pred
+
+        if self._jit:
+            fn = jax.jit(fn)
+        self._fns["plain"] = fn
+        return fn
+
+    # -- sampling loop ------------------------------------------------------
+
+    def latent_batch_shape(self, batch):
+        return (batch,) + tuple(self.cfg.latent_shape)
+
+    def sample(self, params, key, batch: int, *, schedule=None, label=None,
+               memory=None, collect_hook: Optional[Callable] = None,
+               return_trajectory: bool = False):
+        """Run the full sampler.  ``schedule=None`` → no caching."""
+        cfgm = self.cfg
+        s_total = self.solver.num_steps
+        if schedule is None:
+            types = cfgm.layer_types()
+            schedule = schedule_lib.no_cache(types, s_total)
+        assert schedule.num_steps == s_total
+        knoise, kloop = jax.random.split(key)
+        x = jax.random.normal(knoise, self.latent_batch_shape(batch))
+        state = self.solver.init_state()
+        cache = None
+        traj = []
+        caching_active = (collect_hook is not None or
+                          any(v.any() for v in schedule.skip.values()))
+        if not caching_active:
+            # fast path: plain sampling, no branch collection
+            fn = self._get_plain_fn()
+            for s in range(s_total):
+                t = jnp.full((batch,), self.solver.model_times[s])
+                pred = fn(params, x, t, label, memory)
+                x, state = self.solver.step(x, pred, s, state,
+                                            jax.random.fold_in(kloop, s))
+                if return_trajectory:
+                    traj.append(x)
+            return (x, traj) if return_trajectory else x
+        for s in range(s_total):
+            mask = schedule.mask_at(s)
+            mask_key = tuple(sorted(mask.items()))
+            t = jnp.full((batch,), self.solver.model_times[s])
+            fn = self._get_fn(mask_key, has_cache=cache is not None,
+                              collect=collect_hook is not None)
+            pred, cache = fn(params, x, t, label, memory, cache)
+            if collect_hook is not None:
+                collect_hook(s, cache)
+            kstep = jax.random.fold_in(kloop, s)
+            x, state = self.solver.step(x, pred, s, state, kstep)
+            if return_trajectory:
+                traj.append(x)
+        return (x, traj) if return_trajectory else x
+
+    def sample_compiled(self, params, key, batch: int, *, schedule=None,
+                        label=None, memory=None):
+        """Whole-sampler single-jit path: no per-step Python dispatch.
+        Compiles once per (schedule identity, batch); use for timing and
+        FLOP accounting.  Stochastic solvers get the key threaded in."""
+        s_total = self.solver.num_steps
+        if schedule is None:
+            schedule = schedule_lib.no_cache(self.cfg.layer_types(), s_total)
+        ck = (hash(schedule.to_json()), batch,
+              label is not None, memory is not None)
+        if ck not in self._fns:
+            fn = self.build_sampler_fn(schedule, batch=batch)
+            self._fns[ck] = jax.jit(fn)
+        knoise, kloop = jax.random.split(key)
+        x = jax.random.normal(knoise, self.latent_batch_shape(batch))
+        return self._fns[ck](params, x, label, memory,
+                             kloop if self.solver.stochastic else None)
+
+    # -- whole-sampler lowering (for FLOP / roofline accounting) ------------
+
+    def build_sampler_fn(self, schedule, *, batch: int, with_label: bool = False,
+                         with_memory: bool = False, mem_len: int = 8):
+        """A single jit-able function running all steps with the static
+        schedule — ``jax.jit(fn).lower(...)`` exposes total FLOPs/bytes."""
+        cfgm = self.cfg
+        s_total = self.solver.num_steps
+
+        def fn(params, x, label=None, memory=None, key=None):
+            state = self.solver.init_state()
+            cache = None
+            for s in range(s_total):
+                mask = schedule.mask_at(s)
+                t = jnp.full((x.shape[0],), self.solver.model_times[s])
+                pred, computed = self._model_call(
+                    params, x, t, label, memory, cache, skip=mask,
+                    collect=True)
+                cache = (merge_branch_caches(cfgm, computed, cache)
+                         if cache is not None else computed)
+                kstep = (jax.random.fold_in(key, s)
+                         if key is not None else None)
+                x, state = self.solver.step(x, pred, s, state, kstep)
+            return x
+
+        return fn

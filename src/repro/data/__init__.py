@@ -1,0 +1,2 @@
+from repro.data.synthetic import (BlobLatents, CondLatents, TokenStream,  # noqa: F401
+                                  text_memory, vit_patch_embeds)

@@ -1,0 +1,117 @@
+"""Synthetic data pipelines (no external datasets are available offline).
+
+* token streams for the AR language backbones (zipf-ish unigram mix with
+  planted n-gram structure so training loss actually decreases),
+* structured image latents for diffusion training (Gaussian-blob scenes
+  with class-dependent layout — class-conditional like DiT/ImageNet),
+* text-conditioning memory stubs (the T5/CLAP/ViT carve-out of DESIGN.md §6),
+* EnCodec-style codebook token grids for musicgen,
+* ViT patch embeddings for the VLM prefix.
+
+Deterministic per (seed, step): the pipeline is a pure function, so the
+input pipeline is reproducible and shardable across data-parallel hosts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Token streams
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TokenStream:
+    vocab_size: int
+    seq_len: int
+    batch: int
+    num_codebooks: int = 1
+    seed: int = 0
+
+    def batch_at(self, step: int):
+        """(tokens, targets) for LM training; planted bigram structure."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        k1, k2 = jax.random.split(key)
+        shape = (self.batch, self.seq_len + 1)
+        if self.num_codebooks > 1:
+            shape = shape + (self.num_codebooks,)
+        v = self.vocab_size
+        base = jax.random.randint(k1, shape, 0, v)
+        # plant structure: with p=0.5 the next token is (prev * 31 + 7) % v
+        copy = (jnp.roll(base, 1, axis=1) * 31 + 7) % v
+        mask = jax.random.bernoulli(k2, 0.5, shape)
+        toks = jnp.where(mask, copy, base)
+        return toks[:, :-1], toks[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Diffusion latents: class-conditional Gaussian-blob scenes
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlobLatents:
+    """Class c places a blob at a class-dependent position with a
+    class-dependent channel signature — learnable by a small DiT."""
+    latent_shape: Tuple[int, ...]        # (H, W, C)
+    num_classes: int
+    batch: int
+    seed: int = 0
+
+    def batch_at(self, step: int):
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        kl, kx, kn = jax.random.split(key, 3)
+        h, w, c = self.latent_shape
+        label = jax.random.randint(kl, (self.batch,), 0, self.num_classes)
+        yy, xx = jnp.mgrid[0:h, 0:w]
+        ang = 2 * jnp.pi * label.astype(jnp.float32) / max(self.num_classes, 1)
+        cy = h / 2 + (h / 4) * jnp.sin(ang)
+        cx = w / 2 + (w / 4) * jnp.cos(ang)
+        d2 = ((yy[None] - cy[:, None, None]) ** 2
+              + (xx[None] - cx[:, None, None]) ** 2)
+        blob = jnp.exp(-d2 / (2.0 * (h / 8) ** 2))          # (B, H, W)
+        sig = jnp.stack([jnp.cos(ang * (i + 1)) for i in range(c)], -1)
+        x0 = blob[..., None] * sig[:, None, None, :]
+        x0 = x0 + 0.05 * jax.random.normal(kx, x0.shape)
+        return x0.astype(jnp.float32), label
+
+
+@dataclasses.dataclass(frozen=True)
+class CondLatents:
+    """Text/audio/video-conditioned latents: memory stub + latent whose
+    low-frequency content is a linear readout of the memory."""
+    latent_shape: Tuple[int, ...]
+    cond_dim: int
+    cond_len: int
+    batch: int
+    seed: int = 0
+
+    def batch_at(self, step: int):
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        km, kp, kn = jax.random.split(key, 3)
+        memory = jax.random.normal(km, (self.batch, self.cond_len, self.cond_dim))
+        pooled = jnp.mean(memory, axis=1)                   # (B, D)
+        n = int(np.prod(self.latent_shape))
+        wkey = jax.random.PRNGKey(self.seed + 1)            # fixed readout
+        w = jax.random.normal(wkey, (self.cond_dim, n)) / np.sqrt(self.cond_dim)
+        x0 = (pooled @ w).reshape((self.batch,) + tuple(self.latent_shape))
+        x0 = jnp.tanh(x0) + 0.05 * jax.random.normal(kn, x0.shape)
+        return x0.astype(jnp.float32), memory
+
+
+# ---------------------------------------------------------------------------
+# Modality frontend stubs (DESIGN.md §6 carve-out)
+# ---------------------------------------------------------------------------
+
+def vit_patch_embeds(key, batch: int, num_patches: int, dim: int):
+    """Precomputed ViT patch embeddings (InternViT / Llama-4 early fusion)."""
+    return jax.random.normal(key, (batch, num_patches, dim)) * 0.02
+
+
+def text_memory(key, batch: int, length: int, dim: int):
+    """Precomputed T5-style text-encoder memory."""
+    return jax.random.normal(key, (batch, length, dim)) * 0.02

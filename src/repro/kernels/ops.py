@@ -1,0 +1,48 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On TPU the kernels lower natively through ``pl.pallas_call``; everywhere
+else (this CPU container, unit tests) they execute in interpret mode, which
+runs the kernel body in Python per grid cell — bit-accurate to the TPU
+blocking, just slow.  ``REPRO_KERNEL_INTERPRET=0/1`` overrides detection.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd as _ssd
+
+
+def _interpret_default() -> bool:
+    env = os.environ.get("REPRO_KERNEL_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, scale=scale, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, a, b, c, *, chunk: int = 128,
+        interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _ssd.ssd(x, dt, a, b, c, chunk=chunk, interpret=interpret)

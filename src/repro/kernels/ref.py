@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        scale: Optional[float] = None):
+    """q: (B, Lq, H, D); k, v: (B, Lk, KV, D) with H % KV == 0.
+    Full-precision softmax attention — the oracle for the Pallas kernel."""
+    b, lq, h, d = q.shape
+    lk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qr = q.reshape(b, lq, kv, g, d)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qr, k).astype(jnp.float32) * scale
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    qpos = jnp.arange(lq)[:, None]
+    kpos = jnp.arange(lk)[None, :]
+    ok = jnp.ones((lq, lk), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    scores = jnp.where(ok[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+    return out.reshape(b, lq, h, d)
+
+
+def ssd_ref(x, dt, a, b, c, chunk: int = 64, h0=None):
+    """Mamba-2 SSD oracle — see repro.models.ssm.ssd_chunked."""
+    from repro.models.ssm import ssd_chunked
+    return ssd_chunked(x, dt, a, b, c, chunk, h0)
+
+
+def ssd_sequential_ref(x, dt, a, b, c):
+    """O(L) sequential recurrence — independent second oracle for SSD."""
+    bs, l, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    bh = jnp.repeat(b, rep, axis=2).astype(jnp.float32)
+    ch = jnp.repeat(c, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(-dtf * a[None, None, :])                   # (B,L,H)
+
+    def step(state, inp):
+        xt, dtt, dect, bt, ct = inp
+        state = state * dect[..., None, None] + jnp.einsum(
+            "bh,bhp,bhn->bhpn", dtt, xt, bt)
+        yt = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, yt
+
+    init = jnp.zeros((bs, h, p, n), jnp.float32)
+    xs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+          decay.transpose(1, 0, 2), bh.transpose(1, 0, 2, 3),
+          ch.transpose(1, 0, 2, 3))
+    hT, ys = jax.lax.scan(step, init, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), hT

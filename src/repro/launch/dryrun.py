@@ -1,0 +1,248 @@
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input shape) and both production meshes
+(16×16 single pod, 2×16×16 two pods), lower + compile the corresponding
+program with ShapeDtypeStruct inputs (no allocation), then record
+``memory_analysis()`` / ``cost_analysis()`` / parsed collective bytes into
+a JSON result the roofline tables read.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+import argparse     # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+import jax          # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro import configs                    # noqa: E402
+from repro.config import SHAPES              # noqa: E402
+from repro.launch import programs, sharding  # noqa: E402
+from repro.launch.mesh import make_production_mesh, num_chips  # noqa: E402
+from repro.launch.roofline import Roofline, collective_bytes, fmt_seconds  # noqa: E402
+
+
+def meta_params_bytes(shape_tree) -> float:
+    import numpy as np
+    return float(sum(np.prod(a.shape) * 2 for a in jax.tree.leaves(shape_tree)))
+
+
+def count_params(cfg, shape_tree) -> float:
+    import numpy as np
+    return float(sum(np.prod(a.shape) for a in jax.tree.leaves(shape_tree)))
+
+
+def active_params(cfg) -> float:
+    """Parameters touched per token (MoE: top-k + shared experts only)."""
+    import numpy as np
+    full = count_params(cfg, programs.params_struct(cfg))
+    inactive = 0.0
+    for st in cfg.stages:
+        for b in st.unit:
+            f = b.ffn
+            if f is not None and hasattr(f, "num_experts"):
+                per_e = cfg.d_model * f.d_ff * (3 if f.gated else 2)
+                inactive += st.repeat * per_e * (f.num_experts - f.top_k)
+    return full - inactive
+
+
+def build(arch: str, shape_name: str, multi_pod: bool,
+          moe_group_size: int = 2048):
+    """Returns (jitted_fn, args_structs, meta)."""
+    shape = SHAPES[shape_name]
+    cfg = configs.get(arch).replace(dtype="bfloat16")
+    cfg = programs.adapt_for_shape(cfg, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    p_struct = programs.params_struct(cfg)
+    # decode serving: TP-only weights (no per-step FSDP gathers) unless the
+    # model cannot fit HBM without sharding over the batch axes (giant MoEs)
+    serve_fsdp = meta_params_bytes(p_struct) / (mesh.devices.size / (
+        mesh.shape["model"] if "model" in mesh.axis_names else 1)) > 12e9
+    use_fsdp = not (shape.program == "decode" and not serve_fsdp)
+    p_specs = sharding.param_specs(mesh, p_struct, cfg, fsdp=use_fsdp)
+    p_shard = sharding.to_named(mesh, p_specs)
+    ins = programs.input_specs(cfg, shape, moe_group_size)
+    b = shape.global_batch
+
+    def bshard(extra):
+        return sharding.to_named(mesh, sharding.batch_spec(mesh, b, extra))
+
+    have_prefix = "prefix_embeds" in ins
+    have_mem = "memory" in ins
+
+    def with_optionals(base, n_lead):
+        """Map trailing positional args onto the present optional kwargs
+        (prefix_embeds before memory) — archs differ in which they take."""
+        def fn(*a):
+            lead, rest = a[:n_lead], list(a[n_lead:])
+            kw = {}
+            if have_prefix:
+                kw["prefix_embeds"] = rest.pop(0)
+            if have_mem:
+                kw["memory"] = rest.pop(0)
+            return base(*lead, **kw)
+        return fn
+
+    if shape.program == "train":
+        o_struct = programs.opt_struct(p_struct)
+        o_specs = {
+            "step": sharding.to_named(mesh, jax.sharding.PartitionSpec()),
+            "mu": sharding.to_named(mesh, sharding.param_specs(mesh, o_struct["mu"], cfg)),
+            "nu": sharding.to_named(mesh, sharding.param_specs(mesh, o_struct["nu"], cfg)),
+        }
+        fn = with_optionals(
+            programs.make_train_step(cfg, moe_group_size=moe_group_size,
+                                     grad_shardings=p_shard), 4)
+        args = [p_struct, o_struct, ins["tokens"], ins["targets"]]
+        in_sh = [p_shard, o_specs, bshard(ins["tokens"].ndim - 1),
+                 bshard(ins["targets"].ndim - 1)]
+        if "prefix_embeds" in ins:
+            args.append(ins["prefix_embeds"]); in_sh.append(bshard(2))
+        if "memory" in ins:
+            args.append(ins["memory"]); in_sh.append(bshard(2))
+        out_sh = (p_shard, o_specs, None, None)
+        jfn = jax.jit(fn, in_shardings=tuple(in_sh), out_shardings=out_sh,
+                      donate_argnums=(0, 1))
+    elif shape.program == "prefill":
+        fn = with_optionals(programs.make_prefill_step(cfg), 2)
+        args = [p_struct, ins["tokens"]]
+        in_sh = [p_shard, bshard(ins["tokens"].ndim - 1)]
+        if "prefix_embeds" in ins:
+            args.append(ins["prefix_embeds"]); in_sh.append(bshard(2))
+        if "memory" in ins:
+            args.append(ins["memory"]); in_sh.append(bshard(2))
+        jfn = jax.jit(fn, in_shardings=tuple(in_sh))
+    else:  # decode
+        cache_struct = ins["caches"]
+        c_specs = sharding.cache_specs(mesh, cfg, cache_struct, b)
+        c_shard = sharding.to_named(mesh, c_specs)
+        base_serve = programs.make_serve_step(cfg, pos=shape.seq_len - 1)
+
+        def fn(params, token, caches, *rest):
+            return base_serve(params, token, caches,
+                              memory=(rest[0] if rest else None))
+        args = [p_struct, ins["token"], cache_struct]
+        in_sh = [p_shard, bshard(ins["token"].ndim - 1), c_shard]
+        if "memory" in ins:
+            args.append(ins["memory"]); in_sh.append(bshard(2))
+        jfn = jax.jit(fn, in_shardings=tuple(in_sh),
+                      out_shardings=(None, c_shard), donate_argnums=(2,))
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "chips": num_chips(mesh), "program": shape.program,
+            "params": count_params(cfg, p_struct),
+            "active_params": active_params(cfg)}
+    return jfn, args, meta, cfg, mesh
+
+
+def run_combo(arch: str, shape_name: str, multi_pod: bool,
+              moe_group_size: int = 2048, want_text: bool = False) -> dict:
+    t0 = time.time()
+    jfn, args, meta, cfg, mesh = build(arch, shape_name, multi_pod,
+                                       moe_group_size)
+    from repro import shardctx
+    with shardctx.use(mesh):
+        lowered = jfn.lower(*args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # trip-count-aware accounting: cost_analysis counts while-loop bodies
+    # ONCE (verified on a scanned matmul), so scanned layer stacks would be
+    # undercounted ~num_layers x.  hlo_analysis walks the call graph and
+    # multiplies loop bodies by their trip counts.
+    from repro.launch import hlo_analysis
+    totals = hlo_analysis.analyze(hlo)
+    coll = dict(totals.coll)
+    chips = meta["chips"]
+    shape = SHAPES[shape_name]
+    tokens = (shape.global_batch * shape.seq_len
+              if shape.program in ("train", "prefill")
+              else shape.global_batch * 1)
+    from repro.launch.roofline import model_flops_estimate
+    mf = model_flops_estimate(meta["active_params"], tokens,
+                              train=(shape.program == "train"))
+    rec = dict(meta)
+    rec.update({
+        "ok": True,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops_per_chip": totals.flops,
+        "bytes_per_chip": totals.bytes,
+        "xla_cost_flops_loop_uncounted": float(cost.get("flops", -1.0)),
+        "collectives": coll,
+        "coll_bytes_per_chip": coll.get("total", 0.0),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "model_flops": mf,
+        "tokens": tokens,
+    })
+    r = Roofline(arch, shape_name, rec["mesh"], chips,
+                 rec["flops_per_chip"], rec["bytes_per_chip"],
+                 rec["coll_bytes_per_chip"], coll, rec["memory"], mf)
+    rec["roofline"] = r.to_dict()
+    if want_text:
+        rec["hlo"] = hlo
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--moe-group-size", type=int, default=2048)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    combos = []
+    archs = configs.ASSIGNED if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    for a in archs:
+        for s in shapes:
+            combos.append((a, s))
+
+    for a, s in combos:
+        tag = f"{a}__{s}__{'2x16x16' if args.multi_pod else '16x16'}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"[skip] {tag} (cached)")
+            continue
+        print(f"[run ] {tag}", flush=True)
+        try:
+            rec = run_combo(a, s, args.multi_pod, args.moe_group_size)
+        except Exception as e:
+            rec = {"arch": a, "shape": s, "ok": False,
+                   "mesh": "2x16x16" if args.multi_pod else "16x16",
+                   "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        if rec.get("ok"):
+            rf = rec["roofline"]
+            print(f"  ok  lower={rec['lower_s']}s compile={rec['compile_s']}s "
+                  f"flops/chip={rec['flops_per_chip']:.3g} "
+                  f"coll/chip={rec['coll_bytes_per_chip']:.3g}B "
+                  f"bottleneck={rf['bottleneck']}", flush=True)
+        else:
+            print(f"  FAIL {rec['error']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,302 @@
+"""Trip-count-aware analysis of compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE — a 58-layer
+``lax.scan`` is undercounted 58× (verified in EXPERIMENTS.md §Dry-run
+methodology).  This module parses the optimized HLO and walks the call
+graph, multiplying loop bodies by their trip count:
+
+  * FLOPs: every ``dot`` op contributes 2 × |result| × |contraction dims|
+    (XLA's own convention, validated against a plain matmul);
+  * bytes: every top-level op (fusion boundaries) contributes its RESULT
+    bytes, plus entry parameters once — a post-fusion HBM-traffic model
+    (each intermediate is written once and read by consumers; counting
+    results + args avoids double-counting producer/consumer pairs);
+  * collective bytes: ring-model ICI traffic per op kind (see
+    launch/roofline.py), now multiplied through loops.
+
+Trip counts come from the largest integer constant in the while condition
+computation — exact for ``lax.scan``-generated loops.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[^\s]+))\s+"
+    r"([\w\-]+)\(")
+_CALLED_RE = re.compile(
+    r"(?:to_apply|condition|body|calls)=%?([\w.\-]+)")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
+    elems = bytes_ = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        bytes_ += n * _DTYPE_BYTES[dt]
+    return elems, bytes_
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+    called: List[str]
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Totals", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * mult
+
+
+class HloAnalysis:
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, List[Op]] = {}
+        self.types: Dict[str, str] = {}
+        self._entry: Optional[str] = None
+        self._memo: Dict = {}
+        self._parse(hlo_text)
+
+    def _parse(self, text: str):
+        cur = None
+        for raw in text.splitlines():
+            stripped = raw.strip()
+            is_hdr = (not raw.startswith(" ") and stripped.endswith("{")
+                      and "->" in stripped and "=" not in stripped.split("(")[0])
+            if is_hdr:
+                hdr = _COMP_HDR_RE.match(stripped)
+                if hdr:
+                    cur = hdr.group(1)
+                    self.comps[cur] = []
+                    if stripped.startswith("ENTRY"):
+                        self._entry = cur
+                    continue
+            if cur is None:
+                continue
+            m = _OP_RE.match(raw)
+            if not m:
+                continue
+            name, type_str, opcode = m.group(1), m.group(2), m.group(3)
+            called = _CALLED_RE.findall(raw)
+            self.comps[cur].append(Op(name, type_str, opcode, raw, called))
+            self.types[name] = type_str
+
+    # -- per-op costs -------------------------------------------------------
+
+    def _dot_flops(self, op: Op) -> float:
+        _, line = op.type_str, op.line
+        out_elems, _ = _shape_elems_bytes(op.type_str)
+        mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+        ops_m = _OPERAND_RE.findall(line.split("(", 1)[1])
+        if not ops_m:
+            return 0.0
+        lhs_type = self.types.get(ops_m[0], "")
+        sm = _SHAPE_RE.search(lhs_type)
+        if sm is None:
+            return 0.0
+        dims = [int(d) for d in sm.group(2).split(",") if d]
+        contract = 1
+        if mc and mc.group(1):
+            for i in mc.group(1).split(","):
+                idx = int(i)
+                if idx < len(dims):
+                    contract *= dims[idx]
+        return 2.0 * out_elems * contract
+
+    _PURE_CONVERT_OPS = {"convert", "bitcast", "copy", "reshape",
+                         "parameter", "broadcast", "constant"}
+
+    def _op_bytes(self, op: Op) -> float:
+        if op.opcode == "fusion":
+            for c in op.called:
+                comp_ops = self.comps.get(c, [])
+                local = {o.name: o.type_str for o in comp_ops}
+                # in-place dynamic-update-slice: traffic = the update slice,
+                # not the whole aliased buffer
+                for inner in comp_ops:
+                    if inner.opcode == "dynamic-update-slice":
+                        args = _OPERAND_RE.findall(
+                            inner.line.split("(", 1)[1])
+                        if len(args) >= 2:
+                            ts = local.get(args[1]) or self.types.get(args[1])
+                            if ts:
+                                _, b = _shape_elems_bytes(ts)
+                                return float(b)
+                # pure dtype-conversion fusions exist because XLA:CPU has no
+                # native bf16 GEMM and legalizes to f32 with materialized
+                # converts; a bf16-native backend (TPU MXU) reads the source
+                # directly — count at the NARROWER width (≈ the real read)
+                if comp_ops and all(o.opcode in self._PURE_CONVERT_OPS
+                                    for o in comp_ops):
+                    in_b = [
+                        _shape_elems_bytes(o.type_str)[1]
+                        for o in comp_ops if o.opcode == "parameter"]
+                    _, out_b = _shape_elems_bytes(op.type_str)
+                    if in_b:
+                        return float(min(max(in_b), out_b))
+        _, out_b = _shape_elems_bytes(op.type_str)
+        return float(out_b)
+
+    def _coll_bytes(self, op: Op) -> Tuple[str, float]:
+        kind = next(k for k in COLLECTIVES if op.opcode.startswith(k))
+        _, nbytes = _shape_elems_bytes(op.type_str)
+        rg = re.search(r"replica_groups=\{([^}]*)\}", op.line)
+        n = 2
+        if rg:
+            first = rg.group(1).split("}")[0].lstrip("{")
+            n = max(2, len([x for x in first.split(",") if x.strip()]))
+        else:
+            rg2 = re.search(r"replica_groups=\[(\d+),(\d+)\]", op.line)
+            if rg2:
+                n = max(2, int(rg2.group(2)))
+        frac = (n - 1) / n
+        if kind == "all-reduce":
+            traffic = 2.0 * nbytes * frac
+        elif kind == "collective-permute":
+            traffic = float(nbytes)
+        else:
+            traffic = nbytes * frac
+        return kind, traffic
+
+    def _trip_count(self, cond_comp: str) -> int:
+        consts = []
+        for op in self.comps.get(cond_comp, []):
+            consts += [int(c) for c in _CONST_RE.findall(op.line)]
+        return max(consts) if consts else 1
+
+    # -- walk ---------------------------------------------------------------
+
+    def analyze_comp(self, name: str, *, top: bool,
+                     entry: bool = False) -> Totals:
+        _memo = self._memo
+        key = (name, top, entry)
+        if key in _memo:
+            return _memo[key]
+        t = Totals()
+        for op in self.comps.get(name, []):
+            oc = op.opcode
+            if oc == "while":
+                body = cond = None
+                bm = re.search(r"body=%?([\w.\-]+)", op.line)
+                cm = re.search(r"condition=%?([\w.\-]+)", op.line)
+                if bm:
+                    body = bm.group(1)
+                if cm:
+                    cond = cm.group(1)
+                trips = self._trip_count(cond) if cond else 1
+                if body:
+                    # entry=False: a loop body's parameter is the carried
+                    # tuple (weights+caches) — counting it per trip inflated
+                    # decode bytes ~20x (§Perf-3); per-iteration reads are
+                    # captured by the slice/fusion ops inside the body
+                    t.add(self.analyze_comp(body, top=top), trips)
+            elif oc in ("fusion", "call"):
+                for c in op.called:
+                    t.add(self.analyze_comp(c, top=False))
+                if top:
+                    t.bytes += self._op_bytes(op)
+            elif oc == "dot":
+                t.flops += self._dot_flops(op)
+                if top:
+                    t.bytes += self._op_bytes(op)
+            elif any(oc.startswith(k) for k in COLLECTIVES):
+                if oc.endswith("-done"):
+                    continue
+                kind, traffic = self._coll_bytes(op)
+                t.coll[kind] = t.coll.get(kind, 0.0) + traffic
+                t.coll["total"] = t.coll.get("total", 0.0) + traffic
+            elif oc == "conditional":
+                for c in op.called:
+                    t.add(self.analyze_comp(c, top=top))
+            elif oc == "parameter":
+                if entry:                        # loop-carried tuples are
+                    t.bytes += self._op_bytes(op)  # NOT re-read per trip
+            elif top and oc not in ("constant", "tuple",
+                                    "get-tuple-element", "bitcast"):
+                t.bytes += self._op_bytes(op)
+        _memo[key] = t
+        return t
+
+    def entry_totals(self) -> Totals:
+        assert self._entry, "no ENTRY computation found"
+        return self.analyze_comp(self._entry, top=True, entry=True)
+
+
+def analyze(hlo_text: str) -> Totals:
+    return HloAnalysis(hlo_text).entry_totals()
+
+
+def top_contributors(hlo_text: str, n: int = 15, kind: str = "bytes"):
+    """Largest per-op contributions (bytes or flops), trip-multiplied —
+    the §Perf profiling view of a compiled dry-run."""
+    h = HloAnalysis(hlo_text)
+    rows = []
+
+    def walk(comp, mult, top):
+        for op in h.comps.get(comp, []):
+            oc = op.opcode
+            if oc == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", op.line)
+                cm = re.search(r"condition=%?([\w.\-]+)", op.line)
+                trips = h._trip_count(cm.group(1)) if cm else 1
+                if bm:
+                    walk(bm.group(1), mult * trips, top)
+            elif oc in ("fusion", "call"):
+                if kind == "flops":
+                    for c in op.called:
+                        walk(c, mult, False)
+                if top and kind == "bytes":
+                    rows.append((h._op_bytes(op) * mult, op.opcode, op.name,
+                                 op.type_str[:60]))
+            elif oc == "dot":
+                if kind == "flops":
+                    rows.append((h._dot_flops(op) * mult, "dot", op.name,
+                                 op.type_str[:60]))
+                elif top:
+                    rows.append((h._op_bytes(op) * mult, "dot", op.name,
+                                 op.type_str[:60]))
+            elif any(oc.startswith(k) for k in COLLECTIVES) and kind == "coll":
+                if not oc.endswith("-done"):
+                    _, traffic = h._coll_bytes(op)
+                    rows.append((traffic * mult, oc, op.name,
+                                 op.type_str[:60]))
+            elif top and kind == "bytes" and oc not in (
+                    "parameter", "constant", "tuple", "get-tuple-element",
+                    "bitcast"):
+                rows.append((h._op_bytes(op) * mult, oc, op.name,
+                             op.type_str[:60]))
+
+    walk(h._entry, 1.0, True)
+    rows.sort(reverse=True)
+    return rows[:n]

@@ -1,0 +1,210 @@
+"""The three lowered programs per (architecture × input shape):
+
+  train_step   — LM loss (+MoE aux, +MTP for deepseek) + AdamW update
+  prefill_step — full forward that builds the decode caches
+  serve_step   — ONE new token against a fixed KV/state cache
+
+plus ``input_specs``: ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, zero allocation) for every program input, and the long_500k
+sub-quadratic config adaptation (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import shardctx
+from repro.config import AttentionSpec, ModelConfig, ShapePreset, SHAPES, Stage
+from repro.models import transformer as T
+from repro.optim import adamw
+
+CACHE_DTYPE = jnp.bfloat16
+PARAM_DTYPE = jnp.bfloat16
+# optimizer moments: mu bf16 / nu fp32 (memory/stability trade recorded in
+# DESIGN.md — required to approach fitting the 671B MoE on 512 chips)
+MU_DTYPE = jnp.bfloat16
+NU_DTYPE = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# long-context adaptation
+# ---------------------------------------------------------------------------
+
+def adapt_for_shape(cfg: ModelConfig, shape: ShapePreset) -> ModelConfig:
+    """For long_500k, full-attention archs switch to the sliding-window
+    variant (window = cfg.swa_window); SSM/hybrid archs are native."""
+    if shape.name != "long_500k" or cfg.long_context != "swa":
+        return cfg
+    def swa(m):
+        if isinstance(m, AttentionSpec) and not m.cross and m.window is None:
+            return dataclasses.replace(m, window=cfg.swa_window)
+        if isinstance(m, AttentionSpec) and m.window is not None:
+            return dataclasses.replace(m, window=min(m.window, cfg.swa_window))
+        return m
+    stages = tuple(
+        Stage(unit=tuple(dataclasses.replace(b, mixer=swa(b.mixer))
+                         for b in st.unit), repeat=st.repeat)
+        for st in cfg.stages)
+    return cfg.replace(stages=stages, name=cfg.name + "+swa")
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins)
+# ---------------------------------------------------------------------------
+
+def token_struct(cfg: ModelConfig, batch: int, seq: int):
+    shape = (batch, seq, cfg.num_codebooks) if cfg.num_codebooks > 1 \
+        else (batch, seq)
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapePreset,
+                moe_group_size: int = 2048) -> Dict[str, Any]:
+    """Returns {name: ShapeDtypeStruct} for the program of this shape."""
+    b = shape.global_batch
+    out: Dict[str, Any] = {}
+    if shape.program == "train":
+        seq = shape.seq_len
+        out["tokens"] = token_struct(cfg, b, seq)
+        out["targets"] = token_struct(cfg, b, seq)
+    elif shape.program == "prefill":
+        out["tokens"] = token_struct(cfg, b, shape.seq_len)
+    else:  # decode
+        out["token"] = token_struct(cfg, b, 1)
+        caches = jax.eval_shape(
+            lambda: T.init_caches(cfg, b, shape.seq_len, CACHE_DTYPE))
+        out["caches"] = caches
+    if cfg.num_prefix_embeds and shape.program in ("train", "prefill"):
+        out["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_prefix_embeds, cfg.d_model), PARAM_DTYPE)
+    if cfg.cond_dim:
+        out["memory"] = jax.ShapeDtypeStruct((b, 64, cfg.cond_dim), PARAM_DTYPE)
+    return out
+
+
+def params_struct(cfg: ModelConfig, dtype=PARAM_DTYPE):
+    return jax.eval_shape(
+        functools.partial(T.init_params, cfg=cfg, dtype=dtype),
+        jax.random.PRNGKey(0))
+
+
+def opt_struct(params_shape):
+    return {
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "mu": jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, MU_DTYPE),
+                           params_shape),
+        "nu": jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, NU_DTYPE),
+                           params_shape),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Programs
+# ---------------------------------------------------------------------------
+
+def _xent(logits, targets):
+    """Cross entropy that stays vocab-sharded under GSPMD: the target
+    logit is picked with a fused where(iota == target) reduction instead of
+    a gather along the (model-sharded) vocab axis — a take_along_axis here
+    forced a full replicated-logits all-reduce in the baseline HLO."""
+    z = logits.astype(jnp.float32)
+    z = shardctx.constrain(z, *(["batch"] + [None] * (z.ndim - 2) + ["model"]))
+    lse = jax.nn.logsumexp(z, axis=-1)
+    v = z.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, z.shape, z.ndim - 1)
+    tgt = jnp.sum(jnp.where(iota == targets[..., None], z, 0.0), axis=-1)
+    return jnp.mean(lse - tgt)
+
+
+def lm_loss(cfg: ModelConfig, params, tokens, targets, *, prefix_embeds=None,
+            memory=None, use_flash=False, moe_group_size=2048,
+            moe_strategy="gshard", remat=True, mtp_weight: float = 0.3):
+    logits, aux = T.forward(cfg, params, tokens, prefix_embeds=prefix_embeds,
+                            memory=memory, use_flash=use_flash,
+                            moe_group_size=moe_group_size,
+                            moe_strategy=moe_strategy, remat=remat)
+    if cfg.num_prefix_embeds and prefix_embeds is not None:
+        logits = logits[:, prefix_embeds.shape[1]:]
+    loss = _xent(logits, targets)
+    if cfg.mtp_depth > 0 and cfg.num_codebooks == 1:
+        hidden = aux["hidden"]
+        if cfg.num_prefix_embeds and prefix_embeds is not None:
+            hidden = hidden[:, prefix_embeds.shape[1]:]
+        mlogits = T.mtp_logits(cfg, params, hidden, tokens,
+                               moe_group_size=moe_group_size,
+                               moe_strategy=moe_strategy)
+        mtgt = jnp.concatenate([targets[:, 1:], targets[:, -1:]], axis=1)
+        loss = loss + mtp_weight * _xent(mlogits, mtgt)
+    # MoE load-balance aux
+    aux_w = _moe_aux_weight(cfg)
+    if aux_w:
+        loss = loss + aux_w * aux["aux"]
+    return loss
+
+
+def _moe_aux_weight(cfg: ModelConfig) -> float:
+    for st in cfg.stages:
+        for b in st.unit:
+            w = getattr(b.ffn, "aux_loss_weight", 0.0) if b.ffn else 0.0
+            if w:
+                return w
+    return 0.0
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: Optional[adamw.AdamWConfig] = None,
+                    *, use_flash=False, moe_group_size=2048,
+                    moe_strategy="gshard", remat=True, grad_shardings=None):
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+
+    def train_step(params, opt_state, tokens, targets, prefix_embeds=None,
+                   memory=None):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm_loss(cfg, p, tokens, targets,
+                              prefix_embeds=prefix_embeds, memory=memory,
+                              use_flash=use_flash,
+                              moe_group_size=moe_group_size,
+                              moe_strategy=moe_strategy, remat=remat))(params)
+        # cast + pin grads to the FSDP param sharding BEFORE the optimizer:
+        # without the constraint GSPMD emitted full-weight f32 all-reduces
+        # instead of bf16 reduce-scatters (gemma2 §Perf-2 iter 2)
+        grads = jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+        if grad_shardings is not None:
+            grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+        params, opt_state, metrics = adamw.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        return params, opt_state, loss, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: Optional[int] = None, *,
+                      use_flash=False, moe_group_size=2048,
+                      moe_strategy="gshard"):
+    def prefill_step(params, tokens, prefix_embeds=None, memory=None):
+        logits, caches = T.prefill(
+            cfg, params, tokens,
+            cache_len=cache_len or tokens.shape[1],
+            prefix_embeds=prefix_embeds, memory=memory,
+            cache_dtype=CACHE_DTYPE, use_flash=use_flash,
+            moe_group_size=moe_group_size, moe_strategy=moe_strategy)
+        return logits[:, -1:], caches
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, pos: int, *, moe_group_size=2048,
+                    moe_strategy="gshard"):
+    """One decode step at static position ``pos`` (dry-run lowers the
+    steady-state step; the serve driver re-lowers per bucket or uses a
+    traced position)."""
+    def serve_step(params, token, caches, memory=None):
+        logits, new_caches = T.decode_step(cfg, params, token, pos, caches,
+                                           memory=memory)
+        return logits, new_caches
+
+    return serve_step

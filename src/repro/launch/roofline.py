@@ -1,0 +1,156 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs_global   / (chips × 197 TFLOP/s)
+    memory term     = HLO_bytes_global   / (chips × 819 GB/s)
+    collective term = collective_bytes_per_chip / 50 GB/s   (ICI)
+
+``compiled.cost_analysis()`` reports the per-device (post-SPMD) module, so
+global = per-device × chips.  Collective bytes are parsed from the
+partitioned HLO text; per-op ICI traffic model (ring algorithms):
+
+    all-gather        → result bytes × (n−1)/n
+    reduce-scatter    → operand bytes × (n−1)/n
+    all-reduce        → 2 × operand bytes × (n−1)/n
+    all-to-all        → operand bytes × (n−1)/n
+    collective-permute→ operand bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\(([^)]*)\)|(\S+?))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device ICI bytes by collective kind, from partitioned HLO."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str = m.group(1) or m.group(2)
+        kind = m.group(3)
+        nbytes = _shape_bytes(shape_str)
+        # replica-group size for the (n-1)/n factor
+        rg = re.search(r"replica_groups=\{([^}]*)\}", line)
+        n = 2
+        if rg:
+            first = rg.group(1).split("}")[0].lstrip("{")
+            n = max(2, len([x for x in first.split(",") if x.strip() != ""]))
+        else:
+            rg2 = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+            if rg2:
+                n = max(2, int(rg2.group(2)))
+        frac = (n - 1) / n
+        if kind == "all-reduce":
+            traffic = 2.0 * nbytes * frac
+        elif kind == "all-gather":
+            traffic = nbytes * frac            # result bytes already in line
+        elif kind == "reduce-scatter":
+            traffic = nbytes * frac
+        elif kind == "all-to-all":
+            traffic = nbytes * frac
+        else:                                   # collective-permute
+            traffic = nbytes
+        out[kind] = out.get(kind, 0.0) + traffic
+        out["total"] = out.get("total", 0.0) + traffic
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_breakdown: Dict[str, float]
+    memory_per_chip: Optional[dict] = None
+    model_flops: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> Optional[float]:
+        if not self.model_flops:
+            return None
+        return self.model_flops / max(self.flops_per_chip * self.chips, 1.0)
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "coll_breakdown": self.coll_breakdown,
+            "memory_per_chip": self.memory_per_chip,
+            "model_flops": self.model_flops,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def model_flops_estimate(n_params_active: float, tokens: float,
+                         train: bool) -> float:
+    """MODEL_FLOPS = 6·N·D for training, 2·N·D for inference forward."""
+    return (6.0 if train else 2.0) * n_params_active * tokens
+
+
+def fmt_seconds(s: float) -> str:
+    if s >= 1:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s*1e3:.2f}ms"
+    return f"{s*1e6:.1f}us"

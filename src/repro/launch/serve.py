@@ -1,0 +1,86 @@
+"""AR serving driver: prefill + decode loop with a static request batch.
+
+    python -m repro.launch.serve --arch qwen3-14b --variant smoke \
+        --batch 4 --prompt-len 32 --gen 16
+
+(The diffusion serving driver — the paper's inference kind, with
+SmoothCache — is ``examples/serve_diffusion.py``.)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.data import TokenStream, text_memory
+from repro.models import transformer as T
+
+
+def generate(cfg, params, prompts, gen_len: int, *, memory=None,
+             cache_len=None, temperature: float = 0.0, key=None):
+    """Greedy/temperature batched generation. prompts: (B, L[, K])."""
+    b, plen = prompts.shape[:2]
+    cache_len = cache_len or (plen + gen_len)
+    logits, caches = T.prefill(cfg, params, prompts, cache_len=cache_len,
+                               memory=memory, cache_dtype=jnp.float32,
+                               moe_strategy="dense")
+
+    @jax.jit
+    def step(tok, pos, caches):
+        lg, caches = T.decode_step(cfg, params, tok, pos, caches,
+                                   memory=memory)
+        return lg, caches
+
+    def pick(lg, k):
+        if temperature <= 0:
+            return jnp.argmax(lg, axis=-1)
+        return jax.random.categorical(k, lg / temperature, axis=-1)
+
+    tok = pick(logits, key)[:, -1:]                        # (B,1) or (B,1,K)
+    if cfg.num_codebooks > 1:
+        tok = tok.reshape(b, 1, cfg.num_codebooks)
+    out = [tok]
+    for i in range(gen_len - 1):
+        lg, caches = step(tok, plen + i, caches)
+        k = jax.random.fold_in(key, i) if key is not None else None
+        tok = pick(lg, k)
+        if cfg.num_codebooks > 1:
+            tok = tok.reshape(b, 1, cfg.num_codebooks)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--variant", default="smoke")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch, args.variant)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    stream = TokenStream(cfg.vocab_size, args.prompt_len, args.batch,
+                         num_codebooks=cfg.num_codebooks)
+    prompts, _ = stream.batch_at(0)
+    memory = (text_memory(jax.random.PRNGKey(3), args.batch, 16, cfg.cond_dim)
+              if cfg.cond_dim else None)
+
+    t0 = time.time()
+    toks = generate(cfg, params, prompts, args.gen, memory=memory,
+                    temperature=args.temperature, key=jax.random.PRNGKey(1))
+    dt = time.time() - t0
+    n_new = args.batch * args.gen
+    print(f"[serve] {cfg.name}: generated {toks.shape} "
+          f"({n_new} tokens in {dt:.2f}s → {n_new/dt:.1f} tok/s incl. "
+          f"prefill+compile)")
+    print("[serve] first sequence:", jax.device_get(toks[0]).tolist()[:16])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,228 @@
+"""GSPMD sharding rules for every parameter / activation / cache in the
+framework.
+
+Policy (DESIGN.md §8):
+  * tensor parallel over ``model``: attention heads, FFN hidden, expert dim,
+    vocab;
+  * FSDP over the batch axes (``pod``+``data``): the largest non-model dim
+    of every big 2D+ weight (ZeRO-style — optimizer moments inherit it);
+  * activations: batch over (pod, data);
+  * decode caches: batch over (pod, data) when divisible, KV heads over
+    ``model`` when divisible, else sequence over the free axes (context
+    sharding — the long_500k path).
+
+Every rule degrades to replication when a dim is not divisible by the mesh
+axis: ``_fit`` checks divisibility so one rule set serves all 13 archs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fit(mesh, dim_size: int, axes):
+    """Return axes if dim divisible by their product, else None."""
+    if axes is None:
+        return None
+    n = _axis_size(mesh, axes)
+    return axes if (n > 1 and dim_size % n == 0) else None
+
+
+def fsdp_axes(mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if axes else None
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules (path-name dispatch)
+# ---------------------------------------------------------------------------
+
+def _attn_shardable(mesh, aspec) -> bool:
+    """Head-TP is only coherent when head counts divide the model axis —
+    otherwise GSPMD splits heads mid-vector on the (H·dh) reshape and
+    falls back to huge reshards (observed in the internvl2 baseline)."""
+    m = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    if m <= 1:
+        return False
+    if aspec.kind == "mla":
+        return aspec.num_heads % m == 0
+    return aspec.num_heads % m == 0 and aspec.num_kv_heads % m == 0
+
+
+def _param_rule(name: str, shape, mesh, fsdp, block=None, role=None) -> P:
+    nd = len(shape)
+
+    def f(i, axes):          # fit axes to dim i
+        return _fit(mesh, shape[i], axes)
+
+    # attention projections: head-TP only when divisible (see above)
+    if role in ("mixer", "cross") and block is not None:
+        from repro.config import AttentionSpec, RGLRUSpec
+        spec = block.mixer if role == "mixer" else block.cross
+        if isinstance(spec, AttentionSpec) and not _attn_shardable(mesh, spec):
+            if name in ("wq", "wk", "wv", "wo", "wq_b", "wkv_b"):
+                return P(f(0, fsdp), None)
+            if name in ("bq", "bk", "bv"):
+                return P(None)
+        if isinstance(spec, RGLRUSpec):
+            # block-diagonal gates don't split over the model axis cleanly;
+            # keep the RG-LRU mixer replicated (FSDP only), TP on the FFN
+            if name in ("in_x", "in_gate", "out", "wa", "wx", "a_param"):
+                return P(f(0, fsdp), *([None] * (nd - 1)))
+
+    if name == "embed":
+        if nd == 2:   # (V, D)
+            return P(f(0, "model"), f(1, fsdp))
+        return P(None, f(1, "model"), f(2, fsdp))          # (K, V, D)
+    if name == "lm_head":
+        return P(f(0, fsdp), f(1, "model"))
+    if name == "heads":                                     # (K, D, V)
+        return P(None, f(1, fsdp), f(2, "model"))
+    if name in ("wq", "wk", "wv", "in_x", "in_gate"):       # (D, H·dh)
+        return P(f(0, fsdp), f(1, "model"))
+    if name in ("wo", "out", "out_proj"):                   # (H·dh, D)
+        return P(f(0, "model"), f(1, fsdp))
+    if name in ("wq_a", "wkv_a", "in_proj"):                # (D, r)
+        return P(f(0, fsdp), None)
+    if name in ("wq_b", "wkv_b"):                           # (r, H·x)
+        return P(None, f(1, "model"))
+    if name in ("bq", "bk", "bv"):
+        return P(f(0, "model"))
+    if name in ("w_up", "w_gate"):
+        if nd == 2:                                         # (D, F)
+            return P(f(0, fsdp), f(1, "model"))
+        return P(f(0, "model"), f(1, fsdp), None)           # (E, D, F)
+    if name == "w_down":
+        if nd == 2:                                         # (F, D)
+            return P(f(0, "model"), f(1, fsdp))
+        return P(f(0, "model"), None, f(2, fsdp))           # (E, F, D)
+    if name in ("wa", "wx"):                                # (nh, hd, hd)
+        return P(f(0, "model"), None, None)
+    if name == "a_param":
+        return P(f(0, "model"))
+    if name == "w" and nd == 2:                             # adaLN mod etc.
+        return P(None, f(1, "model"))
+    return P()                                              # replicate
+
+
+def param_specs(mesh, params_shape_tree, cfg: Optional[ModelConfig] = None,
+                *, fsdp: bool = True):
+    """PartitionSpec tree for a params (or optimizer-moment) shape tree.
+    With ``cfg``, attention rules become head-divisibility aware.
+
+    ``fsdp=False`` → pure tensor-parallel (weights replicated over the
+    batch axes).  Used for decode serving: FSDP would all-gather every
+    weight every step (§Perf-3 — 60× memory-term inflation on qwen3
+    decode); TP-only weights fit HBM for every assigned arch except the
+    two giant MoEs, which keep expert-dim sharding across data anyway."""
+    fsdp = fsdp_axes(mesh) if fsdp else None
+
+    def walk(path, leaf):
+        name = None
+        for p in reversed(path):
+            if isinstance(p, jax.tree_util.DictKey):
+                name = str(p.key)
+                break
+        shape = leaf.shape
+        # locate the owning block for stage params: .../stages[si][bi][role]...
+        block = role = None
+        stacked = False
+        keys = list(path)
+        for i, p in enumerate(keys):
+            if isinstance(p, jax.tree_util.DictKey) and p.key == "stages":
+                stacked = True
+                if cfg is not None and i + 2 < len(keys):
+                    si = keys[i + 1].idx
+                    bi = keys[i + 2].idx
+                    block = cfg.stages[si].unit[bi]
+                    for q in keys[i + 3:]:
+                        if isinstance(q, jax.tree_util.DictKey) and \
+                                q.key in ("mixer", "cross", "ffn"):
+                            role = q.key
+                            break
+                break
+            if isinstance(p, jax.tree_util.DictKey) and p.key == "mtp" \
+                    and cfg is not None:
+                block = cfg.stages[-1].unit[-1]
+                role = "mixer"
+        if stacked:
+            inner = _param_rule(name, shape[1:], mesh, fsdp, block, role)
+            return P(None, *inner)
+        return _param_rule(name, shape, mesh, fsdp, block, role)
+
+    return jax.tree_util.tree_map_with_path(walk, params_shape_tree)
+
+
+# ---------------------------------------------------------------------------
+# Activation / cache rules
+# ---------------------------------------------------------------------------
+
+def batch_spec(mesh, batch: int, extra_dims: int = 1) -> P:
+    """(B, ...) with B over (pod, data) when divisible."""
+    axes = _fit(mesh, batch, fsdp_axes(mesh))
+    return P(axes, *([None] * extra_dims))
+
+
+def cache_specs(mesh, cfg: ModelConfig, caches_shape, batch: int):
+    """Specs for the stacked decode caches from transformer.init_caches."""
+    b_axes = _fit(mesh, batch, fsdp_axes(mesh))
+
+    def leaf_spec(path, leaf):
+        name = None
+        for p in reversed(path):
+            if isinstance(p, jax.tree_util.DictKey):
+                name = str(p.key)
+                break
+        shape = leaf.shape                 # leading dim = repeat
+        if name == "slots":                # (repeat, clen) int32
+            return P()
+        if name in ("k", "v"):
+            # decode layouts: k (repeat,B,KV,dh,S), v (repeat,B,KV,S,dh)
+            kv_dim, s_dim = (2, 4) if name == "k" else (2, 3)
+            kv_ax = _fit(mesh, shape[kv_dim], "model")
+            s_ax = (_fit(mesh, shape[s_dim], "model")
+                    if (kv_ax is None and b_axes) else None)
+            if b_axes is None:             # long_500k B=1: context-shard S
+                s_ax = _fit(mesh, shape[s_dim], ("data", "model")
+                            if kv_ax is None else "data")
+                if s_ax is None:
+                    s_ax = _fit(mesh, shape[s_dim], "data")
+            spec_l = [None, b_axes, None, None, None]
+            spec_l[kv_dim] = kv_ax
+            spec_l[s_dim] = s_ax
+            return P(*spec_l)
+        if name in ("ckv", "krope"):       # (repeat, B, S, c)
+            s_ax = _fit(mesh, shape[2], "model")
+            if b_axes is None:
+                s_ax = _fit(mesh, shape[2], ("data", "model")) or s_ax
+            return P(None, b_axes, s_ax, None)
+        if name == "ssm":                  # (repeat, B, H, P, N)
+            return P(None, b_axes, _fit(mesh, shape[2], "model"), None, None)
+        if name == "conv":                 # (repeat, B, K-1, C)
+            return P(None, b_axes, None, _fit(mesh, shape[3], "model"))
+        if name == "h":                    # (repeat, B, W)
+            return P(None, b_axes, _fit(mesh, shape[2], "model"))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, caches_shape)
+
+
+def to_named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,1 @@
+from repro.models import attention, blocks, layers, mlp, moe, rglru, ssm, transformer  # noqa: F401

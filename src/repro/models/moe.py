@@ -1,0 +1,185 @@
+"""Mixture-of-Experts FFN.
+
+Two dispatch strategies:
+
+* ``gshard`` (default) — GShard/GSPMD-canonical one-hot einsum dispatch with
+  per-group expert capacity and token dropping.  Tokens are processed in
+  groups of ``group_size`` so the (group, tokens, experts, capacity) dispatch
+  tensor stays small; under the production mesh the group dim shards over
+  (``pod``, ``data``) and the expert dim over ``model``, which GSPMD lowers
+  to the classic all-to-all schedule.
+* ``dense`` — every expert computes every token (exact, no dropping); used as
+  the oracle in tests and for tiny smoke configs.
+
+DeepSeek-V3-style details supported: sigmoid router with top-k renorm and
+routed scaling factor, shared experts, Switch-style load-balance aux loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import shardctx
+from repro.config import MoESpec
+from repro.models import layers as L
+
+
+def init(key, spec: MoESpec, d_model: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    e, f = spec.num_experts, spec.d_ff
+    std = 1.0 / math.sqrt(d_model)
+
+    def ew(k, shape, fan_in):
+        w = jax.random.truncated_normal(k, -2.0, 2.0, shape, jnp.float32) / math.sqrt(fan_in)
+        return w.astype(dtype)
+
+    p = {
+        "router": L.dense_init(ks[0], d_model, e, jnp.float32),  # router in fp32
+        "w_up": ew(ks[1], (e, d_model, f), d_model),
+        "w_down": ew(ks[2], (e, f, d_model), f),
+    }
+    if spec.gated:
+        p["w_gate"] = ew(ks[3], (e, d_model, f), d_model)
+    if spec.router == "sigmoid":
+        p["router_bias"] = jnp.zeros((e,), jnp.float32)  # dsv3 aux-free bias
+    if spec.num_shared:
+        fs = spec.d_ff_shared or spec.d_ff * spec.num_shared
+        p["shared"] = {
+            "w_up": L.dense_init(ks[4], d_model, fs, dtype),
+            "w_down": L.dense_init(ks[5], fs, d_model, dtype),
+        }
+        if spec.gated:
+            p["shared"]["w_gate"] = L.dense_init(ks[6], d_model, fs, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Router
+# ---------------------------------------------------------------------------
+
+def route(spec: MoESpec, params, x):
+    """x: (..., d) → (weights (..., k), idx (..., k), probs (..., E))."""
+    logits = x.astype(jnp.float32) @ params["router"]
+    if spec.router == "sigmoid":
+        probs = jax.nn.sigmoid(logits)
+        sel = probs + params["router_bias"]          # bias affects selection only
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        sel = probs
+    top_vals, top_idx = jax.lax.top_k(sel, spec.top_k)
+    # weights come from probs at the selected experts (dsv3: bias-free weights)
+    w = jnp.take_along_axis(probs, top_idx, axis=-1)
+    if spec.norm_topk:
+        w = w / (jnp.sum(w, axis=-1, keepdims=True) + 1e-20)
+    w = w * spec.router_scale
+    return w, top_idx, probs
+
+
+def load_balance_loss(spec: MoESpec, probs, top_idx):
+    """Switch-Transformer aux loss: E · Σ_e f_e · P_e."""
+    e = spec.num_experts
+    onehot = jax.nn.one_hot(top_idx, e, dtype=jnp.float32)       # (..., k, E)
+    f = jnp.mean(jnp.sum(onehot, axis=-2).reshape(-1, e), axis=0) / spec.top_k
+    p = jnp.mean(probs.reshape(-1, e), axis=0)
+    return e * jnp.sum(f * p)
+
+
+# ---------------------------------------------------------------------------
+# Expert FFN application (batched over expert dim)
+# ---------------------------------------------------------------------------
+
+def _expert_ffn(spec: MoESpec, params, xe):
+    """xe: (..., E, C, d) → (..., E, C, d); expert dim batched einsum."""
+    act = L.activation(spec.activation)
+    up = jnp.einsum("...ecd,edf->...ecf", xe, params["w_up"])
+    if spec.gated:
+        up = act(jnp.einsum("...ecd,edf->...ecf", xe, params["w_gate"])) * up
+    else:
+        up = act(up)
+    return jnp.einsum("...ecf,efd->...ecd", up, params["w_down"])
+
+
+def _shared_ffn(spec: MoESpec, params, x):
+    act = L.activation(spec.activation)
+    sp = params["shared"]
+    up = x @ sp["w_up"]
+    if spec.gated:
+        up = act(x @ sp["w_gate"]) * up
+    else:
+        up = act(up)
+    return up @ sp["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Dispatch strategies
+# ---------------------------------------------------------------------------
+
+def apply_dense(spec: MoESpec, params, x):
+    """Oracle: all experts on all tokens, top-k combined. (B, L, d)."""
+    w, idx, probs = route(spec, params, x)
+    mask = jax.nn.one_hot(idx, spec.num_experts, dtype=x.dtype)  # (...,k,E)
+    comb = jnp.einsum("...ke,...k->...e", mask, w.astype(x.dtype))
+    xe = jnp.broadcast_to(x[..., None, None, :],
+                          x.shape[:-1] + (spec.num_experts, 1, x.shape[-1]))
+    ye = _expert_ffn(spec, params, xe)[..., 0, :]                # (...,E,d)
+    out = jnp.einsum("...ed,...e->...d", ye, comb)
+    if spec.num_shared:
+        out = out + _shared_ffn(spec, params, x)
+    aux = load_balance_loss(spec, probs, idx)
+    return out, aux
+
+
+def capacity(spec: MoESpec, group_tokens: int) -> int:
+    cf = spec.capacity_factor or 1.25
+    c = int(math.ceil(group_tokens * spec.top_k * cf / spec.num_experts))
+    return max(8, -(-c // 8) * 8)  # round up to 8 (lane-friendly)
+
+
+def apply_gshard(spec: MoESpec, params, x, group_size: int = 2048):
+    """Capacity-based one-hot einsum dispatch. x: (B, L, d)."""
+    b, l, d = x.shape
+    t = b * l
+    g_sz = min(group_size, t)
+    assert t % g_sz == 0, f"tokens {t} not divisible by group size {g_sz}"
+    g = t // g_sz
+    xg = x.reshape(g, g_sz, d)
+    w, idx, probs = route(spec, params, xg)                       # (g,t,k)
+    c = capacity(spec, g_sz)
+    e = spec.num_experts
+
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)            # (g,t,k,E)
+    # position of each (token, slot) within its expert queue, in (t, k) order
+    flat = onehot.reshape(g, g_sz * spec.top_k, e)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(g, g_sz, spec.top_k, e)
+    pos = jnp.sum(pos * onehot, axis=-1).astype(jnp.int32)        # (g,t,k)
+    keep = (pos < c).astype(jnp.float32)
+    pos_oh = jax.nn.one_hot(pos, c, dtype=jnp.float32) * keep[..., None]
+    # dispatch (g,t,E,C) / combine with routing weights
+    dispatch = jnp.einsum("gtke,gtkc->gtec", onehot, pos_oh)
+    combine = jnp.einsum("gtke,gtkc,gtk->gtec", onehot, pos_oh, w.astype(jnp.float32))
+
+    # pin the all-to-all layout: token groups stay on the batch axes while
+    # the expert dim lives on the model axis (GShard schedule)
+    xg = shardctx.constrain(xg, "batch", None, None)
+    dispatch = shardctx.constrain(dispatch, "batch", None, "model", None)
+    combine = shardctx.constrain(combine, "batch", None, "model", None)
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch.astype(x.dtype), xg)
+    xe = shardctx.constrain(xe, "batch", "model", None, None)
+    ye = _expert_ffn(spec, params, xe)                            # (g,E,C,d)
+    ye = shardctx.constrain(ye, "batch", "model", None, None)
+    out = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), ye)
+    out = out.reshape(b, l, d)
+    if spec.num_shared:
+        out = out + _shared_ffn(spec, params, x)
+    aux = load_balance_loss(spec, probs, idx)
+    return out, aux
+
+
+def apply(spec: MoESpec, params, x, *, strategy: str = "gshard",
+          group_size: int = 2048):
+    if strategy == "dense":
+        return apply_dense(spec, params, x)
+    return apply_gshard(spec, params, x, group_size=group_size)

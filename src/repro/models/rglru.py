@@ -1,0 +1,114 @@
+"""RG-LRU recurrent mixer from Griffin / RecurrentGemma [arXiv:2402.19427].
+
+Recurrence:  h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+  a_t = exp(−c · softplus(Λ) · r_t),  r_t = σ(W_a x_t),  i_t = σ(W_x x_t)
+
+Full-sequence mode uses ``jax.lax.associative_scan`` over the linear
+recurrence (log-depth on TPU); decode mode is the O(1) step.  The gate
+projections W_a / W_x are block-diagonal over ``num_heads`` blocks, as in
+the reference implementation.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import RGLRUSpec
+from repro.models import layers as L
+
+
+def width(spec: RGLRUSpec, d_model: int) -> int:
+    return spec.expand * d_model
+
+
+def init(key, spec: RGLRUSpec, d_model: int, dtype=jnp.float32):
+    w = width(spec, d_model)
+    hd = w // spec.num_heads
+    ks = jax.random.split(key, 8)
+    # Λ init so that a^c = exp(-c softplus Λ) is in [0.9, 0.999] at r=1
+    u = jax.random.uniform(ks[2], (w,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    a_param = jnp.log(jnp.expm1(-jnp.log(u) / (2 * spec.c_constant)))
+    blk = (jax.random.truncated_normal(ks[3], -2., 2., (spec.num_heads, hd, hd),
+                                       jnp.float32) / math.sqrt(hd))
+    blk2 = (jax.random.truncated_normal(ks[4], -2., 2., (spec.num_heads, hd, hd),
+                                        jnp.float32) / math.sqrt(hd))
+    return {
+        "in_x": L.dense_init(ks[0], d_model, w, dtype),
+        "in_gate": L.dense_init(ks[1], d_model, w, dtype),
+        "conv_w": (jax.random.normal(ks[5], (spec.conv_width, w), jnp.float32)
+                   / math.sqrt(spec.conv_width)).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "wa": blk.astype(dtype), "ba": jnp.zeros((w,), dtype),
+        "wx": blk2.astype(dtype), "bx": jnp.zeros((w,), dtype),
+        "a_param": a_param,
+        "out": L.dense_init(ks[6], w, d_model, dtype),
+    }
+
+
+def init_cache(spec: RGLRUSpec, d_model: int, batch: int, dtype=jnp.float32):
+    w = width(spec, d_model)
+    return {
+        "conv": jnp.zeros((batch, spec.conv_width - 1, w), dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def _block_diag(w_blocks, x, nh):
+    """x: (..., W) with W split into nh blocks → block-diagonal matmul."""
+    shp = x.shape
+    xb = x.reshape(shp[:-1] + (nh, shp[-1] // nh))
+    out = jnp.einsum("...hi,hij->...hj", xb, w_blocks)
+    return out.reshape(shp)
+
+
+def _gates(spec: RGLRUSpec, params, xr):
+    """xr: (..., W) conv output → (log_a (...,W) fp32, gated input)."""
+    nh = spec.num_heads
+    r = jax.nn.sigmoid((_block_diag(params["wa"], xr, nh) + params["ba"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((_block_diag(params["wx"], xr, nh) + params["bx"]).astype(jnp.float32))
+    log_a = -spec.c_constant * jax.nn.softplus(params["a_param"]) * r
+    a2 = jnp.exp(2.0 * log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * i * xr.astype(jnp.float32)
+    return log_a, gated
+
+
+def _causal_conv(params, x):
+    w = params["conv_w"]
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    return sum(pad[:, i : i + x.shape[1], :] * w[i] for i in range(k)) + params["conv_b"]
+
+
+def apply_full(spec: RGLRUSpec, params, x, d_model: int):
+    """x: (B, L, D) → (B, L, D); returns final cache too."""
+    gate = jax.nn.gelu((x @ params["in_gate"]).astype(jnp.float32))
+    xr = x @ params["in_x"]
+    conv_tail = xr[:, -(spec.conv_width - 1):, :]
+    xr = _causal_conv(params, xr)
+    log_a, gated = _gates(spec, params, xr)
+    a = jnp.exp(log_a)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    y = (h * gate).astype(x.dtype)
+    cache = {"conv": conv_tail, "h": h[:, -1, :]}
+    return y @ params["out"], cache
+
+
+def apply_decode(spec: RGLRUSpec, params, x, cache, d_model: int):
+    """x: (B, 1, D)."""
+    gate = jax.nn.gelu((x @ params["in_gate"]).astype(jnp.float32))   # (B,1,W)
+    xr = x @ params["in_x"]
+    win = jnp.concatenate([cache["conv"], xr], axis=1)                # (B,K,W)
+    w = params["conv_w"]
+    conv_out = jnp.einsum("bkw,kw->bw", win, w) + params["conv_b"]
+    log_a, gated = _gates(spec, params, conv_out)                     # (B,W)
+    h = jnp.exp(log_a) * cache["h"] + gated
+    y = (h[:, None, :] * gate).astype(x.dtype)
+    return y @ params["out"], {"conv": win[:, 1:, :], "h": h}

@@ -1,0 +1,223 @@
+"""Mamba-2 mixer (SSD — state-space duality) [arXiv:2405.21060].
+
+Full-sequence mode uses the chunked SSD algorithm (quadratic within a chunk,
+linear recurrence across chunks) — the same blocking the Pallas kernel in
+``repro.kernels.ssd`` implements on TPU.  Decode mode is the O(1) recurrent
+state update.  State caches are functional pytrees.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SSMSpec
+from repro.models import layers as L
+
+
+def dims(spec: SSMSpec, d_model: int):
+    d_inner = spec.expand * d_model
+    n_heads = d_inner // spec.head_dim
+    conv_ch = d_inner + 2 * spec.n_groups * spec.d_state
+    return d_inner, n_heads, conv_ch
+
+
+def init(key, spec: SSMSpec, d_model: int, dtype=jnp.float32):
+    d_inner, n_heads, conv_ch = dims(spec, d_model)
+    ks = jax.random.split(key, 6)
+    in_dim = 2 * d_inner + 2 * spec.n_groups * spec.d_state + n_heads
+    lo, hi = spec.a_init_range
+    a = jnp.exp(jax.random.uniform(ks[2], (n_heads,), jnp.float32,
+                                   math.log(lo), math.log(hi)))
+    # dt bias ~ softplus^{-1}(dt) for dt in [1e-3, 1e-1]
+    dt = jnp.exp(jax.random.uniform(ks[3], (n_heads,), jnp.float32,
+                                    math.log(1e-3), math.log(1e-1)))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_proj": L.dense_init(ks[0], d_model, in_dim, dtype),
+        "conv_w": (jax.random.normal(ks[1], (spec.d_conv, conv_ch), jnp.float32)
+                   / math.sqrt(spec.d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(a),
+        "dt_bias": dt_bias,
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "out_norm": L.rmsnorm_init(d_inner, dtype),
+        "out_proj": L.dense_init(ks[4], d_inner, d_model, dtype),
+    }
+
+
+def init_cache(spec: SSMSpec, d_model: int, batch: int, dtype=jnp.float32):
+    d_inner, n_heads, conv_ch = dims(spec, d_model)
+    return {
+        "conv": jnp.zeros((batch, spec.d_conv - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, n_heads, spec.head_dim, spec.d_state), jnp.float32),
+    }
+
+
+def _split(spec: SSMSpec, d_model: int, zxbcdt):
+    d_inner, n_heads, _ = dims(spec, d_model)
+    gn = spec.n_groups * spec.d_state
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * gn], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(params, xbc):
+    """Depthwise causal conv over time. xbc: (B, L, C)."""
+    w = params["conv_w"]                                  # (K, C)
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + params["conv_b"])
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan (pure jnp oracle; Pallas kernel mirrors this blocking)
+# ---------------------------------------------------------------------------
+
+def segsum(x):
+    """x: (..., L) → (..., L, L) segment sums: out[q, s] = Σ_{s<i≤q} x_i
+    (−inf above the diagonal)."""
+    l = x.shape[-1]
+    # row i carries x_i; cumsum down rows gives Σ_{i≤q, i>s} x_i at [q, s]
+    x = jnp.broadcast_to(x[..., :, None], x.shape[:-1] + (l, l))
+    mask = jnp.tril(jnp.ones((l, l), bool), -1)   # keep s < i
+    x = jnp.where(mask, x, 0.0)
+    out = jnp.cumsum(x, axis=-2)
+    mask = jnp.tril(jnp.ones((l, l), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b, c, chunk: int, h0=None):
+    """SSD scan.
+
+    x: (B, L, H, P) inputs; dt: (B, L, H) positive step sizes;
+    a: (H,) positive decay rates (state decay = exp(-dt·a));
+    b, c: (B, L, G, N) input/output projections (G groups broadcast to H).
+    Returns (y (B,L,H,P), h_final (B,H,P,N)).
+    """
+    bs, l, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    if l % chunk:
+        # pad with dt=0 steps: decay exp(0)=1 and zero input → state-neutral
+        pad = chunk - l % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y, hT = ssd_chunked(x, dt, a, b, c, chunk, h0)
+        return y[:, :l], hT
+    nc = l // chunk
+    rep = h // g
+
+    da = -dt * a[None, None, :]                            # (B,L,H) log decay
+    xc = x.reshape(bs, nc, chunk, h, p)
+    dtc = dt.reshape(bs, nc, chunk, h)
+    dac = da.reshape(bs, nc, chunk, h)
+    bc = jnp.repeat(b.reshape(bs, nc, chunk, g, n), rep, axis=3)
+    cc = jnp.repeat(c.reshape(bs, nc, chunk, g, n), rep, axis=3)
+
+    # 1. intra-chunk (quadratic) term
+    ss = segsum(dac.transpose(0, 1, 3, 2))                 # (B,nc,H,Q,Q)
+    decay = jnp.exp(ss)
+    scores = jnp.einsum("bzqhn,bzshn->bzhqs", cc, bc) * decay.astype(cc.dtype)
+    y = jnp.einsum("bzhqs,bzsh,bzshp->bzqhp", scores, dtc.astype(cc.dtype), xc)
+
+    # 2. chunk-final states
+    decay_end = jnp.exp(jnp.cumsum(dac, axis=2)[:, :, -1:, :] -
+                        jnp.cumsum(dac, axis=2))           # (B,nc,Q,H)
+    states = jnp.einsum("bzqhn,bzqh,bzqhp->bzhpn", bc,
+                        (dtc * decay_end).astype(cc.dtype), xc)
+
+    # 3. inter-chunk recurrence over states: h_{z} = exp(sum_da_z) h_{z-1} + S_z
+    chunk_decay = jnp.exp(jnp.sum(dac, axis=2))            # (B,nc,H)
+    if h0 is None:
+        h0 = jnp.zeros((bs, h, p, n), jnp.float32)
+
+    def step(hprev, inp):
+        dec, s = inp
+        hnew = hprev * dec[..., None, None] + s.astype(jnp.float32)
+        return hnew, hprev
+
+    (hT, hprevs) = jax.lax.scan(
+        step, h0,
+        (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)               # (B,nc,H,P,N)
+
+    # 4. inter-chunk output: y += C · h_prev · decay_from_chunk_start
+    decay_in = jnp.exp(jnp.cumsum(dac, axis=2))            # (B,nc,Q,H)
+    y = y + jnp.einsum("bzqhn,bzhpn,bzqh->bzqhp",
+                       cc, hprevs.astype(cc.dtype), decay_in.astype(cc.dtype))
+    return y.reshape(bs, l, h, p), hT
+
+
+def ssd_decode_step(xt, dtt, a, bt, ct, state):
+    """One-token recurrence. xt: (B,H,P); dtt: (B,H); bt/ct: (B,G,N);
+    state: (B,H,P,N) fp32. Returns (yt, new_state)."""
+    bs, h, p = xt.shape
+    g = bt.shape[1]
+    rep = h // g
+    bth = jnp.repeat(bt, rep, axis=1)
+    cth = jnp.repeat(ct, rep, axis=1)
+    decay = jnp.exp(-dtt * a[None, :])[..., None, None]    # (B,H,1,1)
+    upd = jnp.einsum("bhp,bhn,bh->bhpn", xt.astype(jnp.float32),
+                     bth.astype(jnp.float32), dtt)
+    state = state * decay + upd
+    yt = jnp.einsum("bhpn,bhn->bhp", state, cth.astype(jnp.float32))
+    return yt.astype(xt.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Block entry points
+# ---------------------------------------------------------------------------
+
+def apply_full(spec: SSMSpec, params, x, d_model: int, use_kernel: bool = False):
+    """x: (B, L, D) → (B, L, D); also returns final (conv, ssm) cache."""
+    b, l, _ = x.shape
+    d_inner, n_heads, conv_ch = dims(spec, d_model)
+    gn = spec.n_groups * spec.d_state
+    zxbcdt = x @ params["in_proj"]
+    z, xbc, dt = _split(spec, d_model, zxbcdt)
+    conv_tail = xbc[:, -(spec.d_conv - 1):, :]
+    xbc = _causal_conv(params, xbc)
+    xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + gn], axis=-1)
+    xs = xs.reshape(b, l, n_heads, spec.head_dim)
+    bmat = bmat.reshape(b, l, spec.n_groups, spec.d_state)
+    cmat = cmat.reshape(b, l, spec.n_groups, spec.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = jnp.exp(params["a_log"])
+    if use_kernel:
+        from repro.kernels import ops as kops
+        y, hT = kops.ssd(xs, dt, a, bmat, cmat, chunk=spec.chunk)
+    else:
+        y, hT = ssd_chunked(xs, dt, a, bmat, cmat, spec.chunk)
+    y = y + xs * params["d_skip"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(b, l, d_inner)
+    y = L.rmsnorm(params["out_norm"], y * jax.nn.silu(z))
+    cache = {"conv": conv_tail, "ssm": hT}
+    return y @ params["out_proj"], cache
+
+
+def apply_decode(spec: SSMSpec, params, x, cache, d_model: int):
+    """x: (B, 1, D); cache {"conv": (B,K-1,C), "ssm": (B,H,P,N)}."""
+    b = x.shape[0]
+    d_inner, n_heads, conv_ch = dims(spec, d_model)
+    gn = spec.n_groups * spec.d_state
+    zxbcdt = x @ params["in_proj"]
+    z, xbc, dt = _split(spec, d_model, zxbcdt)             # (B,1,*)
+    win = jnp.concatenate([cache["conv"], xbc], axis=1)    # (B,K,C)
+    w = params["conv_w"]
+    conv_out = jnp.einsum("bkc,kc->bc", win, w) + params["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    xs, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + gn], axis=-1)
+    xs = xs.reshape(b, n_heads, spec.head_dim)
+    bmat = bmat.reshape(b, spec.n_groups, spec.d_state)
+    cmat = cmat.reshape(b, spec.n_groups, spec.d_state)
+    dtt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+    a = jnp.exp(params["a_log"])
+    yt, state = ssd_decode_step(xs, dtt, a, bmat, cmat, cache["ssm"])
+    yt = yt + xs * params["d_skip"][None, :, None].astype(xs.dtype)
+    y = yt.reshape(b, 1, d_inner)
+    y = L.rmsnorm(params["out_norm"], y * jax.nn.silu(z))
+    new_cache = {"conv": win[:, 1:, :], "ssm": state}
+    return y @ params["out_proj"], new_cache

@@ -1,0 +1,2 @@
+from repro.optim.adamw import (AdamWConfig, apply_updates, cosine_schedule,  # noqa: F401
+                               constant_schedule, global_norm, init_state)

@@ -1,0 +1,92 @@
+"""AdamW with decoupled weight decay and global-norm clipping (from scratch;
+no optax in this environment).  State and updates are plain pytrees, so the
+optimizer composes with pjit sharding (moments inherit the param sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: Optional[float] = 1.0
+    schedule: Optional[Callable] = None      # step → lr multiplier
+
+
+def init_state(params):
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree.map(jnp.zeros_like, params),
+        "nu": jax.tree.map(jnp.zeros_like, params),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    if cfg.grad_clip is not None:
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    lr = cfg.lr * (cfg.schedule(step) if cfg.schedule is not None else 1.0)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["mu"])
+    flat_v = jax.tree.leaves(state["nu"])
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        np_, nm, nv = upd(p, g, m, v)
+        new_p.append(np_)
+        new_m.append(nm)
+        new_v.append(nv)
+    return (jax.tree.unflatten(treedef, new_p),
+            {"step": step,
+             "mu": jax.tree.unflatten(treedef, new_m),
+             "nu": jax.tree.unflatten(treedef, new_v)},
+            {"grad_norm": gnorm, "lr": lr})
+
+
+# ---------------------------------------------------------------------------
+# LR schedules (step → multiplier)
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(warmup: int, total: int, final_frac: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(1.0, warmup)
+        prog = jnp.clip((s - warmup) / jnp.maximum(1.0, total - warmup), 0, 1)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return f
+
+
+def constant_schedule():
+    return lambda step: jnp.ones((), jnp.float32)

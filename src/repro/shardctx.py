@@ -1,0 +1,62 @@
+"""Optional sharding-constraint context for model internals.
+
+Model code calls ``constrain(x, "batch", None, "model", ...)`` with symbolic
+axes; outside a ``use(mesh)`` context this is a no-op (CPU tests, examples),
+inside it becomes ``with_sharding_constraint`` with divisibility-checked
+axes.  This is how the launcher pins the Megatron-style activation layout
+(batch over pod+data; heads or sequence over model) without threading mesh
+objects through every layer.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("repro_shard_ctx",
+                                                      default=None)
+
+
+@contextlib.contextmanager
+def use(mesh):
+    tok = _CTX.set(mesh)
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def active() -> bool:
+    return _CTX.get() is not None
+
+
+def mesh():
+    return _CTX.get()
+
+
+def _fit(m, dim: int, sym):
+    if sym is None:
+        return None
+    axes = (tuple(a for a in ("pod", "data") if a in m.axis_names)
+            if sym == "batch" else
+            ((sym,) if isinstance(sym, str) else tuple(sym)))
+    axes = tuple(a for a in axes if a in m.axis_names)
+    n = 1
+    for a in axes:
+        n *= m.shape[a]
+    if n <= 1 or dim % n != 0:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def constrain(x, *syms):
+    """Constrain ``x`` (ndim == len(syms)) when a mesh context is active."""
+    m = _CTX.get()
+    if m is None or x is None:
+        return x
+    assert x.ndim == len(syms), f"{x.shape} vs {syms}"
+    spec = P(*[_fit(m, x.shape[i], s) for i, s in enumerate(syms)])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(m, spec))

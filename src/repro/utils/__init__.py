@@ -1,0 +1,1 @@
+from repro.utils import flops  # noqa: F401

@@ -1,0 +1,10 @@
+import os
+
+# Tests run on the single local CPU device (the dry-run, and ONLY the
+# dry-run, forces 512 placeholder devices — see src/repro/launch/dryrun.py).
+os.environ.setdefault("REPRO_KERNEL_INTERPRET", "1")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_matmul_precision", "highest")

@@ -1,0 +1,149 @@
+"""Per-kernel allclose sweeps vs. the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import flash_attention_ref, ssd_ref, ssd_sequential_ref
+from repro.kernels.ssd import ssd
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=5e-5, rtol=5e-5)
+
+
+@pytest.mark.parametrize("b,l,h,kv,d", [
+    (2, 64, 4, 4, 32),
+    (2, 64, 4, 1, 32),      # MQA
+    (1, 96, 8, 2, 64),      # GQA 4:1
+    (1, 128, 16, 8, 64),
+    (2, 40, 4, 2, 16),      # non-multiple length → padding path
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes(b, l, h, kv, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(l * h + d), 3)
+    q = jax.random.normal(ks[0], (b, l, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, l, kv, d), dtype)
+    v = jax.random.normal(ks[2], (b, l, kv, d), dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                          interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("causal,window,softcap", [
+    (True, None, None),
+    (True, 16, None),
+    (True, None, 50.0),
+    (False, None, None),
+    (True, 8, 30.0),
+])
+def test_flash_attention_masks(causal, window, softcap):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, 64, 4, 32))
+    k = jax.random.normal(ks[1], (2, 64, 2, 32))
+    v = jax.random.normal(ks[2], (2, 64, 2, 32))
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, block_q=16, block_k=16,
+                          interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window,
+                              softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-5,
+                               rtol=5e-5)
+
+
+@pytest.mark.parametrize("b,l,h,p,g,n,chunk", [
+    (2, 64, 4, 16, 1, 16, 16),
+    (1, 96, 8, 32, 2, 32, 32),
+    (2, 33, 2, 16, 1, 8, 16),   # padding path
+    (1, 16, 2, 8, 2, 8, 8),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel(b, l, h, p, g, n, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(l + h), 5)
+    x = jax.random.normal(ks[0], (b, l, h, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)) - 1.0)
+    a = jnp.exp(jax.random.uniform(ks[2], (h,), minval=0.0, maxval=1.0))
+    bb = jax.random.normal(ks[3], (b, l, g, n), dtype)
+    cc = jax.random.normal(ks[4], (b, l, g, n), dtype)
+    y, hT = ssd(x, dt, a, bb, cc, chunk=chunk, interpret=True)
+    ys, hTs = ssd_sequential_ref(x, dt, a, bb, cc)
+    tol = dict(atol=1e-1, rtol=1e-1) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-4, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(ys, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hTs),
+                               atol=1e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               rtol=1e-2)
+
+
+def test_ssd_chunked_oracle_matches_sequential():
+    """The model's jnp chunked path is itself validated against the O(L)
+    recurrence (two independent oracles)."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    x = jax.random.normal(ks[0], (2, 64, 4, 16))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (2, 64, 4)))
+    a = jnp.exp(jax.random.uniform(ks[2], (4,), minval=0.0, maxval=1.5))
+    bb = jax.random.normal(ks[3], (2, 64, 1, 16))
+    cc = jax.random.normal(ks[4], (2, 64, 1, 16))
+    yc, hc = ssd_ref(x, dt, a, bb, cc, chunk=16)
+    ys, hs = ssd_sequential_ref(x, dt, a, bb, cc)
+    np.testing.assert_allclose(np.asarray(yc), np.asarray(ys), atol=1e-4,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(hc), np.asarray(hs), atol=1e-4,
+                               rtol=1e-3)
+
+
+def test_ssd_initial_state():
+    """h0 threading matches splitting a sequence in two."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    x = jax.random.normal(ks[0], (1, 32, 2, 8))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 32, 2)))
+    a = jnp.exp(jax.random.uniform(ks[2], (2,), minval=0.0, maxval=1.0))
+    bb = jax.random.normal(ks[3], (1, 32, 1, 8))
+    cc = jax.random.normal(ks[4], (1, 32, 1, 8))
+    y_full, h_full = ssd_ref(x, dt, a, bb, cc, chunk=8)
+    y1, h1 = ssd_ref(x[:, :16], dt[:, :16], a, bb[:, :16], cc[:, :16], chunk=8)
+    y2, h2 = ssd_ref(x[:, 16:], dt[:, 16:], a, bb[:, 16:], cc[:, 16:],
+                     chunk=8, h0=h1)
+    np.testing.assert_allclose(np.asarray(y_full[:, 16:]), np.asarray(y2),
+                               atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_full), np.asarray(h2), atol=1e-5,
+                               rtol=1e-4)
+
+
+def test_model_forward_with_flash_kernel_matches():
+    """use_flash=True routes attention through the Pallas kernel (interpret
+    mode on CPU) — must match the jnp path through a whole model."""
+    import os
+    os.environ["REPRO_KERNEL_INTERPRET"] = "1"
+    from repro import configs
+    from repro.models import transformer as T
+
+    cfg = configs.get("qwen3-14b", "smoke")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                              cfg.vocab_size)
+    ref, _ = T.forward(cfg, params, toks, use_flash=False)
+    out, _ = T.forward(cfg, params, toks, use_flash=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_ssm_model_with_kernel_matches():
+    import os
+    os.environ["REPRO_KERNEL_INTERPRET"] = "1"
+    from repro import configs
+    from repro.models import transformer as T
+
+    cfg = configs.get("mamba2-1.3b", "smoke")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    ref, _ = T.forward(cfg, params, toks, use_flash=False)
+    out, _ = T.forward(cfg, params, toks, use_flash=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-3, rtol=2e-3)

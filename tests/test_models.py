@@ -1,0 +1,218 @@
+"""Unit tests for the model substrate: attention variants, MoE dispatch,
+SSM/RG-LRU recurrences, norms, RoPE."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import (AttentionSpec, BlockSpec, MLPSpec, MoESpec,
+                          RGLRUSpec, SSMSpec)
+from repro.kernels.ref import flash_attention_ref
+from repro.models import attention, layers as L, moe, rglru, ssm
+
+
+# ---------------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------------
+
+def test_rmsnorm_unit_scale():
+    p = L.rmsnorm_init(16)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 16)) * 10
+    y = L.rmsnorm(p, x)
+    rms = jnp.sqrt(jnp.mean(y * y, axis=-1))
+    np.testing.assert_allclose(np.asarray(rms), 1.0, atol=1e-3)
+
+
+def test_layernorm_standardizes():
+    p = L.layernorm_init(32)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 32)) * 3 + 5
+    y = L.layernorm(p, x)
+    np.testing.assert_allclose(np.asarray(jnp.mean(y, -1)), 0.0, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(jnp.std(y, -1)), 1.0, atol=1e-2)
+
+
+def test_rope_preserves_norm_and_relativity():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 2, 32))
+    pos = jnp.arange(8)[None]
+    y = L.apply_rope(x, pos)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+    # relative property: <R(p)q, R(p+d)k> depends only on d
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 32))
+    def dot_at(p1, p2):
+        qr = L.apply_rope(q, jnp.array([[p1]]))
+        kr = L.apply_rope(k, jnp.array([[p2]]))
+        return float(jnp.sum(qr * kr))
+    assert abs(dot_at(3, 5) - dot_at(10, 12)) < 1e-3
+
+
+def test_softcap_bounded():
+    x = jnp.linspace(-1000, 1000, 101)
+    y = L.softcap(x, 50.0)
+    assert float(jnp.max(jnp.abs(y))) <= 50.0
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def test_gqa_matches_ref():
+    spec = AttentionSpec(num_heads=8, num_kv_heads=2, head_dim=16,
+                         causal=True, pos_emb="none")
+    p = attention.init(jax.random.PRNGKey(0), spec, 64)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 64))
+    out, (k, v) = attention.apply(spec, p, x)
+    q = (x @ p["wq"]).reshape(2, 12, 8, 16)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    ref = ref.reshape(2, 12, -1) @ p["wo"]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_chunked_attention_matches_unchunked():
+    """The long-sequence query-chunked path must equal plain SDPA."""
+    spec = AttentionSpec(num_heads=4, num_kv_heads=2, head_dim=16,
+                         causal=True, window=50)
+    p = attention.init(jax.random.PRNGKey(0), spec, 64)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 130, 64))
+    out_plain, _ = attention.apply(spec, p, x)
+    old_thr, old_cq = attention.CHUNK_THRESHOLD, attention.CHUNK_Q
+    try:
+        attention.CHUNK_THRESHOLD, attention.CHUNK_Q = 64, 32
+        out_chunk, _ = attention.apply(spec, p, x)
+    finally:
+        attention.CHUNK_THRESHOLD, attention.CHUNK_Q = old_thr, old_cq
+    np.testing.assert_allclose(np.asarray(out_plain), np.asarray(out_chunk),
+                               atol=2e-4, rtol=1e-3)
+
+
+def test_mla_decode_absorption_matches_full():
+    """Absorbed-matmul decode == expanded full attention at the last token."""
+    spec = AttentionSpec(kind="mla", num_heads=4, causal=True,
+                         q_lora_rank=32, kv_lora_rank=32, rope_head_dim=8,
+                         nope_head_dim=16, v_head_dim=16)
+    p = attention.init(jax.random.PRNGKey(0), spec, 64)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 9, 64))
+    full, _ = attention.apply(spec, p, x)
+    # prefill 8, decode token 8
+    _, (ckv, krope) = attention.apply(spec, p, x[:, :8])
+    cache = {
+        "ckv": jnp.pad(ckv, ((0, 0), (0, 1), (0, 0))),
+        "krope": jnp.pad(krope, ((0, 0), (0, 1), (0, 0))),
+    }
+    slots = jnp.r_[np.arange(8), -1].astype(jnp.int32)
+    out, newc = attention.apply(spec, p, x[:, 8:9], mode="decode", pos=8,
+                                cache=cache, slot_pos=slots)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(full[:, 8]),
+                               atol=1e-4, rtol=1e-3)
+    assert int(newc["slots"][8]) == 8
+
+
+def test_sliding_window_blocks_old_tokens():
+    spec = AttentionSpec(num_heads=2, num_kv_heads=2, head_dim=8, causal=True,
+                         window=4, pos_emb="none")
+    p = attention.init(jax.random.PRNGKey(0), spec, 16)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 20, 16))
+    out_full, _ = attention.apply(spec, p, x)
+    # perturbing tokens outside the window must not change the last output
+    x2 = x.at[:, :10].set(jax.random.normal(jax.random.PRNGKey(2), (1, 10, 16)))
+    out2, _ = attention.apply(spec, p, x2)
+    np.testing.assert_allclose(np.asarray(out_full[:, -1]),
+                               np.asarray(out2[:, -1]), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 8), st.integers(1, 3), st.sampled_from(["softmax", "sigmoid"]))
+@settings(max_examples=20, deadline=None)
+def test_moe_gshard_matches_dense(e, k, router):
+    k = min(k, e)
+    spec = MoESpec(num_experts=e, top_k=k, d_ff=32, capacity_factor=8.0,
+                   router=router)
+    p = moe.init(jax.random.PRNGKey(e * 7 + k), spec, 16)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 16))
+    yd, auxd = moe.apply_dense(spec, p, x)
+    yg, auxg = moe.apply_gshard(spec, p, x, group_size=16)
+    np.testing.assert_allclose(np.asarray(yd), np.asarray(yg), atol=1e-4,
+                               rtol=1e-3)
+    np.testing.assert_allclose(float(auxd), float(auxg), rtol=1e-4)
+
+
+def test_moe_capacity_drops_tokens():
+    """With capacity 8 rounded minimum, tiny capacity factor must drop."""
+    spec = MoESpec(num_experts=2, top_k=1, d_ff=16, capacity_factor=0.01)
+    p = moe.init(jax.random.PRNGKey(0), spec, 8)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 8))
+    yg, _ = moe.apply_gshard(spec, p, x, group_size=64)
+    yd, _ = moe.apply_dense(spec, p, x)
+    # some tokens got zero output (dropped)
+    norms = jnp.linalg.norm(yg, axis=-1)
+    assert float(jnp.min(norms)) < 1e-6
+
+
+def test_moe_load_balance_loss_uniform_is_one():
+    """Perfectly uniform routing gives aux ≈ E · E·(1/E·1/E) = 1."""
+    e = 4
+    spec = MoESpec(num_experts=e, top_k=1, d_ff=8)
+    probs = jnp.full((1, 64, e), 1.0 / e)
+    idx = jnp.arange(64).reshape(1, 64, 1) % e
+    aux = moe.load_balance_loss(spec, probs, idx)
+    np.testing.assert_allclose(float(aux), 1.0, rtol=1e-5)
+
+
+def test_moe_shared_expert_always_applied():
+    spec = MoESpec(num_experts=2, top_k=1, d_ff=16, num_shared=1,
+                   d_ff_shared=16, capacity_factor=8.0)
+    p = moe.init(jax.random.PRNGKey(0), spec, 8)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 8))
+    y_with, _ = moe.apply_gshard(spec, p, x, group_size=4)
+    p2 = dict(p)
+    p2["shared"] = jax.tree.map(jnp.zeros_like, p["shared"])
+    y_without, _ = moe.apply_gshard(spec, p2, x, group_size=4)
+    assert float(jnp.max(jnp.abs(y_with - y_without))) > 1e-6
+
+
+# ---------------------------------------------------------------------------
+# recurrences
+# ---------------------------------------------------------------------------
+
+def test_rglru_scan_matches_stepwise():
+    spec = RGLRUSpec(num_heads=2, conv_width=4)
+    d = 16
+    p = rglru.init(jax.random.PRNGKey(0), spec, d)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, d))
+    y_full, cache_full = rglru.apply_full(spec, p, x, d)
+    cache = rglru.init_cache(spec, d, 2)
+    outs = []
+    for t in range(12):
+        yt, cache = rglru.apply_decode(spec, p, x[:, t:t+1], cache, d)
+        outs.append(yt)
+    y_step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_step),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(cache_full["h"]),
+                               np.asarray(cache["h"]), atol=1e-4)
+
+
+def test_ssm_full_matches_stepwise():
+    spec = SSMSpec(d_state=8, d_conv=4, expand=2, head_dim=8, chunk=4)
+    d = 16
+    p = ssm.init(jax.random.PRNGKey(0), spec, d)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, d))
+    y_full, cache_full = ssm.apply_full(spec, p, x, d)
+    cache = ssm.init_cache(spec, d, 2)
+    outs = []
+    for t in range(8):
+        yt, cache = ssm.apply_decode(spec, p, x[:, t:t+1], cache, d)
+        outs.append(yt)
+    y_step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_step),
+                               atol=1e-3, rtol=1e-2)
+    np.testing.assert_allclose(np.asarray(cache_full["ssm"]),
+                               np.asarray(cache["ssm"]), atol=1e-3, rtol=1e-2)
