@@ -1,4 +1,4 @@
-"""Paper §3.3 + supplement ablations.
+"""Paper §3.3 + supplement ablations, on the `repro.cache` policy API.
 
 1. **Calibration sample size**: the paper observes ~10 samples suffice and
    more samples only tighten the CI, not the mean — we regenerate the
@@ -16,9 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro import configs
-from repro.core import calibration, schedule as S, solvers
-from repro.core.executor import SmoothCacheExecutor
+from repro import cache, configs
+from repro.core import solvers
 from repro.data import BlobLatents
 
 
@@ -29,23 +28,24 @@ def run():
     nclass = cfg.num_classes
 
     # ---- 1. calibration sample size ----
-    solver = solvers.ddim(50)
-    ex = SmoothCacheExecutor(cfg, solver, cfg_scale=1.5)
-    ref_curves = None
+    policy = cache.SmoothCache(alpha=0.15, k_max=3)
+    pipe = cache.DiffusionPipeline(cfg, solvers.ddim(50), policy,
+                                   cfg_scale=1.5)
     ref_sched = None
     for n in (20, 10, 5, 2):
         label = jnp.arange(n) % nclass
-        curves, per_sample, _ = calibration.calibrate(
-            ex, params, jax.random.PRNGKey(7), n, cond_args={"label": label})
-        sch = S.smoothcache(curves, alpha=0.15, k_max=3)
+        art = pipe.calibrate(params, jax.random.PRNGKey(7), n,
+                             cond_args={"label": label})
+        sch = art.schedule
         if ref_sched is None:
-            ref_curves, ref_sched = curves, sch
+            ref_sched = sch
             agree = 1.0
         else:
             bits = np.concatenate([sch.skip[t] for t in sorted(sch.skip)])
             ref = np.concatenate([ref_sched.skip[t]
                                   for t in sorted(ref_sched.skip)])
             agree = float(np.mean(bits == ref))
+        per_sample = pipe.per_sample
         ci = np.nanmean([1.96 * np.nanstd(per_sample[t][:, 1:, 1], axis=0)
                          / max(np.sqrt(n), 1) for t in per_sample])
         common.emit(f"ablation/calib_n{n}", 0.0,
@@ -55,24 +55,24 @@ def run():
     data = BlobLatents(cfg.latent_shape, nclass, 32, seed=5)
     ref_x0, ref_label = data.batch_at(0)
     for steps in (30, 50, 70):
-        solver = solvers.ddim(steps)
-        ex = SmoothCacheExecutor(cfg, solver, cfg_scale=1.5)
+        pipe = cache.DiffusionPipeline(cfg, solvers.ddim(steps),
+                                       "smoothcache:alpha=0.15",
+                                       cfg_scale=1.5)
         label = jnp.arange(8) % nclass
-        curves, _, _ = calibration.calibrate(
-            ex, params, jax.random.PRNGKey(8), 8, cond_args={"label": label})
+        pipe.calibrate(params, jax.random.PRNGKey(8), 8,
+                       cond_args={"label": label})
 
         def fd_of(sch):
-            x = ex.sample_compiled(params, jax.random.PRNGKey(9), 32,
-                                   schedule=sch, label=ref_label)
+            x = pipe.generate(params, jax.random.PRNGKey(9), 32,
+                              schedule=sch, label=ref_label)
             return common.frechet_distance(np.asarray(x), np.asarray(ref_x0))
 
         fd0 = fd_of(None)
         for n in (2, 3):
-            fora = S.fora(cfg.layer_types(), steps, n)
+            fora = pipe.schedule_for(f"static:n={n}")
             fd_f = fd_of(fora)
             frac = np.mean([fora.compute_fraction(t) for t in fora.skip])
-            alpha = S.alpha_for_budget(curves, frac, k_max=3)
-            sc = S.smoothcache(curves, alpha, k_max=3)
+            sc = pipe.schedule_for(f"budget:target={frac}")
             fd_s = fd_of(sc)
             common.emit(
                 f"ablation/pareto_s{steps}_frac{frac:.2f}", 0.0,

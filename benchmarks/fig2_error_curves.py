@@ -2,7 +2,9 @@
 from 10 calibration samples, across the three modality models.
 
 Emits per-type curve summaries + the cross-sample CI width (the paper's
-key observation: curves are nearly input-independent, CI ≪ mean)."""
+key observation: curves are nearly input-independent, CI ≪ mean).  The
+curves come straight out of `DiffusionPipeline.calibrate`'s artifact, and
+the full artifact (curves + provenance) is what gets dumped to disk."""
 from __future__ import annotations
 
 import json
@@ -13,9 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro import configs
-from repro.core import calibration, solvers
-from repro.core.executor import SmoothCacheExecutor
+from repro import cache, configs
+from repro.core import solvers
 from repro.data import BlobLatents, CondLatents
 
 SETUPS = [
@@ -43,11 +44,15 @@ def run():
             _, memory = data.batch_at(0)
             cond = {"memory": memory}
         solver = solvers.SOLVERS[solver_name](steps)
-        ex = SmoothCacheExecutor(cfg, solver, cfg_scale=cfg_scale)
-        curves, per_sample, _ = calibration.calibrate(
-            ex, params, jax.random.PRNGKey(1), 10, cond_args=cond)
+        pipe = cache.DiffusionPipeline(cfg, solver, "smoothcache:alpha=0.18",
+                                       cfg_scale=cfg_scale)
+        artifact = pipe.calibrate(params, jax.random.PRNGKey(1), 10,
+                                  cond_args=cond)
+        artifact.save(os.path.join(common.RESULTS_DIR, "fig2",
+                                   f"{arch}.cache.json"))
+        per_sample = pipe.per_sample
         dump = {}
-        for t, c in curves.items():
+        for t, c in artifact.curves.items():
             ps = per_sample[t][:, :, 1]                 # lag-1, (B, S)
             mean = np.nanmean(ps, axis=0)
             ci = 1.96 * np.nanstd(ps, axis=0) / np.sqrt(ps.shape[0])

@@ -11,6 +11,10 @@ validates the paper's headline ratios:
 Quality + wall-time speedup are measured end-to-end on a small DiT trained
 on synthetic class-conditional latents (no ImageNet weights offline):
 Fréchet-proxy of cached vs uncached samples at matched compute.
+
+All caching flows through the `repro.cache` policy API: one
+`DiffusionPipeline.calibrate` pass, then every Table-1 row is a
+`CachePolicy` resolved against the same calibration artifact.
 """
 from __future__ import annotations
 
@@ -19,43 +23,36 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro import configs
-from repro.core import calibration, diffusion, schedule as S, solvers
-from repro.core.executor import SmoothCacheExecutor
+from repro import cache, configs
+from repro.core import solvers
 from repro.data import BlobLatents
 from repro.utils import flops
 
 PAPER_ROWS_50 = [
-    # (name, paper TMACs, paper ratio to No-Cache)
-    ("no_cache", 365.59, 1.000),
-    ("smoothcache_a0.08", 336.37, 0.920),
-    ("fora_n2", 190.25, 0.520),
-    ("smoothcache_a0.18", 175.65, 0.480),
-    ("fora_n3", 131.81, 0.361),
-    ("smoothcache_a0.22", 131.81, 0.361),
+    # (name, policy spec, paper TMACs, paper ratio to No-Cache)
+    ("no_cache", "none", 365.59, 1.000),
+    ("smoothcache_a0.08", None, 336.37, 0.920),
+    ("fora_n2", "static:n=2", 190.25, 0.520),
+    ("smoothcache_a0.18", None, 175.65, 0.480),
+    ("fora_n3", "static:n=3", 131.81, 0.361),
+    ("smoothcache_a0.22", None, 131.81, 0.361),
 ]
 
 
-def full_config_tmacs(curves, steps: int = 50):
+def full_config_tmacs(pipe: cache.DiffusionPipeline):
     """Analytic TMACs of each Table-1 schedule on the full DiT-XL config."""
     cfg = configs.get("dit-xl-256")
-    types = cfg.layer_types()
     n_tok = 256
     rows = []
-    base = flops.sampler_tmacs(cfg, S.no_cache(types, steps), n_tok, 1,
-                               cfg_scale=1.5)
-    for name, paper_tmacs, paper_ratio in PAPER_ROWS_50:
-        if name == "no_cache":
-            sch = S.no_cache(types, steps)
-        elif name.startswith("fora"):
-            sch = S.fora(types, steps, int(name[-1]))
-        else:
+    base_sch = pipe.schedule_for("none")
+    base = flops.sampler_tmacs(cfg, base_sch, n_tok, 1, cfg_scale=1.5)
+    for name, spec, paper_tmacs, paper_ratio in PAPER_ROWS_50:
+        if spec is None:
             # paper α values are on DiT-XL's own error curves; we target the
             # paper's compute fraction via the α search on OUR curves, which
             # validates Eq. 4 + the MACs accounting end to end
-            target = paper_ratio
-            alpha = S.alpha_for_budget(curves, target, k_max=3)
-            sch = S.smoothcache(curves, alpha, k_max=3)
+            spec = f"budget:target={paper_ratio}"
+        sch = pipe.schedule_for(spec)
         t = flops.sampler_tmacs(cfg, sch, n_tok, 1, cfg_scale=1.5)
         rows.append((name, t, t / base, paper_ratio))
     return rows
@@ -65,15 +62,15 @@ def run():
     cfg = configs.get("dit-xl-256", "smoke")
     key = jax.random.PRNGKey(0)
     params, sched, losses = common.train_small_dit(cfg, key, steps=120)
-    solver = solvers.ddim(50)
-    ex = SmoothCacheExecutor(cfg, solver, cfg_scale=1.5)
+    pipe = cache.DiffusionPipeline(cfg, solvers.ddim(50),
+                                   "smoothcache:alpha=0.18", cfg_scale=1.5)
     nclass = max(cfg.num_classes, 1)
     label = jnp.arange(8) % nclass
 
-    curves, _, _ = calibration.calibrate(ex, params, jax.random.PRNGKey(1), 8,
-                                         cond_args={"label": label})
+    pipe.calibrate(params, jax.random.PRNGKey(1), 8,
+                   cond_args={"label": label})
     # --- TMACs ratios on the FULL config ---
-    for name, t, ratio, paper in full_config_tmacs(curves):
+    for name, t, ratio, paper in full_config_tmacs(pipe):
         common.emit(f"table1/{name}/tmacs", 0.0,
                     f"tmacs={t:.2f};ratio={ratio:.3f};paper_ratio={paper:.3f}")
 
@@ -82,8 +79,8 @@ def run():
     ref_x0, ref_label = data.batch_at(0)
 
     def sample_with(schedule):
-        return ex.sample_compiled(params, jax.random.PRNGKey(2), 64,
-                                  schedule=schedule, label=ref_label)
+        return pipe.generate(params, jax.random.PRNGKey(2), 64,
+                             schedule=schedule, label=ref_label)
 
     base = sample_with(None)
     t_base = common.time_call(lambda: sample_with(None), iters=2)
@@ -91,7 +88,7 @@ def run():
     common.emit("table1/no_cache/e2e", t_base, f"frechet={fd_base:.4f}")
 
     for alpha in (0.08, 0.18, 0.35):
-        sch = S.smoothcache(curves, alpha, k_max=3)
+        sch = pipe.schedule_for(f"smoothcache:alpha={alpha}")
         x = sample_with(sch)
         t = common.time_call(lambda: sample_with(sch), iters=2)
         fd = common.frechet_distance(np.asarray(x), np.asarray(ref_x0))
@@ -99,7 +96,7 @@ def run():
         common.emit(f"table1/smoothcache_a{alpha}/e2e", t,
                     f"frechet={fd:.4f};speedup={t_base/t:.2f};compute_frac={frac:.3f}")
     for n in (2, 3):
-        sch = S.fora(cfg.layer_types(), 50, n)
+        sch = pipe.schedule_for(f"static:n={n}")
         x = sample_with(sch)
         t = common.time_call(lambda: sample_with(sch), iters=2)
         fd = common.frechet_distance(np.asarray(x), np.asarray(ref_x0))

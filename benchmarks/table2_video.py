@@ -3,7 +3,9 @@
 TMACs ratios on the full OpenSora-like STDiT config (paper: α=0.02 →
 1388.5/1612.1 = 0.861; α=0.03 → 1321.1/1612.1 = 0.819) plus measured
 speedup / PSNR-vs-no-cache proxies (the paper's LPIPS/PSNR/SSIM are
-computed relative to non-cached videos) on a small trained model.
+computed relative to non-cached videos) on a small trained model.  Caching
+is driven by `repro.cache` policies resolved against one calibration
+artifact.
 """
 from __future__ import annotations
 
@@ -12,9 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro import configs
-from repro.core import calibration, diffusion, schedule as S, solvers
-from repro.core.executor import SmoothCacheExecutor
+from repro import cache, configs
+from repro.core import solvers
 from repro.data import CondLatents
 from repro.utils import flops
 
@@ -24,7 +25,6 @@ PAPER = [("a0.02", 0.861), ("a0.03", 0.819)]
 def run():
     full = configs.get("opensora-v12")
     t_, s_ = 16, (32 // full.patch) ** 2
-    types = full.layer_types()
     steps = 30
 
     cfg = configs.get("opensora-v12", "smoke")
@@ -32,36 +32,36 @@ def run():
     data = CondLatents(cfg.latent_shape, cfg.cond_dim, 8, 8)
     params, _, losses = common.train_small_dit(cfg, key, steps=100,
                                                data=data, loss_kind="rf")
-    solver = solvers.rectified_flow(steps)
-    ex = SmoothCacheExecutor(cfg, solver)
+    pipe = cache.DiffusionPipeline(cfg, solvers.rectified_flow(steps),
+                                   "smoothcache:alpha=0.1,k_max=5")
     x0, memory = data.batch_at(0)
-    curves, per_sample, _ = calibration.calibrate(
-        ex, params, jax.random.PRNGKey(1), 8, cond_args={"memory": memory})
-    assert set(curves) == {"s_attn", "s_xattn", "s_ffn",
-                           "t_attn", "t_xattn", "t_ffn"}, sorted(curves)
+    artifact = pipe.calibrate(params, jax.random.PRNGKey(1), 8,
+                              cond_args={"memory": memory})
+    assert set(artifact.curves) == {"s_attn", "s_xattn", "s_ffn",
+                                    "t_attn", "t_xattn", "t_ffn"}, \
+        sorted(artifact.curves)
 
     ntok = t_ * s_
-    base = flops.sampler_tmacs(full, S.no_cache(types, steps), ntok, 1,
+    base = flops.sampler_tmacs(full, pipe.schedule_for("none"), ntok, 1,
                                video_shape=(t_, s_))
     common.emit("table2/no_cache/tmacs", 0.0,
                 f"tmacs={base:.1f};paper=1612.1_unit_note")
     for name, paper_ratio in PAPER:
-        alpha = S.alpha_for_budget(curves, paper_ratio, k_max=5)
-        sch = S.smoothcache(curves, alpha, k_max=5)
+        sch = pipe.schedule_for(f"budget:target={paper_ratio},k_max=5")
         t = flops.sampler_tmacs(full, sch, ntok, 1, video_shape=(t_, s_))
         common.emit(f"table2/smoothcache_{name}/tmacs", 0.0,
                     f"tmacs={t:.1f};ratio={t/base:.3f};paper_ratio={paper_ratio:.3f}")
 
     # e2e on the small model: PSNR relative to non-cached output
     def sample_with(schedule):
-        return ex.sample_compiled(params, jax.random.PRNGKey(2), 4,
-                                  schedule=schedule, memory=memory[:4])
+        return pipe.generate(params, jax.random.PRNGKey(2), 4,
+                             schedule=schedule, memory=memory[:4])
 
     ref = sample_with(None)
     t_base = common.time_call(lambda: sample_with(None), iters=2)
     common.emit("table2/no_cache/e2e", t_base, "psnr=inf")
     for alpha in (0.1, 0.3):
-        sch = S.smoothcache(curves, alpha, k_max=5)
+        sch = pipe.schedule_for(f"smoothcache:alpha={alpha},k_max=5")
         x = sample_with(sch)
         t = common.time_call(lambda: sample_with(sch), iters=2)
         mse = float(jnp.mean((x - ref) ** 2))

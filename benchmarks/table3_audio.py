@@ -3,7 +3,8 @@
 TMACs ratios on the full config (paper: α=0.15 → 170.75/209.82 = 0.814;
 α=0.30 → 136.16/209.82 = 0.649) + e2e speedup and spectro-proxy quality
 (Fréchet on latent features vs the data distribution) on a small trained
-audio DiT.
+audio DiT.  Caching is driven by `repro.cache` policies resolved against
+one calibration artifact.
 """
 from __future__ import annotations
 
@@ -12,9 +13,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro import configs
-from repro.core import calibration, schedule as S, solvers
-from repro.core.executor import SmoothCacheExecutor
+from repro import cache, configs
+from repro.core import solvers
 from repro.data import CondLatents
 from repro.utils import flops
 
@@ -23,7 +23,6 @@ PAPER = [("a0.15", 0.814), ("a0.30", 0.649)]
 
 def run():
     full = configs.get("stable-audio-open")
-    types = full.layer_types()
     steps = 100
     ntok = full.latent_shape[0]
 
@@ -31,33 +30,32 @@ def run():
     key = jax.random.PRNGKey(0)
     data = CondLatents(cfg.latent_shape, cfg.cond_dim, 8, 8)
     params, _, _ = common.train_small_dit(cfg, key, steps=100, data=data)
-    solver = solvers.dpmpp_3m_sde(steps)
-    ex = SmoothCacheExecutor(cfg, solver, cfg_scale=7.0)
+    pipe = cache.DiffusionPipeline(cfg, solvers.dpmpp_3m_sde(steps),
+                                   "smoothcache:alpha=0.15", cfg_scale=7.0)
     x0, memory = data.batch_at(0)
-    curves, _, _ = calibration.calibrate(ex, params, jax.random.PRNGKey(1), 8,
-                                         cond_args={"memory": memory})
-    assert set(curves) == {"attn", "xattn", "ffn"}
+    artifact = pipe.calibrate(params, jax.random.PRNGKey(1), 8,
+                              cond_args={"memory": memory})
+    assert set(artifact.curves) == {"attn", "xattn", "ffn"}
 
-    base = flops.sampler_tmacs(full, S.no_cache(types, steps), ntok, 1,
+    base = flops.sampler_tmacs(full, pipe.schedule_for("none"), ntok, 1,
                                cfg_scale=7.0)
     common.emit("table3/no_cache/tmacs", 0.0, f"tmacs={base:.1f};paper=209.82_unit_note")
     for name, paper_ratio in PAPER:
-        alpha = S.alpha_for_budget(curves, paper_ratio, k_max=3)
-        sch = S.smoothcache(curves, alpha, k_max=3)
+        sch = pipe.schedule_for(f"budget:target={paper_ratio}")
         t = flops.sampler_tmacs(full, sch, ntok, 1, cfg_scale=7.0)
         common.emit(f"table3/smoothcache_{name}/tmacs", 0.0,
                     f"tmacs={t:.1f};ratio={t/base:.3f};paper_ratio={paper_ratio:.3f}")
 
     def sample_with(schedule):
-        return ex.sample_compiled(params, jax.random.PRNGKey(2), 8,
-                                  schedule=schedule, memory=memory)
+        return pipe.generate(params, jax.random.PRNGKey(2), 8,
+                             schedule=schedule, memory=memory)
 
     ref = sample_with(None)
     t_base = common.time_call(lambda: sample_with(None), iters=2)
     fd0 = common.frechet_distance(np.asarray(ref), np.asarray(x0))
     common.emit("table3/no_cache/e2e", t_base, f"frechet={fd0:.4f}")
     for alpha in (0.15, 0.30):
-        sch = S.smoothcache(curves, alpha, k_max=3)
+        sch = pipe.schedule_for(f"smoothcache:alpha={alpha}")
         x = sample_with(sch)
         t = common.time_call(lambda: sample_with(sch), iters=2)
         fd = common.frechet_distance(np.asarray(x), np.asarray(x0))

@@ -1,20 +1,23 @@
 """End-to-end SERVING driver (the paper's inference kind): a batched
-diffusion-generation service with SmoothCache acceleration.
+diffusion-generation service with SmoothCache acceleration, built on the
+`repro.cache` policy API.
 
-A queue of generation requests (class label or text-memory conditioned)
-is served in fixed-size batches; the executor reuses one calibrated
-schedule across all requests (schedules are input-independent — the
-paper's core observation).  Reports per-request latency with and without
-caching.
+A calibration process runs once and saves a `CacheArtifact` (curves +
+resolved schedule + provenance); the serving process *loads* the artifact —
+it never recalibrates — and drains a queue of generation requests in
+fixed-size batches.  Schedules are input-independent (the paper's core
+observation), so one artifact serves every request.  Reports per-request
+latency with and without caching.
 
     PYTHONPATH=src:. python examples/serve_diffusion.py --requests 24 \
-        --batch 8 --alpha 0.18
+        --batch 8 --policy "smoothcache:alpha=0.18"
 """
 import sys
 sys.path[:0] = ["src", "."]
 
 import argparse
 import dataclasses
+import os
 import time
 from typing import List, Optional
 
@@ -23,9 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro import configs
-from repro.core import calibration, schedule as S, solvers
-from repro.core.executor import SmoothCacheExecutor
+from repro import cache, configs
+from repro.core import solvers
 
 
 @dataclasses.dataclass
@@ -39,13 +41,13 @@ class Request:
 class DiffusionServer:
     """Static-batch serving loop: drain the queue in batches of B."""
 
-    def __init__(self, cfg, params, solver, schedule, batch: int,
-                 cfg_scale: float = 1.5):
-        self.cfg = cfg
+    def __init__(self, pipeline: cache.DiffusionPipeline, params, batch: int,
+                 cached: bool = True):
+        self.pipe = pipeline
         self.params = params
         self.batch = batch
-        self.schedule = schedule
-        self.ex = SmoothCacheExecutor(cfg, solver, cfg_scale=cfg_scale)
+        # resolved schedule, or None for the uncached baseline
+        self.schedule = pipeline.schedule if cached else None
 
     def serve(self, queue: List[Request], key):
         results = {}
@@ -56,9 +58,9 @@ class DiffusionServer:
             if len(chunk) < self.batch:           # pad the tail batch
                 pad = self.batch - len(chunk)
                 labels = jnp.concatenate([labels, jnp.zeros(pad, jnp.int32)])
-            x = self.ex.sample(self.params, jax.random.fold_in(key, i),
-                               self.batch, schedule=self.schedule,
-                               label=labels)
+            x = self.pipe.generate(
+                self.params, jax.random.fold_in(key, i), self.batch,
+                label=labels, compiled=False, schedule=self.schedule)
             jax.block_until_ready(x)
             now = time.time()
             for j, r in enumerate(chunk):
@@ -72,23 +74,40 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--alpha", type=float, default=0.18)
+    ap.add_argument("--policy", default="smoothcache:alpha=0.18",
+                    help="cache policy spec, e.g. 'smoothcache:alpha=0.18', "
+                         "'static:n=2', 'budget:target=0.5', or "
+                         "'per_type(attn=smoothcache(alpha=0.1),"
+                         "ffn=static(n=2))'")
     ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--artifact", default="",
+                    help="path for the calibration artifact "
+                         "(default: results/serve_<arch>.cache.json)")
     args = ap.parse_args()
 
+    cache.get(args.policy)                 # fail fast on a bad spec
     cfg = configs.get("dit-xl-256", "smoke")
     print("[serve] training small DiT ...")
     params, _, _ = common.train_small_dit(cfg, jax.random.PRNGKey(0),
                                           steps=120)
-    solver = solvers.ddim(args.steps)
 
-    # one calibration pass → one schedule reused by every request
-    ex = SmoothCacheExecutor(cfg, solver, cfg_scale=1.5)
-    curves, _, _ = calibration.calibrate(
-        ex, params, jax.random.PRNGKey(1), 8,
-        cond_args={"label": jnp.arange(8) % cfg.num_classes})
-    sch = S.smoothcache(curves, args.alpha, k_max=3)
-    print("[serve] " + sch.summary().replace("\n", "\n[serve] "))
+    # --- calibration process: calibrate once, save the artifact -------------
+    calib = cache.DiffusionPipeline(cfg, solvers.ddim(args.steps),
+                                    args.policy, cfg_scale=1.5)
+    calib.calibrate(params, jax.random.PRNGKey(1), 8,
+                    cond_args={"label": jnp.arange(8) % cfg.num_classes})
+    path = args.artifact or os.path.join(common.RESULTS_DIR,
+                                         f"serve_{cfg.name}.cache.json")
+    calib.save_artifact(path)
+    print(f"[serve] saved {path}")
+    print("[serve] " + calib.schedule.summary().replace("\n", "\n[serve] "))
+
+    # --- serving process: load the artifact, never recalibrate --------------
+    pipe = cache.DiffusionPipeline(cfg, solvers.ddim(args.steps),
+                                   args.policy, cfg_scale=1.5)
+    pipe.load_artifact(path)
+    print(f"[serve] loaded artifact (compute fraction "
+          f"{pipe.compute_fraction():.2f})")
 
     rng = np.random.RandomState(0)
     def make_queue():
@@ -96,8 +115,8 @@ def main():
         return [Request(i, int(rng.randint(cfg.num_classes)), t0)
                 for i in range(args.requests)]
 
-    for name, schedule in [("no_cache", None), (f"alpha={args.alpha}", sch)]:
-        server = DiffusionServer(cfg, params, solver, schedule, args.batch)
+    for name, cached in [("no_cache", False), (args.policy, True)]:
+        server = DiffusionServer(pipe, params, args.batch, cached=cached)
         queue = make_queue()
         server.serve(queue, jax.random.PRNGKey(2))     # warmup compile
         queue = make_queue()
@@ -105,7 +124,7 @@ def main():
         server.serve(queue, jax.random.PRNGKey(3))
         dt = time.time() - t0
         lat = np.mean([r.done - r.submitted for r in queue])
-        print(f"[serve] {name:14s}: {args.requests} requests in {dt:.2f}s "
+        print(f"[serve] {name:24s}: {args.requests} requests in {dt:.2f}s "
               f"({dt/args.requests*1e3:.0f} ms/req, mean latency {lat:.2f}s)")
 
 

@@ -1,0 +1,24 @@
+"""repro.cache — first-class caching strategies for diffusion transformers.
+
+Quickstart::
+
+    from repro import cache
+    from repro.core import solvers
+
+    policy = cache.get("smoothcache:alpha=0.18")          # or cache.SmoothCache(0.18)
+    pipe = cache.DiffusionPipeline(cfg, solvers.ddim(50), policy,
+                                   cfg_scale=1.5)
+    artifact = pipe.calibrate(params, key, batch=10,
+                              cond_args={"label": labels})
+    artifact.save("dit_xl_ddim50.cache.json")             # serving reloads this
+    images = pipe.generate(params, key2, batch=32, label=labels)
+
+See ``policy.py`` for the policy zoo and ``registry.py`` for the spec
+grammar (flat ``name:k=v,...`` or nested ``per_type(attn=...,ffn=...)``).
+"""
+from repro.cache.artifact import CacheArtifact  # noqa: F401
+from repro.cache.pipeline import DiffusionPipeline, Pipeline  # noqa: F401
+from repro.cache.policy import (  # noqa: F401
+    BudgetedSmoothCache, CachePolicy, NoCache, PerLayerType, SmoothCache,
+    StaticInterval)
+from repro.cache.registry import from_config, get, names, register  # noqa: F401

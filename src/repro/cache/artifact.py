@@ -1,0 +1,113 @@
+"""Serializable calibration artifacts.
+
+A :class:`CacheArtifact` bundles everything needed to *reproduce* a caching
+schedule without re-running calibration: the per-type mean error curves, the
+resolved schedule, and provenance (architecture, solver, step count, policy
+hyperparameters).  Serving loads the artifact and goes straight to compiled
+sampling; curves are stored at full float64 precision (Python ``repr`` floats
+are shortest-roundtrip) so a reload rebuilds the *bit-identical* schedule —
+verified by ``tests/test_cache_api.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.cache import registry
+from repro.cache.policy import CachePolicy
+from repro.core.schedule import Schedule
+
+FORMAT_VERSION = 1
+
+
+@dataclass
+class CacheArtifact:
+    """Calibration curves + resolved schedule + provenance."""
+    arch: str                                 # ModelConfig.name
+    solver: str                               # Solver.name
+    num_steps: int
+    policy: Dict                              # CachePolicy.to_config()
+    curves: Dict[str, np.ndarray]             # {type: (S, K+1) float64}
+    schedule: Optional[Schedule] = None       # resolved skip masks
+    meta: Dict = field(default_factory=dict)  # calib_batch, k_max, cfg_scale…
+
+    # -- resolution ----------------------------------------------------------
+
+    def resolve(self, policy: Optional[CachePolicy] = None) -> Schedule:
+        """Rebuild the schedule from the stored curves — with the stored
+        policy by default, or any other policy against the same curves."""
+        p = registry.get(policy) if policy is not None \
+            else registry.from_config(self.policy)
+        types = sorted(self.curves) if self.curves else \
+            list(self.schedule.skip) if self.schedule else []
+        return p.build(types, self.num_steps,
+                       self.curves if self.curves else None)
+
+    # -- (de)serialization ---------------------------------------------------
+
+    def to_json(self) -> str:
+        def rows(c):
+            # NaN (lag k > step s entries) → null, keeping the file strict
+            # JSON for non-Python consumers; finite floats round-trip
+            # exactly via shortest-roundtrip repr
+            return [[None if np.isnan(v) else v for v in row]
+                    for row in np.asarray(c, np.float64).tolist()]
+        return json.dumps({
+            "format_version": FORMAT_VERSION,
+            "arch": self.arch,
+            "solver": self.solver,
+            "num_steps": self.num_steps,
+            "policy": self.policy,
+            "curves": {t: rows(c) for t, c in sorted(self.curves.items())},
+            "schedule": (json.loads(self.schedule.to_json())
+                         if self.schedule is not None else None),
+            "meta": self.meta,
+        }, sort_keys=True, allow_nan=False)
+
+    @staticmethod
+    def from_json(s: str) -> "CacheArtifact":
+        d = json.loads(s)
+        ver = d.get("format_version", 0)
+        if ver > FORMAT_VERSION:
+            raise ValueError(f"artifact format v{ver} is newer than this "
+                             f"code (v{FORMAT_VERSION})")
+        sch = d.get("schedule")
+        def arr(c):
+            return np.asarray([[np.nan if v is None else float(v)
+                                for v in row] for row in c], np.float64)
+        return CacheArtifact(
+            arch=d["arch"], solver=d["solver"], num_steps=d["num_steps"],
+            policy=d["policy"],
+            curves={t: arr(c) for t, c in d.get("curves", {}).items()},
+            schedule=(Schedule.from_json(json.dumps(sch))
+                      if sch is not None else None),
+            meta=d.get("meta", {}))
+
+    def save(self, path: str) -> str:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            f.write(self.to_json())
+        return path
+
+    @staticmethod
+    def load(path: str) -> "CacheArtifact":
+        with open(path) as f:
+            return CacheArtifact.from_json(f.read())
+
+    # -- convenience ---------------------------------------------------------
+
+    def summary(self) -> str:
+        p = registry.from_config(self.policy)
+        rows = [f"CacheArtifact(arch={self.arch}, solver={self.solver}, "
+                f"steps={self.num_steps}, policy={p.spec()})"]
+        if self.schedule is not None:
+            rows.append(self.schedule.summary())
+        return "\n".join(rows)
+
+    def with_schedule(self, schedule: Schedule) -> "CacheArtifact":
+        return dataclasses.replace(self, schedule=schedule)

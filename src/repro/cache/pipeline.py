@@ -1,0 +1,191 @@
+"""`DiffusionPipeline` — the one-object facade over calibrate → schedule →
+execute.
+
+Callsites used to hand-wire the SmoothCache loop::
+
+    ex = SmoothCacheExecutor(cfg, solver, cfg_scale=1.5)
+    curves, _, _ = calibration.calibrate(ex, params, key, 8, cond_args=...)
+    sch = schedule.smoothcache(curves, 0.18, k_max=3)
+    x = ex.sample_compiled(params, key2, batch, schedule=sch, label=...)
+
+With the facade the same flow is::
+
+    pipe = DiffusionPipeline(cfg, solver, policy="smoothcache:alpha=0.18",
+                             cfg_scale=1.5)
+    pipe.calibrate(params, key, batch=8, cond_args=...)   # → CacheArtifact
+    x = pipe.generate(params, key2, batch, label=...)
+
+and the calibration result is a serializable :class:`CacheArtifact`, so a
+serving process does ``pipe.load_artifact(path)`` and never recalibrates.
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping, Optional, Union
+
+import numpy as np
+
+from repro.cache import registry
+from repro.cache.artifact import CacheArtifact
+from repro.cache.policy import CachePolicy
+from repro.core import calibration as calibration_lib
+from repro.core import solvers as solvers_lib
+from repro.core.executor import SmoothCacheExecutor
+from repro.core.schedule import Schedule
+
+_UNSET = object()
+
+
+class DiffusionPipeline:
+    """Owns an executor + a :class:`CachePolicy` + (optionally) a resolved
+    :class:`CacheArtifact`, and exposes calibrate/generate."""
+
+    def __init__(self, cfg, solver, policy: Union[str, dict, CachePolicy]
+                 = "none", *, cfg_scale: Optional[float] = None,
+                 use_flash: bool = False, jit: bool = True):
+        if isinstance(solver, str):
+            raise TypeError(
+                f"solver must be a Solver object, e.g. "
+                f"solvers.{solver}(num_steps); got the string {solver!r}")
+        self.policy = registry.get(policy)
+        self.executor = SmoothCacheExecutor(
+            cfg, solver, cfg_scale=cfg_scale, use_flash=use_flash, jit=jit)
+        self.artifact: Optional[CacheArtifact] = None
+        self.per_sample: Optional[Dict[str, np.ndarray]] = None
+        self._schedule: Optional[Schedule] = None
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def cfg(self):
+        return self.executor.cfg
+
+    @property
+    def solver(self) -> solvers_lib.Solver:
+        return self.executor.solver
+
+    @property
+    def schedule(self) -> Optional[Schedule]:
+        """The resolved schedule, if calibration/preparation has run."""
+        return self._schedule
+
+    def summary(self) -> str:
+        head = (f"DiffusionPipeline({self.cfg.name}, {self.solver.name}"
+                f"x{self.solver.num_steps}, policy={self.policy.spec()})")
+        if self._schedule is not None:
+            return head + "\n" + self._schedule.summary()
+        return head
+
+    # -- calibration ---------------------------------------------------------
+
+    def calibrate(self, params, key, batch: int = 8, *,
+                  cond_args: Optional[Dict] = None,
+                  k_max: Optional[int] = None) -> CacheArtifact:
+        """Run one uncached calibration pass (paper uses 10 samples), resolve
+        the policy's schedule, and return a serializable artifact.  Also
+        stores per-sample curves on ``self.per_sample`` for CI analysis."""
+        k = k_max if k_max is not None else max(self.policy.k_max, 1)
+        curves, per_sample, _ = calibration_lib.calibrate(
+            self.executor, params, key, batch, cond_args=cond_args, k_max=k)
+        self.per_sample = per_sample
+        sch = self.policy.build(self.cfg.layer_types(),
+                                self.solver.num_steps,
+                                curves if self.policy.requires_calibration
+                                else None)
+        self.artifact = CacheArtifact(
+            arch=self.cfg.name, solver=self.solver.name,
+            num_steps=self.solver.num_steps,
+            policy=self.policy.to_config(), curves=curves, schedule=sch,
+            meta={"calib_batch": batch, "k_max": k,
+                  "cfg_scale": self.executor.cfg_scale})
+        self._schedule = sch
+        return self.artifact
+
+    def prepare(self, params=None, key=None, *, calib_batch: int = 8,
+                cond_args: Optional[Dict] = None) -> Schedule:
+        """Resolve the schedule without building an artifact — calibrates
+        only if the policy needs curves and no artifact is loaded."""
+        if self._schedule is not None:
+            return self._schedule
+        if self.policy.requires_calibration and self.artifact is None:
+            if params is None or key is None:
+                raise ValueError(
+                    f"policy {self.policy.spec()!r} needs calibration; pass "
+                    "(params, key) to prepare() or load_artifact() first")
+            self.calibrate(params, key, calib_batch, cond_args=cond_args)
+            return self._schedule
+        curves = self.artifact.curves if self.artifact is not None else None
+        self._schedule = self.policy.prepare(self.executor, curves=curves)
+        return self._schedule
+
+    def schedule_for(self, policy: Union[str, dict, CachePolicy]) -> Schedule:
+        """Resolve *another* policy against this pipeline's calibration
+        curves (benchmark sweeps: many α / budgets, one calibration)."""
+        p = registry.get(policy)
+        curves = self.artifact.curves if self.artifact is not None else None
+        return p.prepare(self.executor, curves=curves)
+
+    # -- artifact round-trip -------------------------------------------------
+
+    def save_artifact(self, path: str) -> str:
+        if self.artifact is None:
+            raise ValueError("no artifact: run calibrate() first")
+        return self.artifact.save(path)
+
+    def load_artifact(self, path_or_artifact: Union[str, CacheArtifact],
+                      *, strict: bool = True) -> CacheArtifact:
+        """Adopt a saved artifact: serving skips calibration entirely.  The
+        stored schedule is used verbatim when present; otherwise it is
+        re-resolved from the stored curves with this pipeline's policy."""
+        art = (path_or_artifact if isinstance(path_or_artifact, CacheArtifact)
+               else CacheArtifact.load(path_or_artifact))
+        if strict:
+            if art.arch != self.cfg.name:
+                raise ValueError(f"artifact was calibrated on {art.arch!r}, "
+                                 f"pipeline runs {self.cfg.name!r}")
+            if (art.solver != self.solver.name
+                    or art.num_steps != self.solver.num_steps):
+                raise ValueError(
+                    f"artifact solver {art.solver}x{art.num_steps} != "
+                    f"pipeline {self.solver.name}x{self.solver.num_steps}")
+        self.artifact = art
+        self._schedule = (art.schedule if art.schedule is not None
+                          else art.resolve(self.policy))
+        return art
+
+    # -- generation ----------------------------------------------------------
+
+    def generate(self, params, key, batch: int, *, label=None, memory=None,
+                 schedule=_UNSET, compiled: bool = True):
+        """Sample a batch under the pipeline's schedule.  ``schedule=`` (a
+        Schedule, a policy spec, or None for the uncached baseline)
+        overrides per-call; ``compiled=True`` uses the whole-sampler jit."""
+        if schedule is _UNSET:
+            sch = self._schedule
+            if sch is None and self.policy.requires_calibration:
+                raise ValueError(
+                    f"policy {self.policy.spec()!r} needs calibration — run "
+                    "calibrate()/load_artifact() before generate()")
+            if sch is None:
+                sch = self.policy.build(self.cfg.layer_types(),
+                                        self.solver.num_steps)
+                self._schedule = sch
+        elif schedule is None or isinstance(schedule, Schedule):
+            sch = schedule
+        else:
+            sch = self.schedule_for(schedule)
+        if compiled:
+            return self.executor.sample_compiled(
+                params, key, batch, schedule=sch, label=label, memory=memory)
+        return self.executor.sample(params, key, batch, schedule=sch,
+                                    label=label, memory=memory)
+
+    def compute_fraction(self) -> float:
+        """Mean fraction of layer evaluations actually computed."""
+        if self._schedule is None:
+            return 1.0
+        return float(np.mean([self._schedule.compute_fraction(t)
+                              for t in self._schedule.skip]))
+
+
+#: short alias used in docs/examples
+Pipeline = DiffusionPipeline

@@ -1,0 +1,141 @@
+"""String-spec registry for cache policies.
+
+``get("smoothcache:alpha=0.18")`` turns a declarative spec into a
+:class:`~repro.cache.policy.CachePolicy`.  Two equivalent grammars:
+
+* flat:    ``name`` or ``name:k=v,k=v``      (CLI-friendly)
+* nested:  ``name(k=v,k=v)`` where a value may itself be a spec —
+           ``per_type(attn=smoothcache(alpha=0.1),ffn=static(n=2))``
+
+``register`` adds new policies (future PRs: TeaCache-style dynamic
+policies, learned schedules, ...) without touching any callsite.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Union
+
+from repro.cache import policy as P
+
+_REGISTRY: Dict[str, Callable[..., P.CachePolicy]] = {}
+
+
+def register(name: str, *aliases: str):
+    """Decorator registering a policy factory under ``name`` (+ aliases)."""
+    def deco(factory):
+        for n in (name,) + aliases:
+            key = n.lower()
+            if key in _REGISTRY:
+                raise ValueError(f"cache policy {key!r} already registered")
+            _REGISTRY[key] = factory
+        return factory
+    return deco
+
+
+def names():
+    return sorted(_REGISTRY)
+
+
+# -- built-ins ---------------------------------------------------------------
+
+register("none", "no_cache", "nocache")(P.NoCache)
+register("static", "static_interval", "fora")(P.StaticInterval)
+register("smoothcache", "smooth_cache")(P.SmoothCache)
+register("budget", "budgeted", "budgeted_smoothcache")(P.BudgetedSmoothCache)
+
+
+@register("per_type", "per-type", "composite")
+def _per_type(default=None, **policies) -> P.PerLayerType:
+    coerce = lambda v: get(v) if isinstance(v, (str, dict)) else v
+    return P.PerLayerType({t: coerce(p) for t, p in policies.items()},
+                          default=coerce(default) if default is not None
+                          else None)
+
+
+# -- spec parsing ------------------------------------------------------------
+
+def _split_top(s: str, sep: str = ","):
+    """Split on ``sep`` at paren depth 0."""
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth < 0:
+                raise ValueError(f"unbalanced ')' in spec {s!r}")
+        if ch == sep and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if depth != 0:
+        raise ValueError(f"unbalanced '(' in spec {s!r}")
+    if cur or out:
+        out.append("".join(cur))
+    return [p.strip() for p in out if p.strip()]
+
+
+def _coerce(v: str):
+    """Typed coercion: nested spec > bool > int > float > str."""
+    if "(" in v or v.lower() in _REGISTRY:
+        return get(v)
+    low = v.lower()
+    if low in ("true", "false"):
+        return low == "true"
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            pass
+    return v
+
+
+def parse(spec: str):
+    """``spec`` → (name, kwargs)."""
+    spec = spec.strip()
+    if "(" in spec:
+        if not spec.endswith(")"):
+            raise ValueError(f"malformed policy spec {spec!r}")
+        name, inner = spec.split("(", 1)
+        args = _split_top(inner[:-1])
+    elif ":" in spec:
+        name, argstr = spec.split(":", 1)
+        args = _split_top(argstr)
+    else:
+        name, args = spec, []
+    kwargs = {}
+    for a in args:
+        if "=" not in a:
+            raise ValueError(f"policy arg {a!r} in {spec!r} is not k=v")
+        k, v = a.split("=", 1)
+        kwargs[k.strip()] = _coerce(v.strip())
+    return name.strip().lower(), kwargs
+
+
+def get(spec: Union[str, dict, P.CachePolicy]) -> P.CachePolicy:
+    """Resolve a policy from a spec string, a ``to_config()`` dict, or pass
+    an already-constructed policy through unchanged."""
+    if isinstance(spec, P.CachePolicy):
+        return spec
+    if isinstance(spec, dict):
+        return from_config(spec)
+    name, kwargs = parse(spec)
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown cache policy {name!r}; registered: {names()}")
+    return _REGISTRY[name](**kwargs)
+
+
+def from_config(cfg: dict) -> P.CachePolicy:
+    """Inverse of ``CachePolicy.to_config()`` (used by CacheArtifact)."""
+    cfg = dict(cfg)
+    name = cfg.pop("name").lower()
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown cache policy {name!r}; registered: {names()}")
+    if name in ("per_type", "per-type", "composite"):
+        subs = {t: from_config(c) for t, c in cfg.pop("policies", {}).items()}
+        default = cfg.pop("default", None)
+        return P.PerLayerType(
+            subs, default=from_config(default) if default else None)
+    return _REGISTRY[name](**cfg)

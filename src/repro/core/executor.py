@@ -181,7 +181,10 @@ class SmoothCacheExecutor:
         s_total = self.solver.num_steps
         if schedule is None:
             schedule = schedule_lib.no_cache(self.cfg.layer_types(), s_total)
-        ck = (hash(schedule.to_json()), batch,
+        # content-addressed compile cache: the canonical JSON string itself is
+        # the key (str hash() is process-salted and collides across schedules
+        # with equal hashes)
+        ck = (schedule.content_key(), batch,
               label is not None, memory is not None)
         if ck not in self._fns:
             fn = self.build_sampler_fn(schedule, batch=batch)

@@ -44,14 +44,22 @@ class Schedule:
     def to_json(self) -> str:
         return json.dumps({
             "name": self.name, "alpha": self.alpha, "num_steps": self.num_steps,
-            "skip": {t: v.astype(int).tolist() for t, v in self.skip.items()}})
+            "skip": {t: v.astype(int).tolist() for t, v in self.skip.items()}},
+            sort_keys=True)
+
+    def content_key(self) -> str:
+        """Canonical string identifying the schedule *content* (sorted keys,
+        deterministic float formatting) — safe to use as a compile-cache key,
+        unlike ``hash()`` which is salted per process for strings."""
+        return self.to_json()
 
     @staticmethod
     def from_json(s: str) -> "Schedule":
         d = json.loads(s)
         return Schedule(
             skip={t: np.asarray(v, bool) for t, v in d["skip"].items()},
-            num_steps=d["num_steps"], alpha=d["alpha"], name=d["name"])
+            num_steps=d["num_steps"], alpha=d.get("alpha"),
+            name=d.get("name", "schedule"))
 
 
 def no_cache(types: Sequence[str], num_steps: int) -> Schedule:
@@ -78,7 +86,13 @@ def smoothcache(error_curves: Mapping[str, np.ndarray], alpha: float,
     (NaN/inf where k > s).  A step is skipped iff the error vs. the step
     that currently fills the cache is below ``alpha`` and its lag ≤ k_max.
     """
+    if not error_curves:
+        raise ValueError(
+            "smoothcache() needs at least one layer-type error curve; got an "
+            "empty mapping (did calibration run on a model with no "
+            "SmoothCache-eligible layers?)")
     skip = {}
+    s_total = 0
     for t, err in error_curves.items():
         s_total = err.shape[0]
         k_lim = min(k_max, err.shape[1] - 1)

@@ -1,0 +1,82 @@
+"""Hypothesis compatibility shim.
+
+The seed environment does not ship ``hypothesis`` and tier-1 must run
+without installing anything.  When hypothesis is available we re-export it
+unchanged; otherwise we fall back to a minimal deterministic property
+runner covering exactly the strategy surface these tests use
+(``floats`` / ``integers`` / ``lists`` / ``sampled_from``): each ``@given``
+test is executed on a fixed-seed sample of inputs plus the interval
+endpoints.  No shrinking, no database — just enough to keep the property
+tests meaningful on a bare environment.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    import functools
+    import inspect
+
+    import numpy as np
+
+    _FALLBACK_MAX_EXAMPLES = 25
+
+    class _Strategy:
+        def __init__(self, sample, endpoints=()):
+            self.sample = sample            # rng -> value
+            self.endpoints = tuple(endpoints)
+
+    class st:  # noqa: N801 - mimics `strategies as st`
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)),
+                endpoints=(float(min_value), float(max_value)))
+
+        @staticmethod
+        def integers(min_value=0, max_value=10, **_):
+            return _Strategy(
+                lambda rng: int(rng.randint(min_value, max_value + 1)),
+                endpoints=(int(min_value), int(max_value)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, **_):
+            def sample(rng):
+                n = int(rng.randint(min_size, max_size + 1))
+                return [elements.sample(rng) for _ in range(n)]
+            return _Strategy(sample)
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: seq[rng.randint(len(seq))],
+                             endpoints=(seq[0], seq[-1]))
+
+    def settings(max_examples=_FALLBACK_MAX_EXAMPLES, **_):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            n = min(getattr(fn, "_max_examples", _FALLBACK_MAX_EXAMPLES),
+                    _FALLBACK_MAX_EXAMPLES)
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = np.random.RandomState(0)
+                # endpoint combos first (diagonal, not the full product)
+                for i in range(max(len(s.endpoints) for s in strats)):
+                    vals = [s.endpoints[min(i, len(s.endpoints) - 1)]
+                            if s.endpoints else s.sample(rng)
+                            for s in strats]
+                    fn(*args, *vals, **kwargs)
+                for _ in range(n):
+                    fn(*args, *[s.sample(rng) for s in strats], **kwargs)
+            # hide the strategy parameters from pytest's fixture resolution
+            wrapper.__signature__ = inspect.Signature()
+            wrapper.__wrapped__ = None
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

@@ -1,0 +1,313 @@
+"""Tests for the first-class cache-policy API (`repro.cache`):
+registry specs, policy semantics, artifact round-trips, composites, and
+pipeline-vs-hand-wired equivalence on the smoke DiT."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import cache, configs
+from repro.core import calibration, diffusion, schedule as S, solvers
+from repro.core.executor import SmoothCacheExecutor
+
+
+def _synthetic_curves(s_total=12, k_max=3, seed=0, types=("attn", "ffn")):
+    rng = np.random.RandomState(seed)
+    out = {}
+    for t in types:
+        c = np.full((s_total, k_max + 1), np.nan)
+        c[:, 0] = 0.0
+        for i in range(s_total):
+            for k in range(1, min(k_max, i) + 1):
+                c[i, k] = rng.uniform(0.01, 0.4) * k
+        out[t] = c
+    return out
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_flat_spec():
+    p = cache.get("smoothcache:alpha=0.18")
+    assert isinstance(p, cache.SmoothCache)
+    assert p.alpha == 0.18 and p.k_max == 3
+    p2 = cache.get("smoothcache:alpha=0.05,k_max=5")
+    assert p2.alpha == 0.05 and p2.k_max == 5
+
+
+def test_registry_aliases_and_passthrough():
+    assert isinstance(cache.get("none"), cache.NoCache)
+    assert isinstance(cache.get("fora:n=2"), cache.StaticInterval)
+    assert isinstance(cache.get("budget:target=0.5"),
+                      cache.BudgetedSmoothCache)
+    p = cache.SmoothCache(0.1)
+    assert cache.get(p) is p                       # policy passthrough
+    assert cache.get(p.to_config()) == p           # config dict round-trip
+
+
+def test_registry_unknown_name_raises():
+    with pytest.raises(KeyError, match="unknown cache policy"):
+        cache.get("teacache:alpha=1")
+    with pytest.raises(KeyError, match="unknown cache policy"):
+        cache.from_config({"name": "nope"})
+
+
+def test_registry_malformed_spec_raises():
+    with pytest.raises(ValueError):
+        cache.get("per_type(attn=static(n=2)")    # unbalanced paren
+    with pytest.raises(ValueError):
+        cache.get("static:2")                     # not k=v
+
+
+def test_registry_nested_spec():
+    p = cache.get("per_type(attn=smoothcache(alpha=0.1,k_max=2),"
+                  "ffn=static(n=2),default=none)")
+    assert isinstance(p, cache.PerLayerType)
+    assert isinstance(p.policies["attn"], cache.SmoothCache)
+    assert p.policies["attn"].k_max == 2
+    assert isinstance(p.policies["ffn"], cache.StaticInterval)
+    assert isinstance(p.default, cache.NoCache)
+    # canonical spec re-parses to an equal policy
+    assert cache.get(p.spec()) == p
+
+
+def test_spec_round_trip_all_builtins():
+    for spec in ("none", "static:n=3", "smoothcache:alpha=0.18,k_max=3",
+                 "budget:k_max=3,target=0.5"):
+        p = cache.get(spec)
+        assert cache.get(p.spec()) == p
+        assert cache.from_config(p.to_config()) == p
+
+
+# ---------------------------------------------------------------------------
+# policy semantics
+# ---------------------------------------------------------------------------
+
+def test_static_interval_equals_fora():
+    types = ("attn", "ffn")
+    for n in (1, 2, 3):
+        sch_p = cache.StaticInterval(n).build(types, 20)
+        sch_f = S.fora(types, 20, n)
+        for t in types:
+            np.testing.assert_array_equal(sch_p.skip[t], sch_f.skip[t])
+
+
+def test_smoothcache_policy_matches_schedule_fn():
+    curves = _synthetic_curves()
+    sch_p = cache.SmoothCache(0.2, k_max=3).build(["attn", "ffn"], 12, curves)
+    sch_f = S.smoothcache(curves, 0.2, k_max=3)
+    for t in curves:
+        np.testing.assert_array_equal(sch_p.skip[t], sch_f.skip[t])
+
+
+def test_smoothcache_requires_curves():
+    with pytest.raises(ValueError, match="curves"):
+        cache.SmoothCache(0.2).build(["attn"], 10)
+
+
+def test_budgeted_policy_hits_target():
+    curves = _synthetic_curves(s_total=50)
+    sch = cache.BudgetedSmoothCache(target=0.6).build(["attn", "ffn"], 50,
+                                                      curves)
+    frac = np.mean([sch.compute_fraction(t) for t in sch.skip])
+    assert abs(frac - 0.6) < 0.15
+
+
+def test_mismatched_curves_rejected():
+    curves = _synthetic_curves(s_total=12, k_max=3)
+    # wrong step count (e.g. stale artifact + strict=False pipeline)
+    with pytest.raises(ValueError, match="12 steps"):
+        cache.SmoothCache(0.2).build(["attn"], 30, curves)
+    with pytest.raises(ValueError, match="steps"):
+        cache.BudgetedSmoothCache(0.5).build(["attn"], 30, curves)
+    # lag horizon smaller than the policy's k_max (would silently clamp)
+    with pytest.raises(ValueError, match="k_max"):
+        cache.SmoothCache(0.2, k_max=5).build(["attn"], 12, curves)
+    with pytest.raises(ValueError, match="k_max"):
+        cache.PerLayerType({"attn": cache.SmoothCache(0.2, k_max=5)}) \
+            .build(["attn"], 12, curves)
+
+
+def test_empty_error_curves_raises():
+    with pytest.raises(ValueError, match="empty"):
+        S.smoothcache({}, 0.1)
+
+
+def test_per_type_composite_masks():
+    curves = _synthetic_curves(s_total=10)
+    p = cache.PerLayerType({"attn": cache.StaticInterval(2)},
+                           default=cache.NoCache())
+    sch = p.build(["attn", "ffn"], 10, None)
+    np.testing.assert_array_equal(sch.skip["attn"],
+                                  S.fora(["attn"], 10, 2).skip["attn"])
+    assert not sch.skip["ffn"].any()               # default NoCache
+    # calibrated sub-policy only sees its own type's curve
+    p2 = cache.PerLayerType({"attn": cache.SmoothCache(0.2)},
+                            default=cache.StaticInterval(3))
+    sch2 = p2.build(["attn", "ffn"], 10, curves)
+    np.testing.assert_array_equal(
+        sch2.skip["attn"],
+        S.smoothcache({"attn": curves["attn"]}, 0.2).skip["attn"])
+    np.testing.assert_array_equal(sch2.skip["ffn"],
+                                  S.fora(["ffn"], 10, 3).skip["ffn"])
+    assert p2.requires_calibration and p2.k_max == 3
+
+
+# ---------------------------------------------------------------------------
+# schedule / artifact serialization
+# ---------------------------------------------------------------------------
+
+def test_schedule_from_json_tolerates_missing_fields():
+    d = json.loads(S.fora(["attn"], 8, 2).to_json())
+    del d["alpha"], d["name"]
+    sch = S.Schedule.from_json(json.dumps(d))
+    assert sch.alpha is None and sch.name == "schedule"
+    np.testing.assert_array_equal(sch.skip["attn"],
+                                  S.fora(["attn"], 8, 2).skip["attn"])
+
+
+def test_schedule_content_key_stable():
+    a = S.fora(["attn", "ffn"], 10, 2)
+    b = S.Schedule({t: v.copy() for t, v in reversed(list(a.skip.items()))},
+                   10, name=a.name)
+    assert a.content_key() == b.content_key()      # key order irrelevant
+    assert a.content_key() != S.fora(["attn", "ffn"], 10, 3).content_key()
+
+
+def test_artifact_round_trip_bit_identical(tmp_path):
+    curves = _synthetic_curves(s_total=16, seed=3)
+    policy = cache.SmoothCache(alpha=0.17, k_max=3)
+    sch = policy.build(["attn", "ffn"], 16, curves)
+    art = cache.CacheArtifact(
+        arch="dit-xl-256-smoke", solver="ddim", num_steps=16,
+        policy=policy.to_config(), curves=curves, schedule=sch,
+        meta={"calib_batch": 8})
+    path = str(tmp_path / "a.cache.json")
+    art.save(path)
+    art2 = cache.CacheArtifact.load(path)
+    # provenance survives
+    assert art2.arch == art.arch and art2.solver == "ddim"
+    assert art2.policy == policy.to_config()
+    # curves are float-exact (Python repr floats are shortest-roundtrip)
+    for t in curves:
+        np.testing.assert_array_equal(
+            np.nan_to_num(art2.curves[t]), np.nan_to_num(curves[t]))
+    # stored schedule is bit-identical...
+    assert art2.schedule.content_key() == sch.content_key()
+    # ...and so is the one re-resolved from the stored curves + policy
+    assert art2.resolve().content_key() == sch.content_key()
+    # resolving a different policy against the same curves also works
+    sch_b = art2.resolve(cache.BudgetedSmoothCache(target=0.5))
+    assert sch_b.num_steps == 16
+
+
+def test_artifact_future_format_rejected():
+    curves = _synthetic_curves()
+    art = cache.CacheArtifact("a", "ddim", 12, {"name": "none"}, curves)
+    d = json.loads(art.to_json())
+    d["format_version"] = 99
+    with pytest.raises(ValueError, match="newer"):
+        cache.CacheArtifact.from_json(json.dumps(d))
+
+
+# ---------------------------------------------------------------------------
+# pipeline vs hand-wired equivalence (smoke DiT)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_dit():
+    cfg = configs.get("dit-xl-256", "smoke")
+    params = diffusion.init_params(jax.random.PRNGKey(0), cfg)
+    params = jax.tree.map(
+        lambda a: a + 0.05 * jax.random.normal(jax.random.PRNGKey(7), a.shape),
+        params)
+    return cfg, params
+
+
+def test_pipeline_matches_hand_wired(small_dit):
+    cfg, params = small_dit
+    label = jnp.zeros((2,), jnp.int32)
+    cond = {"label": label}
+
+    # hand-wired flow (the pre-facade API)
+    ex = SmoothCacheExecutor(cfg, solvers.ddim(6), cfg_scale=1.5)
+    curves, _, _ = calibration.calibrate(ex, params, jax.random.PRNGKey(1), 2,
+                                         cond_args=cond, k_max=3)
+    sch = S.smoothcache(curves, alpha=0.5, k_max=3)
+    x_hand = ex.sample(params, jax.random.PRNGKey(2), 2, schedule=sch,
+                       label=label)
+
+    # facade flow
+    pipe = cache.DiffusionPipeline(cfg, solvers.ddim(6),
+                                   "smoothcache:alpha=0.5", cfg_scale=1.5)
+    art = pipe.calibrate(params, jax.random.PRNGKey(1), 2, cond_args=cond)
+    assert art.schedule.content_key() == sch.content_key()
+    for t in curves:
+        np.testing.assert_array_equal(np.nan_to_num(art.curves[t]),
+                                      np.nan_to_num(curves[t]))
+    x_pipe = pipe.generate(params, jax.random.PRNGKey(2), 2, label=label,
+                           compiled=False)
+    np.testing.assert_array_equal(np.asarray(x_hand), np.asarray(x_pipe))
+
+
+def test_pipeline_artifact_serving_round_trip(small_dit, tmp_path):
+    """A serving pipeline that loads the artifact reproduces the calibrating
+    pipeline's schedule bit-identically and never recalibrates."""
+    cfg, params = small_dit
+    label = jnp.zeros((2,), jnp.int32)
+    calib = cache.DiffusionPipeline(cfg, solvers.ddim(6),
+                                    "smoothcache:alpha=0.5", cfg_scale=1.5)
+    calib.calibrate(params, jax.random.PRNGKey(1), 2,
+                    cond_args={"label": label})
+    path = str(tmp_path / "serve.cache.json")
+    calib.save_artifact(path)
+
+    serve = cache.DiffusionPipeline(cfg, solvers.ddim(6),
+                                    "smoothcache:alpha=0.5", cfg_scale=1.5)
+    serve.load_artifact(path)
+    assert serve.schedule.content_key() == calib.schedule.content_key()
+    x1 = calib.generate(params, jax.random.PRNGKey(2), 2, label=label,
+                        compiled=False)
+    x2 = serve.generate(params, jax.random.PRNGKey(2), 2, label=label,
+                        compiled=False)
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+
+
+def test_pipeline_artifact_mismatch_rejected(small_dit, tmp_path):
+    cfg, params = small_dit
+    label = jnp.zeros((2,), jnp.int32)
+    calib = cache.DiffusionPipeline(cfg, solvers.ddim(6),
+                                    "smoothcache:alpha=0.5", cfg_scale=1.5)
+    calib.calibrate(params, jax.random.PRNGKey(1), 2,
+                    cond_args={"label": label})
+    path = str(tmp_path / "a.cache.json")
+    calib.save_artifact(path)
+    other = cache.DiffusionPipeline(cfg, solvers.ddim(9),      # wrong steps
+                                    "smoothcache:alpha=0.5", cfg_scale=1.5)
+    with pytest.raises(ValueError, match="solver"):
+        other.load_artifact(path)
+    other.load_artifact(path, strict=False)        # explicit override works
+
+
+def test_pipeline_calibration_free_policy_needs_no_calibrate(small_dit):
+    cfg, params = small_dit
+    label = jnp.zeros((1,), jnp.int32)
+    pipe = cache.DiffusionPipeline(cfg, solvers.ddim(5), "static:n=2",
+                                   cfg_scale=1.5)
+    x = pipe.generate(params, jax.random.PRNGKey(0), 1, label=label,
+                      compiled=False)
+    assert x.shape == (1,) + tuple(cfg.latent_shape)
+    assert pipe.schedule.content_key() == \
+        S.fora(cfg.layer_types(), 5, 2).content_key()
+
+
+def test_pipeline_uncalibrated_smoothcache_raises(small_dit):
+    cfg, params = small_dit
+    pipe = cache.DiffusionPipeline(cfg, solvers.ddim(5),
+                                   "smoothcache:alpha=0.2", cfg_scale=1.5)
+    with pytest.raises(ValueError, match="calibrat"):
+        pipe.generate(params, jax.random.PRNGKey(0), 1,
+                      label=jnp.zeros((1,), jnp.int32), compiled=False)
