@@ -32,7 +32,7 @@ BATCH = 64
 def lower_sampler(cfg, mesh, schedule):
     solver = solvers.ddim(STEPS)
     ex = SmoothCacheExecutor(cfg, solver, cfg_scale=1.5, jit=False)
-    fn = ex.build_sampler_fn(schedule, batch=BATCH)
+    fn = ex.build_sampler_fn(schedule)
     p_struct = jax.eval_shape(
         lambda: diffusion.init_params(jax.random.PRNGKey(0), cfg, jnp.bfloat16))
     p_specs = sharding.to_named(mesh, sharding.param_specs(mesh, p_struct, cfg))

@@ -1,0 +1,142 @@
+"""Executor-path benchmark: eager vs segmented vs monolith.
+
+Runs the paper's DiT-XL protocol (smoke config, DDIM, CFG 1.5) under a
+calibrated SmoothCache schedule through all three execution paths and
+reports, per path: programs compiled, compile wall time (first call),
+steady-state per-sample wall time, total (compile + one sample) time, and
+the peak resident branch-cache bytes (liveness-pruned for the segmented
+path, full-structure for eager/monolith).
+
+Emits CSV rows and writes ``BENCH_executor.json`` into the results dir so
+CI can track the perf trajectory per PR.
+
+    PYTHONPATH=src python -m benchmarks.run --only executor
+    EXECUTOR_BENCH_STEPS=20 PYTHONPATH=src python -m benchmarks.executor_bench
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro import configs
+from repro.core import calibration, diffusion, plan as plan_lib
+from repro.core import schedule as S, solvers
+from repro.core.executor import SmoothCacheExecutor
+
+STEPS = int(os.environ.get("EXECUTOR_BENCH_STEPS", "50"))
+BATCH = 1
+CFG_SCALE = 1.5
+SAMPLE_ITERS = 3
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(out)
+    return out, time.perf_counter() - t0
+
+
+def _bench_path(sample_fn):
+    """(first-call seconds, median steady seconds, first output)."""
+    x0, t_first = _timed(sample_fn)
+    steady = []
+    for _ in range(SAMPLE_ITERS):
+        _, dt = _timed(sample_fn)
+        steady.append(dt)
+    return t_first, float(np.median(steady)), x0
+
+
+def run() -> None:
+    cfg = configs.get("dit-xl-256", "smoke")
+    solver = solvers.ddim(STEPS)
+    params = diffusion.init_params(jax.random.PRNGKey(0), cfg)
+    params = jax.tree.map(
+        lambda a: a + 0.05 * jax.random.normal(jax.random.PRNGKey(7), a.shape),
+        params)
+    label = jnp.zeros((BATCH,), jnp.int32)
+    key = jax.random.PRNGKey(42)
+
+    # calibrate a SmoothCache schedule targeting ~50% layer compute
+    ex_cal = SmoothCacheExecutor(cfg, solver, cfg_scale=CFG_SCALE)
+    curves, _, _ = calibration.calibrate(
+        ex_cal, params, jax.random.PRNGKey(1), BATCH,
+        cond_args={"label": label})
+    alpha = S.alpha_for_budget(curves, target_compute_fraction=0.5)
+    sch = S.smoothcache(curves, alpha, k_max=3)
+    if not any(v.any() for v in sch.skip.values()):
+        sch = S.fora(cfg.layer_types(), STEPS, 2)     # degenerate calibration
+    plan = plan_lib.analyze(sch)
+    type_bytes = plan_lib.branch_cache_type_bytes(cfg, BATCH,
+                                                  cfg_doubled=True)
+    full_bytes = sum(type_bytes.values())
+
+    paths = {}
+
+    ex = SmoothCacheExecutor(cfg, solver, cfg_scale=CFG_SCALE)
+    t_first, t_steady, x_eager = _bench_path(
+        lambda: ex.sample(params, key, BATCH, schedule=sch, label=label))
+    paths["eager"] = {
+        "programs": ex.compiled_variant_count("eager"),
+        "compile_s": t_first - t_steady, "sample_s": t_steady,
+        "total_s": t_first, "peak_live_cache_bytes": full_bytes}
+
+    ex = SmoothCacheExecutor(cfg, solver, cfg_scale=CFG_SCALE)
+    t_first, t_steady, x_seg = _bench_path(
+        lambda: ex.sample_compiled(params, key, BATCH, schedule=sch,
+                                   label=label))
+    paths["segmented"] = {
+        "programs": ex.compiled_variant_count("seg"),
+        "compile_s": t_first - t_steady, "sample_s": t_steady,
+        "total_s": t_first,
+        "peak_live_cache_bytes": plan.peak_live_bytes(type_bytes)}
+
+    ex = SmoothCacheExecutor(cfg, solver, cfg_scale=CFG_SCALE)
+    mono = jax.jit(ex.build_sampler_fn(sch))
+
+    def run_mono():
+        knoise, kloop = jax.random.split(key)
+        x = jax.random.normal(knoise, ex.latent_batch_shape(BATCH))
+        return mono(params, x, label, None, None)
+
+    t_first, t_steady, x_mono = _bench_path(run_mono)
+    paths["monolith"] = {
+        "programs": 1,
+        "compile_s": t_first - t_steady, "sample_s": t_steady,
+        "total_s": t_first, "peak_live_cache_bytes": full_bytes}
+
+    bitwise = bool(jnp.all(x_eager == x_seg))
+    result = {
+        "config": cfg.name, "solver": solver.name, "steps": STEPS,
+        "batch": BATCH, "cfg_scale": CFG_SCALE,
+        "schedule": {"name": sch.name, "alpha": sch.alpha,
+                     "compute_fraction": float(np.mean(
+                         [sch.compute_fraction(t) for t in sch.skip]))},
+        "plan": {"segments": len(plan.runs),
+                 "unique_signatures": plan.num_unique_signatures},
+        "segmented_bitwise_equals_eager": bitwise,
+        "paths": paths,
+    }
+    os.makedirs(common.RESULTS_DIR, exist_ok=True)
+    out = os.path.join(common.RESULTS_DIR, "BENCH_executor.json")
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+
+    for name, p in paths.items():
+        common.emit(f"executor/{name}_sample", p["sample_s"] * 1e6,
+                    f"programs={p['programs']}"
+                    f";compile_s={p['compile_s']:.2f}"
+                    f";total_s={p['total_s']:.2f}"
+                    f";peak_cache_MB={p['peak_live_cache_bytes'] / 1e6:.1f}")
+    common.emit("executor/plan", plan.num_unique_signatures,
+                f"segments={len(plan.runs)};steps={STEPS}"
+                f";bitwise={bitwise}")
+
+
+if __name__ == "__main__":
+    run()

@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.cache import registry
 from repro.cache.policy import CachePolicy
+from repro.core import plan as plan_lib
 from repro.core.schedule import Schedule
 
 FORMAT_VERSION = 1
@@ -34,6 +35,7 @@ class CacheArtifact:
     policy: Dict                              # CachePolicy.to_config()
     curves: Dict[str, np.ndarray]             # {type: (S, K+1) float64}
     schedule: Optional[Schedule] = None       # resolved skip masks
+    plan: Optional[Dict] = None               # ExecutionPlan.to_jsonable()
     meta: Dict = field(default_factory=dict)  # calib_batch, k_max, cfg_scale…
 
     # -- resolution ----------------------------------------------------------
@@ -47,6 +49,21 @@ class CacheArtifact:
             list(self.schedule.skip) if self.schedule else []
         return p.build(types, self.num_steps,
                        self.curves if self.curves else None)
+
+    def execution_plan(self) -> Optional[plan_lib.ExecutionPlan]:
+        """The pre-analyzed segmentation/liveness plan, when stored — a
+        serving process hands it straight to the executor instead of
+        re-deriving it.  Validated against the stored schedule; a stale
+        plan (fingerprint mismatch) is discarded and re-analyzed."""
+        if self.plan is not None:
+            p = plan_lib.ExecutionPlan.from_jsonable(self.plan)
+            if (self.schedule is None
+                    or p.schedule_fingerprint
+                    == plan_lib.schedule_fingerprint(self.schedule)):
+                return p
+        if self.schedule is not None:
+            return plan_lib.analyze(self.schedule)
+        return None
 
     # -- (de)serialization ---------------------------------------------------
 
@@ -66,6 +83,7 @@ class CacheArtifact:
             "curves": {t: rows(c) for t, c in sorted(self.curves.items())},
             "schedule": (json.loads(self.schedule.to_json())
                          if self.schedule is not None else None),
+            "plan": self.plan,
             "meta": self.meta,
         }, sort_keys=True, allow_nan=False)
 
@@ -86,6 +104,7 @@ class CacheArtifact:
             curves={t: arr(c) for t, c in d.get("curves", {}).items()},
             schedule=(Schedule.from_json(json.dumps(sch))
                       if sch is not None else None),
+            plan=d.get("plan"),
             meta=d.get("meta", {}))
 
     def save(self, path: str) -> str:
@@ -110,4 +129,6 @@ class CacheArtifact:
         return "\n".join(rows)
 
     def with_schedule(self, schedule: Schedule) -> "CacheArtifact":
-        return dataclasses.replace(self, schedule=schedule)
+        return dataclasses.replace(
+            self, schedule=schedule,
+            plan=plan_lib.analyze(schedule).to_jsonable())

@@ -28,6 +28,7 @@ from repro.cache import registry
 from repro.cache.artifact import CacheArtifact
 from repro.cache.policy import CachePolicy
 from repro.core import calibration as calibration_lib
+from repro.core import plan as plan_lib
 from repro.core import solvers as solvers_lib
 from repro.core.executor import SmoothCacheExecutor
 from repro.core.schedule import Schedule
@@ -52,6 +53,7 @@ class DiffusionPipeline:
         self.artifact: Optional[CacheArtifact] = None
         self.per_sample: Optional[Dict[str, np.ndarray]] = None
         self._schedule: Optional[Schedule] = None
+        self._plan: Optional[plan_lib.ExecutionPlan] = None
 
     # -- introspection -------------------------------------------------------
 
@@ -67,6 +69,14 @@ class DiffusionPipeline:
     def schedule(self) -> Optional[Schedule]:
         """The resolved schedule, if calibration/preparation has run."""
         return self._schedule
+
+    @property
+    def plan(self) -> Optional[plan_lib.ExecutionPlan]:
+        """Segmentation/liveness analysis of the resolved schedule (loaded
+        from the artifact when serving, derived once otherwise)."""
+        if self._plan is None and self._schedule is not None:
+            self._plan = self.executor.plan_for(self._schedule)
+        return self._plan
 
     def summary(self) -> str:
         head = (f"DiffusionPipeline({self.cfg.name}, {self.solver.name}"
@@ -91,10 +101,12 @@ class DiffusionPipeline:
                                 self.solver.num_steps,
                                 curves if self.policy.requires_calibration
                                 else None)
+        self._plan = self.executor.plan_for(sch)
         self.artifact = CacheArtifact(
             arch=self.cfg.name, solver=self.solver.name,
             num_steps=self.solver.num_steps,
             policy=self.policy.to_config(), curves=curves, schedule=sch,
+            plan=self._plan.to_jsonable(),
             meta={"calib_batch": batch, "k_max": k,
                   "cfg_scale": self.executor.cfg_scale})
         self._schedule = sch
@@ -115,6 +127,7 @@ class DiffusionPipeline:
             return self._schedule
         curves = self.artifact.curves if self.artifact is not None else None
         self._schedule = self.policy.prepare(self.executor, curves=curves)
+        self._plan = None                     # re-derived lazily via .plan
         return self._schedule
 
     def schedule_for(self, policy: Union[str, dict, CachePolicy]) -> Schedule:
@@ -150,6 +163,9 @@ class DiffusionPipeline:
         self.artifact = art
         self._schedule = (art.schedule if art.schedule is not None
                           else art.resolve(self.policy))
+        # serving reloads the pre-analyzed plan instead of re-deriving it
+        self._plan = (art.execution_plan() if art.schedule is not None
+                      else plan_lib.analyze(self._schedule))
         return art
 
     # -- generation ----------------------------------------------------------
@@ -158,7 +174,9 @@ class DiffusionPipeline:
                  schedule=_UNSET, compiled: bool = True):
         """Sample a batch under the pipeline's schedule.  ``schedule=`` (a
         Schedule, a policy spec, or None for the uncached baseline)
-        overrides per-call; ``compiled=True`` uses the whole-sampler jit."""
+        overrides per-call; ``compiled=True`` uses the segmented-plan
+        executor path (one compiled program per unique mask/liveness
+        signature, reusing the pipeline's pre-analyzed plan)."""
         if schedule is _UNSET:
             sch = self._schedule
             if sch is None and self.policy.requires_calibration:
@@ -174,8 +192,11 @@ class DiffusionPipeline:
         else:
             sch = self.schedule_for(schedule)
         if compiled:
+            plan = self._plan if (sch is not None
+                                  and sch is self._schedule) else None
             return self.executor.sample_compiled(
-                params, key, batch, schedule=sch, label=label, memory=memory)
+                params, key, batch, schedule=sch, label=label, memory=memory,
+                plan=plan)
         return self.executor.sample(params, key, batch, schedule=sch,
                                     label=label, memory=memory)
 

@@ -119,7 +119,10 @@ def apply(cfg: ModelConfig, params, x, t, *, label=None, memory=None,
     """Denoiser: x (B, *latent_shape), t (B,) → prediction (B, *latent_shape).
 
     Returns (pred, aux) with aux["branch"] holding per-layer pre-residual
-    branch outputs (the SmoothCache payload) when requested/needed."""
+    branch outputs (the SmoothCache payload) when requested.
+    ``collect_branches`` may be a bool or a collection of layer types — the
+    executor's liveness analysis passes the exact set of types whose fresh
+    outputs a later step will read, so dead branches are never stacked."""
     _, _, video_shape = token_shape(cfg)
     tok = patchify(cfg, x)
     h = tok @ params["patch_in"]["w"] + params["patch_in"]["b"]
@@ -130,7 +133,7 @@ def apply(cfg: ModelConfig, params, x, t, *, label=None, memory=None,
     out, aux = T.forward(
         cfg, params["backbone"], embeds=h, memory=memory, cond=cond,
         skip=skip, branch_caches=branch_caches,
-        collect_branches=collect_branches or (skip is not None),
+        collect_branches=collect_branches,
         use_flash=use_flash, video_shape=video_shape)
     mod = jax.nn.silu(cond) @ params["final_mod"]["w"] + params["final_mod"]["b"]
     shift, scale = jnp.split(mod[:, None, :], 2, axis=-1)

@@ -2,29 +2,50 @@
 
 Runs a diffusion sampler where each step's per-type skip mask comes from a
 static `Schedule`.  Because masks are static, each distinct mask compiles to
-its own XLA program in which skipped layers are *absent* — the FLOP savings
-show up directly in ``compiled.cost_analysis()`` — and the branch cache is
-an explicit pytree threaded between steps (so under pjit it inherits the
+an XLA program in which skipped layers are *absent* — the FLOP savings show
+up directly in ``compiled.cost_analysis()`` — and the branch cache is an
+explicit pytree threaded between steps (so under pjit it inherits the
 activation sharding: a cache hit also skips the layer's collectives).
+
+Three execution paths, in order of increasing ahead-of-time analysis:
+
+* ``sample`` — **eager**: one jitted model call per distinct skip mask,
+  Python dispatch every step, every computed branch collected and merged
+  into a full-structure cache.  This is the reference path (and the one
+  calibration hooks into: it observes *all* branch outputs).
+* ``sample_compiled`` — **segmented**: :mod:`repro.core.plan` run-length
+  encodes the schedule into constant-mask segments and computes branch
+  liveness; one program is compiled per *unique (mask, liveness)
+  signature* (= per distinct mask, typically 2–4) and driven with a
+  dynamic ``(start, length)`` trip count under ``lax.fori_loop`` (the
+  dynamic-length cousin of ``lax.scan``, so segment length/position never
+  triggers a recompile), with the solver state threaded through the
+  carry.  Types that are never read are never collected nor resident;
+  exact per-step liveness is enforced at segment boundaries by dropping
+  dead entries.  Latent / solver-state / branch-cache buffers are donated
+  so steady-state sampling is allocation-free.
+* ``build_sampler_fn`` — **monolith**: all steps unrolled into a single
+  jit-able function.  Compile time scales with step count; kept because
+  ``jit(fn).lower()`` exposes whole-run FLOPs/bytes for accounting.
 
 Classifier-free guidance doubles the batch ([cond; uncond]) exactly as in
 the paper's DiT-XL protocol; the cache covers both halves.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
-from repro.core import diffusion, schedule as schedule_lib
+from repro.core import diffusion, plan as plan_lib, schedule as schedule_lib
 from repro.core.solvers import Solver
 
 
 def merge_branch_caches(cfg: ModelConfig, computed, old):
-    """Fill skipped branches from the previous cache → full-structure cache."""
+    """Fill skipped branches from the previous cache → full-structure cache
+    (the eager path's collect-everything merge)."""
     out = []
     for si, st in enumerate(cfg.stages):
         stage = []
@@ -43,26 +64,117 @@ def merge_branch_caches(cfg: ModelConfig, computed, old):
     return out
 
 
+def empty_branch_cache(cfg: ModelConfig):
+    """Structure-complete cache pytree with no resident entries."""
+    return [tuple({} for _ in st.unit) for st in cfg.stages]
+
+
+def pruned_branch_caches(cfg: ModelConfig, computed, old, collect, live):
+    """Build a post-step cache holding only branches of ``live`` types:
+    fresh outputs for ``collect`` types, passed-through entries otherwise.
+    Branches outside ``live`` are dropped — with buffer donation their
+    storage is reclaimed immediately."""
+    collect = set(collect)
+    live = set(live)
+    out = []
+    for si, st in enumerate(cfg.stages):
+        comp_stage = computed[si] if computed is not None else None
+        stage = []
+        for bi, b in enumerate(st.unit):
+            comp = (comp_stage[bi] or {}) if comp_stage is not None else {}
+            d = {}
+            for name, t in zip(b.branch_names(), b.branch_types()):
+                if t not in live:
+                    continue
+                d[name] = comp[name] if t in collect else old[si][bi][name]
+            stage.append(d)
+        out.append(tuple(stage))
+    return out
+
+
+def prune_cache(cfg: ModelConfig, cache, live):
+    """Drop every cache entry whose type is not in ``live`` — a Python-level
+    pytree restructure (no device work) applied at segment boundaries."""
+    live = set(live)
+    out = []
+    for si, st in enumerate(cfg.stages):
+        stage = []
+        for bi, b in enumerate(st.unit):
+            types = dict(zip(b.branch_names(), b.branch_types()))
+            stage.append({n: v for n, v in cache[si][bi].items()
+                          if types[n] in live})
+        out.append(tuple(stage))
+    return out
+
+
+def cache_entry_names(cfg: ModelConfig, types) -> List[tuple]:
+    """(stage, block, branch_name) triples a cache restricted to ``types``
+    must contain — the liveness invariant checked by the segmented loop."""
+    ts = set(types)
+    out = []
+    for si, st in enumerate(cfg.stages):
+        for bi, b in enumerate(st.unit):
+            for name, t in zip(b.branch_names(), b.branch_types()):
+                if t in ts:
+                    out.append((si, bi, name))
+    return out
+
+
 class SmoothCacheExecutor:
-    """Owns the per-step jitted model variants (one per distinct skip mask)
-    and the sampling loop."""
+    """Owns the compiled model/sampler variants (one per plan signature on
+    the segmented path, one per distinct skip mask on the eager path) and
+    the sampling loops."""
 
     def __init__(self, cfg: ModelConfig, solver: Solver, *,
                  cfg_scale: Optional[float] = None, use_flash: bool = False,
-                 jit: bool = True):
+                 jit: bool = True, donate: Optional[bool] = None):
         assert cfg.task == "diffusion"
         self.cfg = cfg
         self.solver = solver
         self.cfg_scale = cfg_scale
         self.use_flash = use_flash
         self._jit = jit
+        # buffer donation is a no-op (with a warning) on CPU, so default it
+        # on only where XLA implements input/output aliasing
+        if donate is None:
+            donate = jax.default_backend() != "cpu"
+        self._donate = bool(donate) and jit
         self._fns: Dict = {}
+        self._plans: Dict[str, plan_lib.ExecutionPlan] = {}
+        self._struct_cache: Dict = {}
+
+    # -- instrumentation -----------------------------------------------------
+
+    def fn_keys(self, kind: Optional[str] = None):
+        """Keys of the compiled-variant table (regression tests assert the
+        segmented path builds exactly one ``"seg"`` entry per unique plan
+        signature)."""
+        keys = list(self._fns)
+        if kind is None:
+            return keys
+        return [k for k in keys
+                if isinstance(k, tuple) and k and k[0] == kind]
+
+    def compiled_variant_count(self, kind: Optional[str] = None) -> int:
+        return len(self.fn_keys(kind))
+
+    # -- plan resolution -----------------------------------------------------
+
+    def plan_for(self, schedule) -> plan_lib.ExecutionPlan:
+        """Memoized liveness/segmentation analysis of a schedule."""
+        ck = schedule.content_key()
+        if ck not in self._plans:
+            self._plans[ck] = plan_lib.analyze(schedule)
+        return self._plans[ck]
 
     # -- model step ---------------------------------------------------------
 
     def _model_call(self, params, x, t, label, memory, branch_caches, *,
                     skip, collect):
-        """One denoiser evaluation (CFG-doubled when configured)."""
+        """One denoiser evaluation (CFG-doubled when configured).
+
+        ``collect`` is ``True`` (eager/calibration: keep every branch) or a
+        collection of layer types (segmented: keep only live branches)."""
         cfgm = self.cfg
         if self.cfg_scale is not None:
             x2 = jnp.concatenate([x, x], axis=0)
@@ -87,15 +199,19 @@ class SmoothCacheExecutor:
             out = pred
         return out, aux["branch"]
 
-    def _get_fn(self, mask_key, has_cache: bool, collect: bool):
-        key = (mask_key, has_cache, collect)
+    # -- eager per-mask programs --------------------------------------------
+
+    def _get_fn(self, mask_key, has_cache: bool):
+        # the eager path always collects every computed branch (any computed
+        # step may become the cache source for a later one, and calibration
+        # hooks read the full tree) — so `collect` is NOT part of the key:
+        # keying on it would compile the same program twice
+        key = ("eager", mask_key, has_cache)
         if key in self._fns:
             return self._fns[key]
         skip = dict(mask_key)
 
         def fn(params, x, t, label, memory, branch_caches):
-            # branch outputs are always collected while caching is active:
-            # any computed step may become the cache source for a later one
             pred, computed = self._model_call(
                 params, x, t, label, memory,
                 branch_caches if has_cache else None,
@@ -125,7 +241,135 @@ class SmoothCacheExecutor:
         self._fns["plain"] = fn
         return fn
 
-    # -- sampling loop ------------------------------------------------------
+    # -- segmented per-signature programs -----------------------------------
+
+    def _sig_step(self, params, x, t, label, memory, cache, *, skip, collect,
+                  live):
+        """One plan-driven model evaluation + liveness-pruned cache update:
+        skipped branches read the cache, ``collect`` types write fresh
+        outputs, and only ``live`` types appear in the output cache."""
+        pred, computed = self._model_call(
+            params, x, t, label, memory,
+            cache if any(skip.values()) else None,
+            skip=skip, collect=frozenset(collect))
+        new_cache = pruned_branch_caches(self.cfg, computed, cache,
+                                         collect, live)
+        return pred, new_cache
+
+    def _get_sig_loop_fn(self, sig: plan_lib.ProgramSig):
+        """Fused segment program for one signature: model + solver step
+        under ``lax.fori_loop`` over a dynamic ``[start, start+length)``
+        step range, so a single compilation serves every segment of this
+        mask regardless of length or position.  The signature's canonical
+        collect set makes the cache pytree a loop invariant (skipped types
+        pass through, collected types are overwritten each iteration).
+        Latent, solver state, and cache buffers are donated — steady-state
+        segments run allocation-free."""
+        key = ("seg", sig)
+        if key in self._fns:
+            return self._fns[key]
+        solver = self.solver
+        skip, collect, live = sig.skip, sig.collect, sig.structure
+
+        def fn(params, x, state, cache, start, length, kloop, label, memory):
+            def body(i, carry):
+                x, state, cache = carry
+                t = jnp.full((x.shape[0],), solver.model_times[i])
+                pred, cache = self._sig_step(params, x, t, label, memory,
+                                             cache, skip=skip,
+                                             collect=collect, live=live)
+                kstep = (jax.random.fold_in(kloop, i)
+                         if solver.stochastic else None)
+                x, state = solver.step(x, pred, i, state, kstep)
+                return (x, state, cache)
+
+            return jax.lax.fori_loop(start, start + length, body,
+                                     (x, state, cache))
+
+        if self._jit:
+            donate = (1, 2, 3) if self._donate else ()
+            fn = jax.jit(fn, donate_argnums=donate)
+        self._fns[key] = fn
+        return fn
+
+    def _get_sig_model_fn(self, sig: plan_lib.ProgramSig):
+        """Model-only signature program for non-scannable solvers (e.g.
+        DPM++(3M): Python control flow on the step index / state structure).
+        The solver step runs eagerly between calls; the cache is donated."""
+        key = ("sigstep", sig)
+        if key in self._fns:
+            return self._fns[key]
+        skip, collect, live = sig.skip, sig.collect, sig.structure
+
+        def fn(params, x, t, label, memory, cache):
+            return self._sig_step(params, x, t, label, memory, cache,
+                                  skip=skip, collect=collect, live=live)
+
+        if self._jit:
+            donate = (5,) if self._donate else ()
+            fn = jax.jit(fn, donate_argnums=donate)
+        self._fns[key] = fn
+        return fn
+
+    def _branch_structs(self, params, x, label, memory):
+        """ShapeDtypeStructs of every branch-cache entry (one abstract
+        trace, memoized per latent shape) — used to build the donated
+        placeholder buffers a segment's collect entries start from."""
+        key = (x.shape, str(x.dtype), label is not None, memory is not None)
+        if key in self._struct_cache:
+            return self._struct_cache[key]
+        t = jax.ShapeDtypeStruct((x.shape[0],), jnp.float32)
+        structs = jax.eval_shape(
+            lambda p, xx, tt, lab, mem: self._model_call(
+                p, xx, tt, lab, mem, None, skip=None, collect=True)[1],
+            params, x, t, label, memory)
+        self._struct_cache[key] = structs
+        return structs
+
+    def _enter_run_cache(self, cache, sig: plan_lib.ProgramSig, structs):
+        """Restructure the (exactly-live) boundary cache into the run's
+        loop-invariant structure: pass through the entries the mask reads,
+        and add placeholder buffers for the collect entries (their input
+        values are never read — the program overwrites them on the first
+        iteration, and donation recycles the allocation)."""
+        live_in = set(sig.live_in)
+        collect = set(sig.collect)
+        out = []
+        for si, st in enumerate(self.cfg.stages):
+            stage = []
+            for bi, b in enumerate(st.unit):
+                d = {}
+                for name, t in zip(b.branch_names(), b.branch_types()):
+                    if t in live_in:
+                        d[name] = cache[si][bi][name]
+                    elif t in collect:
+                        s = structs[si][bi][name]
+                        d[name] = jnp.zeros(s.shape, s.dtype)
+                stage.append(d)
+            out.append(tuple(stage))
+        return out
+
+    def _get_solver_step(self):
+        """Solver step used by the eager loops.  For scannable solvers it is
+        jitted with a *traced* step index — the same numeric class XLA uses
+        inside the segmented path's fused loop programs (traced-index jit,
+        ``fori_loop``, and fused model+solver programs produce identical
+        bits; op-by-op eager execution and static-index constant folding do
+        not), so eager and segmented sampling stay bit-identical.
+        Non-scannable solvers run op-by-op on every path — also
+        self-consistent."""
+        if "solver_step" in self._fns:
+            return self._fns["solver_step"]
+        solver = self.solver
+        if solver.scannable and self._jit:
+            fn = jax.jit(lambda x, pred, s, state, key:
+                         solver.step(x, pred, s, state, key))
+        else:
+            fn = solver.step
+        self._fns["solver_step"] = fn
+        return fn
+
+    # -- sampling loops ------------------------------------------------------
 
     def latent_batch_shape(self, batch):
         return (batch,) + tuple(self.cfg.latent_shape)
@@ -133,7 +377,7 @@ class SmoothCacheExecutor:
     def sample(self, params, key, batch: int, *, schedule=None, label=None,
                memory=None, collect_hook: Optional[Callable] = None,
                return_trajectory: bool = False):
-        """Run the full sampler.  ``schedule=None`` → no caching."""
+        """Eager reference sampler.  ``schedule=None`` → no caching."""
         cfgm = self.cfg
         s_total = self.solver.num_steps
         if schedule is None:
@@ -143,6 +387,7 @@ class SmoothCacheExecutor:
         knoise, kloop = jax.random.split(key)
         x = jax.random.normal(knoise, self.latent_batch_shape(batch))
         state = self.solver.init_state()
+        solver_step = self._get_solver_step()
         cache = None
         traj = []
         caching_active = (collect_hook is not None or
@@ -153,67 +398,115 @@ class SmoothCacheExecutor:
             for s in range(s_total):
                 t = jnp.full((batch,), self.solver.model_times[s])
                 pred = fn(params, x, t, label, memory)
-                x, state = self.solver.step(x, pred, s, state,
-                                            jax.random.fold_in(kloop, s))
+                x, state = solver_step(x, pred, s, state,
+                                       jax.random.fold_in(kloop, s))
                 if return_trajectory:
                     traj.append(x)
             return (x, traj) if return_trajectory else x
         for s in range(s_total):
-            mask = schedule.mask_at(s)
-            mask_key = tuple(sorted(mask.items()))
+            mask_key = schedule.mask_key_at(s)
             t = jnp.full((batch,), self.solver.model_times[s])
-            fn = self._get_fn(mask_key, has_cache=cache is not None,
-                              collect=collect_hook is not None)
+            fn = self._get_fn(mask_key, has_cache=cache is not None)
             pred, cache = fn(params, x, t, label, memory, cache)
             if collect_hook is not None:
                 collect_hook(s, cache)
             kstep = jax.random.fold_in(kloop, s)
-            x, state = self.solver.step(x, pred, s, state, kstep)
+            x, state = solver_step(x, pred, s, state, kstep)
             if return_trajectory:
                 traj.append(x)
         return (x, traj) if return_trajectory else x
 
-    def sample_compiled(self, params, key, batch: int, *, schedule=None,
-                        label=None, memory=None):
-        """Whole-sampler single-jit path: no per-step Python dispatch.
-        Compiles once per (schedule identity, batch); use for timing and
-        FLOP accounting.  Stochastic solvers get the key threaded in."""
-        s_total = self.solver.num_steps
-        if schedule is None:
-            schedule = schedule_lib.no_cache(self.cfg.layer_types(), s_total)
-        # content-addressed compile cache: the canonical JSON string itself is
-        # the key (str hash() is process-salted and collides across schedules
-        # with equal hashes)
-        ck = (schedule.content_key(), batch,
-              label is not None, memory is not None)
-        if ck not in self._fns:
-            fn = self.build_sampler_fn(schedule, batch=batch)
-            self._fns[ck] = jax.jit(fn)
+    def sample_with_plan(self, params, key, batch: int, *,
+                         plan: plan_lib.ExecutionPlan, schedule=None,
+                         label=None, memory=None, check: bool = False):
+        """Segmented sampler: Python dispatch per *segment* (not per step),
+        one compiled program per unique plan signature.
+
+        ``check=True`` verifies after every segment that the resident cache
+        pytree holds exactly the plan's live entries (the liveness
+        invariant: dead branches are provably absent)."""
+        if plan.num_steps != self.solver.num_steps:
+            raise ValueError(f"plan has {plan.num_steps} steps, solver "
+                             f"{self.solver.num_steps}")
+        if (schedule is not None and plan.schedule_fingerprint is not None
+                and plan.schedule_fingerprint
+                != plan_lib.schedule_fingerprint(schedule)):
+            raise ValueError("plan was analyzed from a different schedule "
+                             "(fingerprint mismatch) — re-run plan_for()")
         knoise, kloop = jax.random.split(key)
         x = jax.random.normal(knoise, self.latent_batch_shape(batch))
-        return self._fns[ck](params, x, label, memory,
-                             kloop if self.solver.stochastic else None)
+        state = self.solver.init_state()
+        structs = self._branch_structs(params, x, label, memory)
+        cache = empty_branch_cache(self.cfg)
+        fused = self.solver.scannable
+        solver_step = None if fused else self._get_solver_step()
+        for run in plan.runs:
+            cache = self._enter_run_cache(cache, run.sig, structs)
+            if fused:
+                fn = self._get_sig_loop_fn(run.sig)
+                x, state, cache = fn(params, x, state, cache, run.start,
+                                     run.length, kloop, label, memory)
+            else:
+                fn = self._get_sig_model_fn(run.sig)
+                for s in range(run.start, run.start + run.length):
+                    t = jnp.full((batch,), self.solver.model_times[s])
+                    pred, cache = fn(params, x, t, label, memory, cache)
+                    x, state = solver_step(x, pred, s, state,
+                                           jax.random.fold_in(kloop, s))
+            # exact liveness at the boundary: entries the next segment does
+            # not read are dead — drop them (free: a Python restructure;
+            # donation already recycled their buffers)
+            cache = prune_cache(self.cfg, cache, run.live_out)
+            if check:
+                expect = set(cache_entry_names(self.cfg, run.live_out))
+                got = {(si, bi, name)
+                       for si, stage in enumerate(cache)
+                       for bi, d in enumerate(stage)
+                       for name in d}
+                assert got == expect, (
+                    f"liveness violation after steps "
+                    f"[{run.start}, {run.start + run.length}): resident "
+                    f"{sorted(got)} != live {sorted(expect)}")
+        return x
+
+    def sample_compiled(self, params, key, batch: int, *, schedule=None,
+                        label=None, memory=None, plan=None,
+                        check: bool = False):
+        """Segmented-plan sampler (the serving hot path): analyzes the
+        schedule (memoized, or pass a pre-analyzed ``plan`` from a
+        :class:`~repro.cache.artifact.CacheArtifact`) and compiles one
+        program per unique (mask, liveness) signature — not per step, not
+        one monolith."""
+        if schedule is None:
+            schedule = schedule_lib.no_cache(self.cfg.layer_types(),
+                                             self.solver.num_steps)
+        if plan is None:
+            plan = self.plan_for(schedule)
+        return self.sample_with_plan(params, key, batch, plan=plan,
+                                     schedule=schedule, label=label,
+                                     memory=memory, check=check)
 
     # -- whole-sampler lowering (for FLOP / roofline accounting) ------------
 
-    def build_sampler_fn(self, schedule, *, batch: int, with_label: bool = False,
-                         with_memory: bool = False, mem_len: int = 8):
-        """A single jit-able function running all steps with the static
-        schedule — ``jax.jit(fn).lower(...)`` exposes total FLOPs/bytes."""
-        cfgm = self.cfg
+    def build_sampler_fn(self, schedule):
+        """A single jit-able function unrolling all steps of the (liveness-
+        pruned) plan — ``jax.jit(fn).lower(...)`` exposes total FLOPs/bytes.
+        Compile time scales with step count; use ``sample_compiled`` for
+        actual sampling."""
         s_total = self.solver.num_steps
+        plan = self.plan_for(schedule)
 
         def fn(params, x, label=None, memory=None, key=None):
             state = self.solver.init_state()
-            cache = None
+            cache = empty_branch_cache(self.cfg)
             for s in range(s_total):
-                mask = schedule.mask_at(s)
                 t = jnp.full((x.shape[0],), self.solver.model_times[s])
-                pred, computed = self._model_call(
-                    params, x, t, label, memory, cache, skip=mask,
-                    collect=True)
-                cache = (merge_branch_caches(cfgm, computed, cache)
-                         if cache is not None else computed)
+                # unrolled, so exact per-step liveness is free: collect only
+                # what the next step reads, keep only what stays live
+                pred, cache = self._sig_step(
+                    params, x, t, label, memory, cache,
+                    skip=plan.sig_at(s).skip, collect=plan.collect_at(s),
+                    live=plan.live_out_at(s))
                 kstep = (jax.random.fold_in(key, s)
                          if key is not None else None)
                 x, state = self.solver.step(x, pred, s, state, kstep)

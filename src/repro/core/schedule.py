@@ -9,6 +9,7 @@ curves — which keeps every sampler step graph-compilable.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 from typing import Dict, Mapping, Optional, Sequence
 
@@ -30,9 +31,13 @@ class Schedule:
     def mask_at(self, s: int) -> Dict[str, bool]:
         return {t: bool(v[s]) for t, v in self.skip.items()}
 
+    def mask_key_at(self, s: int):
+        """Canonical hashable form of the step-``s`` mask: sorted
+        ``(type, skip)`` pairs — the compile-cache / plan-signature key."""
+        return tuple(sorted(self.mask_at(s).items()))
+
     def distinct_masks(self):
-        return sorted({tuple(sorted(self.mask_at(s).items()))
-                       for s in range(self.num_steps)})
+        return sorted({self.mask_key_at(s) for s in range(self.num_steps)})
 
     def summary(self) -> str:
         rows = [f"{self.name} (alpha={self.alpha})"]
@@ -52,6 +57,17 @@ class Schedule:
         deterministic float formatting) — safe to use as a compile-cache key,
         unlike ``hash()`` which is salted per process for strings."""
         return self.to_json()
+
+    def fingerprint(self) -> str:
+        """Short stable digest of :meth:`content_key`, memoized on the
+        (frozen, content-immutable) instance — plan-provenance checks on
+        the sampling hot path must not re-serialize the skip arrays."""
+        fp = self.__dict__.get("_fingerprint")
+        if fp is None:
+            fp = hashlib.sha256(
+                self.content_key().encode("utf-8")).hexdigest()[:16]
+            object.__setattr__(self, "_fingerprint", fp)
+        return fp
 
     @staticmethod
     def from_json(s: str) -> "Schedule":

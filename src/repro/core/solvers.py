@@ -29,6 +29,9 @@ class Solver:
     init_state: Callable[[], dict]
     step: Callable                           # (x, model_out, s, state, key)
     stochastic: bool = False
+    # step() accepts a *traced* step index and a structure-stable state, so
+    # the executor may run it inside lax.fori_loop / lax.scan segments
+    scannable: bool = True
 
 
 # ---------------------------------------------------------------------------
@@ -106,8 +109,11 @@ def dpmpp_3m_sde(num_steps: int, sched=None, num_train_steps: int = 1000,
         ab_next = 1.0 / (1.0 + sigmas[s + 1] ** 2)
         return x_new * jnp.sqrt(ab_next), state
 
+    # not scannable: step() branches in Python on the step index (final-step
+    # σ→0 shortcut) and the multistep state changes *structure* (None → array)
+    # over the first three steps
     return Solver("dpmpp_3m_sde", num_steps, ts.astype(jnp.float32),
-                  init_state, step, stochastic=True)
+                  init_state, step, stochastic=True, scannable=False)
 
 
 # ---------------------------------------------------------------------------

@@ -162,6 +162,17 @@ def logits_from_hidden(cfg: ModelConfig, params, x):
 # Forward (full-sequence) through stages
 # ---------------------------------------------------------------------------
 
+def _normalize_collect(collect_branches):
+    """``collect_branches`` is either all-or-nothing (bool) or a per-type
+    mask (collection of SmoothCache layer types).  Returns ``None`` for
+    "collect every branch" or a frozenset of types to collect."""
+    if collect_branches is True:
+        return None
+    if not collect_branches:          # False / None / empty collection
+        return frozenset()
+    return frozenset(collect_branches)
+
+
 def _unit_apply(stage: Stage, unit_params, x, *, mode, d_model, positions,
                 pos, unit_cache, memory, cond, skip, unit_branch_cache,
                 use_flash, moe_group_size, moe_strategy, collect,
@@ -178,7 +189,12 @@ def _unit_apply(stage: Stage, unit_params, x, *, mode, d_model, positions,
             cond=cond, skip=skip, branch_cache=bc, use_flash=use_flash,
             moe_group_size=moe_group_size, moe_strategy=moe_strategy,
             video_shape=video_shape)
-        branch_outs.append(bo if collect else None)
+        if collect is None:
+            kept = bo
+        else:
+            types = dict(zip(b.branch_names(), b.branch_types()))
+            kept = {n: v for n, v in bo.items() if types[n] in collect}
+        branch_outs.append(kept or None)
         new_caches.append(nc)
         aux = aux + a
     return x, tuple(branch_outs), tuple(new_caches), aux
@@ -189,7 +205,13 @@ def apply_stages(cfg: ModelConfig, params, x, *, mode="full", positions=None,
                  branch_caches=None, use_flash=False, moe_group_size=2048,
                  moe_strategy="gshard", collect_branches=False,
                  collect_caches=False, remat=False, video_shape=None):
-    """Run all stages. Returns (x, branch_outs, new_caches, aux)."""
+    """Run all stages. Returns (x, branch_outs, new_caches, aux).
+
+    ``collect_branches``: ``True`` collects every branch output, a
+    collection of layer types collects only those (liveness-pruned
+    SmoothCache execution), falsy collects nothing."""
+    collect = _normalize_collect(collect_branches)
+    collect_any = collect is None or len(collect) > 0
     all_branch, all_caches = [], []
     aux_total = jnp.zeros((), jnp.float32)
     for si, st in enumerate(cfg.stages):
@@ -205,10 +227,10 @@ def apply_stages(cfg: ModelConfig, params, x, *, mode="full", positions=None,
                 positions=positions, pos=pos, unit_cache=uc, memory=memory,
                 cond=cond, skip=skip, unit_branch_cache=ubc,
                 use_flash=use_flash, moe_group_size=moe_group_size,
-                moe_strategy=moe_strategy, collect=collect_branches,
+                moe_strategy=moe_strategy, collect=collect,
                 video_shape=video_shape)
             ys = {}
-            if collect_branches:
+            if collect_any:
                 ys["branch"] = bo
             if collect_caches or mode == "decode":
                 ys["cache"] = nc

@@ -4,7 +4,8 @@ The seed environment does not ship ``hypothesis`` and tier-1 must run
 without installing anything.  When hypothesis is available we re-export it
 unchanged; otherwise we fall back to a minimal deterministic property
 runner covering exactly the strategy surface these tests use
-(``floats`` / ``integers`` / ``lists`` / ``sampled_from``): each ``@given``
+(``floats`` / ``integers`` / ``booleans`` / ``lists`` / ``sampled_from``):
+each ``@given``
 test is executed on a fixed-seed sample of inputs plus the interval
 endpoints.  No shrinking, no database — just enough to keep the property
 tests meaningful on a bare environment.
@@ -32,6 +33,11 @@ except ImportError:
             return _Strategy(
                 lambda rng: float(rng.uniform(min_value, max_value)),
                 endpoints=(float(min_value), float(max_value)))
+
+        @staticmethod
+        def booleans(**_):
+            return _Strategy(lambda rng: bool(rng.randint(2)),
+                             endpoints=(False, True))
 
         @staticmethod
         def integers(min_value=0, max_value=10, **_):

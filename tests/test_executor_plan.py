@@ -1,0 +1,297 @@
+"""Execution-plan core: segmentation + liveness analysis (pure), the
+segmented executor path (compile-count regression, bit-identity with the
+eager path, runtime liveness invariant), and plan provenance round-trips."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro import cache, configs
+from repro.core import diffusion, plan as plan_lib, schedule as S, solvers
+from repro.core.executor import SmoothCacheExecutor, cache_entry_names
+
+
+# ---------------------------------------------------------------------------
+# Plan analysis (no model involved)
+# ---------------------------------------------------------------------------
+
+def _sched(skip_rows, types=("attn", "ffn")):
+    skip = {t: np.asarray(v, bool) for t, v in zip(types, skip_rows)}
+    return S.Schedule(skip, len(skip_rows[0]))
+
+
+def test_liveness_is_next_step_lookahead():
+    # attn: C S S C C ; ffn: C C S C C
+    p = plan_lib.analyze(_sched([[0, 1, 1, 0, 0], [0, 0, 1, 0, 0]]))
+    # attn collected only at step 0 (read at 1); its entry computed at step 3
+    # is dead (step 4 recomputes) and must never be collected
+    assert p.collect_at(0) == ("attn",)
+    assert p.collect_at(1) == ("ffn",)       # read at step 2
+    assert p.collect_at(2) == ()             # steps 3+ recompute everything
+    assert p.collect_at(3) == ()
+    assert p.collect_at(4) == ()
+    assert p.live_in_at(2) == ("attn", "ffn")
+    assert p.live_in_at(3) == ()             # dead after the last read
+
+
+def test_never_skipped_type_is_dead_everywhere():
+    p = plan_lib.analyze(_sched([[0, 1, 0, 1], [0, 0, 0, 0]]))
+    assert "ffn" not in p.live_types()
+    for r in p.runs:
+        assert "ffn" not in r.sig.collect
+        assert "ffn" not in r.sig.structure
+        assert "ffn" not in r.live_out
+
+
+def test_runs_are_maximal_mask_segments():
+    """Runs RLE the mask sequence exactly: consecutive runs differ in mask,
+    runs tile [0, S), the program set is one signature per distinct mask,
+    and each run's structure (live_in ∪ collect) is a loop invariant that
+    covers the exact boundary live set."""
+    rng = np.random.RandomState(0)
+    for _ in range(20):
+        rows = [np.r_[False, rng.rand(19) < 0.6] for _ in range(2)]
+        sch = _sched(rows)
+        p = plan_lib.analyze(sch)
+        steps = [s for r in p.runs for s in range(r.start, r.start + r.length)]
+        assert steps == list(range(p.num_steps))
+        for a, b in zip(p.runs, p.runs[1:]):
+            assert a.sig.mask != b.sig.mask
+            assert set(a.live_out) == set(b.sig.live_in)
+            assert set(a.live_out) <= set(a.sig.structure)
+        assert p.num_unique_signatures == len(sch.distinct_masks())
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=40))
+@settings(max_examples=100, deadline=None)
+def test_plan_collect_iff_next_step_reads(bits):
+    rows = [np.r_[False, np.asarray(bits, bool)]]
+    p = plan_lib.analyze(_sched(rows, types=("attn",)))
+    v = np.r_[False, np.asarray(bits, bool)]
+    for s in range(p.num_steps):
+        nxt_reads = s + 1 < p.num_steps and v[s + 1]
+        assert (("attn" in p.collect_at(s)) ==
+                (bool(nxt_reads) and not v[s]))
+        assert (("attn" in p.live_in_at(s)) == bool(v[s]))
+
+
+def test_plan_rejects_step0_skip():
+    with pytest.raises(ValueError, match="step 0"):
+        plan_lib.analyze(_sched([[1, 0], [0, 0]]))
+
+
+def test_plan_json_roundtrip():
+    sch = _sched([[0, 1, 1, 0, 1, 0], [0, 0, 1, 1, 0, 0]])
+    p = plan_lib.analyze(sch)
+    p2 = plan_lib.ExecutionPlan.from_json(p.to_json())
+    assert p2 == p
+    assert p2.schedule_fingerprint == plan_lib.schedule_fingerprint(sch)
+    json.loads(p.to_json())  # strict JSON
+
+
+def test_peak_live_bytes_counts_only_live_types():
+    p = plan_lib.analyze(_sched([[0, 1, 1, 0], [0, 0, 0, 0]]))
+    tb = {"attn": 100, "ffn": 10_000}
+    assert p.peak_live_bytes(tb) == 100     # ffn never resident
+    p0 = plan_lib.analyze(_sched([[0, 0], [0, 0]]))
+    assert p0.peak_live_bytes(tb) == 0
+
+
+def test_branch_cache_type_bytes_matches_layer_count():
+    cfg = configs.get("dit-xl-256", "smoke")
+    tb = plan_lib.branch_cache_type_bytes(cfg, batch=2)
+    n_tok, _, _ = diffusion.token_shape(cfg)
+    per_layer = 2 * n_tok * cfg.d_model * 4
+    layers = {t: 0 for t in cfg.layer_types()}
+    for st_ in cfg.stages:
+        for b in st_.unit:
+            for t in b.branch_types():
+                layers[t] += st_.repeat
+    assert tb == {t: n * per_layer for t, n in layers.items()}
+
+
+# ---------------------------------------------------------------------------
+# Segmented executor
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_dit():
+    cfg = configs.get("dit-xl-256", "smoke")
+    params = diffusion.init_params(jax.random.PRNGKey(0), cfg)
+    # perturb zero-inits so branches matter
+    params = jax.tree.map(
+        lambda a: a + 0.05 * jax.random.normal(jax.random.PRNGKey(7), a.shape),
+        params)
+    return cfg, params
+
+
+def _mixed_schedule(num_steps=10):
+    return S.Schedule({
+        "attn": np.asarray([0, 1, 1, 0, 1, 1, 0, 1, 0, 0][:num_steps], bool),
+        "ffn":  np.asarray([0, 1, 0, 1, 1, 0, 1, 1, 1, 0][:num_steps], bool),
+    }, num_steps)
+
+
+def test_segmented_bit_identical_to_eager(small_dit):
+    cfg, params = small_dit
+    sch = _mixed_schedule()
+    label = jnp.zeros((2,), jnp.int32)
+    ex = SmoothCacheExecutor(cfg, solvers.ddim(10), cfg_scale=1.5)
+    x_eager = ex.sample(params, jax.random.PRNGKey(2), 2, schedule=sch,
+                        label=label)
+    x_seg = ex.sample_compiled(params, jax.random.PRNGKey(2), 2, schedule=sch,
+                               label=label, check=True)
+    np.testing.assert_array_equal(np.asarray(x_eager), np.asarray(x_seg))
+
+
+def test_segmented_no_cache_matches_plain(small_dit):
+    cfg, params = small_dit
+    label = jnp.zeros((1,), jnp.int32)
+    ex = SmoothCacheExecutor(cfg, solvers.ddim(6), cfg_scale=1.5)
+    x_plain = ex.sample(params, jax.random.PRNGKey(1), 1, label=label)
+    x_seg = ex.sample_compiled(params, jax.random.PRNGKey(1), 1,
+                               label=label, check=True)
+    np.testing.assert_array_equal(np.asarray(x_plain), np.asarray(x_seg))
+    # an uncached run is ONE signature → one compiled segment program
+    assert ex.compiled_variant_count("seg") == 1
+
+
+def test_compile_count_equals_unique_signatures(small_dit):
+    cfg, params = small_dit
+    sch = _mixed_schedule()
+    label = jnp.zeros((1,), jnp.int32)
+    ex = SmoothCacheExecutor(cfg, solvers.ddim(10), cfg_scale=1.5)
+    plan = ex.plan_for(sch)
+    assert ex.compiled_variant_count("seg") == 0
+    ex.sample_compiled(params, jax.random.PRNGKey(0), 1, schedule=sch,
+                       label=label)
+    assert ex.compiled_variant_count("seg") == plan.num_unique_signatures
+    # re-sampling compiles nothing new
+    ex.sample_compiled(params, jax.random.PRNGKey(1), 1, schedule=sch,
+                       label=label)
+    assert ex.compiled_variant_count("seg") == plan.num_unique_signatures
+    # far fewer programs than steps or segments
+    assert plan.num_unique_signatures <= len(plan.runs) <= sch.num_steps
+
+
+def test_dead_branches_never_resident(small_dit):
+    """'ffn' is never skipped → its branch outputs must never enter the
+    cache pytree (check=True asserts the resident set equals the plan's
+    live set after every segment)."""
+    cfg, params = small_dit
+    sch = S.Schedule({
+        "attn": np.asarray([0, 1, 0, 1, 0, 1], bool),
+        "ffn":  np.zeros(6, bool)}, 6)
+    plan = plan_lib.analyze(sch)
+    assert "ffn" not in plan.live_types()
+    assert all("ffn" != t for r in plan.runs for t in r.sig.collect)
+    # the runtime cache for the skip-attn steps holds attn entries only
+    names = cache_entry_names(cfg, ("attn",))
+    assert names and all(n == "mixer" for _, _, n in names)
+    label = jnp.zeros((1,), jnp.int32)
+    ex = SmoothCacheExecutor(cfg, solvers.ddim(6), cfg_scale=1.5)
+    x = ex.sample_compiled(params, jax.random.PRNGKey(0), 1, schedule=sch,
+                           label=label, check=True)
+    assert bool(jnp.all(jnp.isfinite(x)))
+
+
+def test_segmented_non_scannable_solver(small_dit):
+    """DPM++(3M) SDE steps in Python (state structure changes) — the
+    segmented path falls back to per-signature model programs + eager
+    solver and still matches the eager path bitwise."""
+    cfg, params = small_dit
+    assert not solvers.dpmpp_3m_sde(8).scannable
+    sch = S.fora(cfg.layer_types(), 8, 2)
+    label = jnp.zeros((1,), jnp.int32)
+    ex = SmoothCacheExecutor(cfg, solvers.dpmpp_3m_sde(8), cfg_scale=1.5)
+    xa = ex.sample(params, jax.random.PRNGKey(3), 1, schedule=sch, label=label)
+    xb = ex.sample_compiled(params, jax.random.PRNGKey(3), 1, schedule=sch,
+                            label=label, check=True)
+    np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+    assert 0 < ex.compiled_variant_count("sigstep") \
+        <= ex.plan_for(sch).num_unique_signatures
+
+
+def test_rectified_flow_segmented(small_dit):
+    cfg, params = small_dit
+    sch = S.fora(cfg.layer_types(), 6, 3)
+    label = jnp.zeros((1,), jnp.int32)
+    ex = SmoothCacheExecutor(cfg, solvers.rectified_flow(6), cfg_scale=1.5)
+    xa = ex.sample(params, jax.random.PRNGKey(4), 1, schedule=sch, label=label)
+    xb = ex.sample_compiled(params, jax.random.PRNGKey(4), 1, schedule=sch,
+                            label=label, check=True)
+    np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+
+
+def test_eager_memo_has_no_duplicate_programs(small_dit):
+    """Regression for the duplicate-compilation bug: the eager fn table is
+    keyed only by (mask, has_cache) — running with and without a collect
+    hook reuses the same programs."""
+    cfg, params = small_dit
+    sch = _mixed_schedule(8)
+    label = jnp.zeros((1,), jnp.int32)
+    ex = SmoothCacheExecutor(cfg, solvers.ddim(8), cfg_scale=1.5)
+    ex.sample(params, jax.random.PRNGKey(0), 1, schedule=sch, label=label)
+    n = ex.compiled_variant_count("eager")
+    seen = []
+    ex.sample(params, jax.random.PRNGKey(0), 1, schedule=sch, label=label,
+              collect_hook=lambda s, c: seen.append(s))
+    assert len(seen) == 8
+    assert ex.compiled_variant_count("eager") == n
+    distinct = len(sch.distinct_masks())
+    assert n <= distinct + 1      # +1: the first step runs without a cache
+
+
+def test_plan_mismatch_rejected(small_dit):
+    cfg, params = small_dit
+    ex = SmoothCacheExecutor(cfg, solvers.ddim(6), cfg_scale=1.5)
+    other = plan_lib.analyze(S.fora(cfg.layer_types(), 6, 3))
+    with pytest.raises(ValueError, match="fingerprint"):
+        ex.sample_compiled(params, jax.random.PRNGKey(0), 1,
+                           schedule=S.fora(cfg.layer_types(), 6, 2),
+                           label=jnp.zeros((1,), jnp.int32), plan=other)
+
+
+# ---------------------------------------------------------------------------
+# Plan provenance through artifacts / pipeline
+# ---------------------------------------------------------------------------
+
+def test_artifact_plan_round_trip(small_dit, tmp_path):
+    cfg, params = small_dit
+    label = jnp.zeros((2,), jnp.int32)
+    calib = cache.DiffusionPipeline(cfg, solvers.ddim(6),
+                                    "smoothcache:alpha=0.5", cfg_scale=1.5)
+    calib.calibrate(params, jax.random.PRNGKey(1), 2,
+                    cond_args={"label": label})
+    assert calib.artifact.plan is not None
+    assert calib.plan.num_steps == 6
+    path = str(tmp_path / "plan.cache.json")
+    calib.save_artifact(path)
+
+    serve = cache.DiffusionPipeline(cfg, solvers.ddim(6),
+                                    "smoothcache:alpha=0.5", cfg_scale=1.5)
+    serve.load_artifact(path)
+    assert serve.plan == calib.plan          # reloaded, not re-derived
+    x1 = calib.generate(params, jax.random.PRNGKey(2), 2, label=label)
+    x2 = serve.generate(params, jax.random.PRNGKey(2), 2, label=label)
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+    # compiled (segmented) and eager generate agree bitwise
+    x3 = serve.generate(params, jax.random.PRNGKey(2), 2, label=label,
+                        compiled=False)
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x3))
+
+
+def test_artifact_stale_plan_discarded(small_dit):
+    cfg, _ = small_dit
+    types = cfg.layer_types()
+    sch_a = S.fora(types, 6, 2)
+    sch_b = S.fora(types, 6, 3)
+    art = cache.CacheArtifact(
+        arch=cfg.name, solver="ddim", num_steps=6,
+        policy={"kind": "static", "n": 3}, curves={}, schedule=sch_b,
+        plan=plan_lib.analyze(sch_a).to_jsonable())
+    p = art.execution_plan()
+    assert p.schedule_fingerprint == plan_lib.schedule_fingerprint(sch_b)

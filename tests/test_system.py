@@ -59,7 +59,7 @@ def test_full_smoothcache_pipeline():
     # compiled-FLOP reduction matches the schedule (paper's TMACs claim)
     from repro.launch import hlo_analysis
     def flops_of(schedule):
-        fn = ex.build_sampler_fn(schedule, batch=2)
+        fn = ex.build_sampler_fn(schedule)
         lab = jax.ShapeDtypeStruct((2,), jnp.int32)
         xs = jax.ShapeDtypeStruct((2,) + tuple(cfg.latent_shape), jnp.float32)
         ps = jax.eval_shape(lambda: params)
