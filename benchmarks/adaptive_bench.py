@@ -1,0 +1,155 @@
+"""Static SmoothCache vs input-adaptive runtime caching.
+
+Calibrates one adaptive policy (SmoothCache base at a ~50% compute budget,
+TeaCache-style accumulated-error threshold τ) on the smoke DiT, then runs
+**heterogeneous inputs** (different seeds and class labels) through three
+paths:
+
+* ``reference`` — uncached sampling (quality anchor),
+* ``static``    — ``sample_compiled`` under the offline schedule (the same
+                  compute for every input),
+* ``adaptive``  — ``sample_adaptive`` (per-input decisions dispatched over
+                  the precompiled mask-lattice pool).
+
+Per input it reports realized compute fraction, steady-state wall time,
+and L1 distance to the uncached reference; the adaptive path's program
+count is asserted against the pool size (compile count must be bounded by
+the pool, never per step).  Writes ``BENCH_adaptive.json`` (results dir +
+repo-root trajectory mirror).
+
+    PYTHONPATH=src python -m benchmarks.run --only adaptive
+    ADAPTIVE_BENCH_STEPS=20 PYTHONPATH=src python -m benchmarks.adaptive_bench
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro import cache, configs
+from repro.core import diffusion, plan as plan_lib, solvers
+from repro.core.executor import SmoothCacheExecutor
+
+STEPS = int(os.environ.get("ADAPTIVE_BENCH_STEPS", "30"))
+TAU = float(os.environ.get("ADAPTIVE_BENCH_TAU", "0.5"))
+BATCH = 1
+CFG_SCALE = 1.5
+CALIB_BATCH = 2
+#: (seed, label) pairs — heterogeneous inputs for the per-input decisions
+INPUTS = [(11, 0), (23, 3), (47, 7), (61, 1)]
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(out)
+    return out, time.perf_counter() - t0
+
+
+def _rel_l1(a, b) -> float:
+    a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+    return float(np.sum(np.abs(a - b)) / (np.sum(np.abs(b)) + 1e-12))
+
+
+def run() -> None:
+    cfg = configs.get("dit-xl-256", "smoke")
+    solver = solvers.ddim(STEPS)
+    params = diffusion.init_params(jax.random.PRNGKey(0), cfg)
+    params = jax.tree.map(
+        lambda a: a + 0.05 * jax.random.normal(jax.random.PRNGKey(7), a.shape),
+        params)
+
+    pipe = cache.DiffusionPipeline(
+        cfg, solver, f"adaptive:base=budget(target=0.5),tau={TAU}",
+        cfg_scale=CFG_SCALE)
+    calib_label = jnp.zeros((CALIB_BATCH,), jnp.int32)
+    t0 = time.perf_counter()
+    pipe.calibrate(params, jax.random.PRNGKey(1), CALIB_BATCH,
+                   cond_args={"label": calib_label})
+    calib_s = time.perf_counter() - t0
+    sch = pipe.schedule
+    pool = plan_lib.mask_lattice(sch)
+    static_fraction = float(np.mean([sch.compute_fraction(t)
+                                     for t in sch.skip]))
+    types = cfg.layer_types()
+
+    ex_static = SmoothCacheExecutor(cfg, solver, cfg_scale=CFG_SCALE)
+    ex_ref = SmoothCacheExecutor(cfg, solver, cfg_scale=CFG_SCALE)
+
+    inputs = []
+    for seed, lab in INPUTS:
+        label = jnp.full((BATCH,), lab % cfg.num_classes, jnp.int32)
+        key = jax.random.PRNGKey(seed)
+        x_ref, _ = _timed(lambda: ex_ref.sample(params, key, BATCH,
+                                                label=label))
+
+        # static: warm once for compile, then time steady state
+        run_static = lambda: ex_static.sample_compiled(
+            params, key, BATCH, schedule=sch, label=label)
+        _, t_static_first = _timed(run_static)
+        x_static, t_static = _timed(run_static)
+
+        run_adaptive = lambda: pipe.generate(params, key, BATCH, label=label,
+                                             return_decisions=True)
+        _, t_adapt_first = _timed(run_adaptive)
+        (x_adapt, decisions), t_adapt = _timed(run_adaptive)
+        skipped = sum(len(d) for d in decisions)
+        adapt_fraction = 1.0 - skipped / (STEPS * len(types))
+
+        inputs.append({
+            "seed": seed, "label": int(lab % cfg.num_classes),
+            "static": {"compute_fraction": static_fraction,
+                       "sample_s": t_static,
+                       "l1_vs_reference": _rel_l1(x_static, x_ref)},
+            "adaptive": {"compute_fraction": adapt_fraction,
+                         "sample_s": t_adapt,
+                         "l1_vs_reference": _rel_l1(x_adapt, x_ref),
+                         "skips_per_step": [list(d) for d in decisions]},
+        })
+
+    programs = pipe.executor.compiled_variant_count("sigstep")
+    assert programs <= len(pool), (programs, len(pool))
+
+    result = {
+        "config": cfg.name, "solver": solver.name, "steps": STEPS,
+        "batch": BATCH, "cfg_scale": CFG_SCALE, "tau": TAU,
+        "policy": pipe.policy.spec(),
+        "calibrate_s": calib_s,
+        "pool": {"size": len(pool),
+                 "masks": [list(sig.live_in) for sig in pool],
+                 "programs_compiled": programs},
+        "static_schedule": {"name": sch.name, "alpha": sch.alpha,
+                            "compute_fraction": static_fraction},
+        "inputs": inputs,
+        "mean": {
+            "static_compute_fraction": static_fraction,
+            "adaptive_compute_fraction": float(np.mean(
+                [i["adaptive"]["compute_fraction"] for i in inputs])),
+            "static_sample_s": float(np.mean(
+                [i["static"]["sample_s"] for i in inputs])),
+            "adaptive_sample_s": float(np.mean(
+                [i["adaptive"]["sample_s"] for i in inputs])),
+            "static_l1": float(np.mean(
+                [i["static"]["l1_vs_reference"] for i in inputs])),
+            "adaptive_l1": float(np.mean(
+                [i["adaptive"]["l1_vs_reference"] for i in inputs])),
+        },
+    }
+    common.write_bench_json("BENCH_adaptive.json", result)
+
+    m = result["mean"]
+    for name in ("static", "adaptive"):
+        common.emit(
+            f"adaptive/{name}_sample", m[f"{name}_sample_s"] * 1e6,
+            f"compute_frac={m[f'{name}_compute_fraction']:.3f}"
+            f";l1_vs_ref={m[f'{name}_l1']:.4f}")
+    common.emit("adaptive/pool", len(pool),
+                f"programs={programs};inputs={len(inputs)};tau={TAU}")
+
+
+if __name__ == "__main__":
+    run()

@@ -11,6 +11,29 @@ import numpy as np
 
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
 
+#: repo root — BENCH_*.json files are mirrored here so the perf trajectory
+#: is tracked per PR in-tree (results/ holds the working copies)
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def write_bench_json(filename: str, obj) -> str:
+    """Write a benchmark result JSON to RESULTS_DIR and mirror the
+    ``BENCH_*.json`` trajectory files at the repo root.  The mirror fires
+    only when the resolved results dir *is* the repo's canonical
+    ``results/`` — scratch runs that redirect REPRO_RESULTS (or write
+    into some other cwd's results dir) never touch the tracked copies."""
+    import json
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, filename)
+    payload = json.dumps(obj, indent=2, sort_keys=True)
+    with open(path, "w") as f:
+        f.write(payload)
+    if (filename.startswith("BENCH_") and os.path.abspath(RESULTS_DIR)
+            == os.path.join(REPO_ROOT, "results")):
+        with open(os.path.join(REPO_ROOT, filename), "w") as f:
+            f.write(payload)
+    return path
+
 
 def time_call(fn, *args, iters: int = 3, warmup: int = 1) -> float:
     """Median wall-time per call in microseconds (CPU; jit-warmed)."""

@@ -15,7 +15,6 @@ CI can track the perf trajectory per PR.
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
@@ -122,10 +121,7 @@ def run() -> None:
         "segmented_bitwise_equals_eager": bitwise,
         "paths": paths,
     }
-    os.makedirs(common.RESULTS_DIR, exist_ok=True)
-    out = os.path.join(common.RESULTS_DIR, "BENCH_executor.json")
-    with open(out, "w") as f:
-        json.dump(result, f, indent=2, sort_keys=True)
+    common.write_bench_json("BENCH_executor.json", result)
 
     for name, p in paths.items():
         common.emit(f"executor/{name}_sample", p["sample_s"] * 1e6,

@@ -16,6 +16,7 @@ MODULES = [
     ("fig2", "benchmarks.fig2_error_curves"),
     ("table1", "benchmarks.table1_dit"),
     ("executor", "benchmarks.executor_bench"),
+    ("adaptive", "benchmarks.adaptive_bench"),
     ("table2", "benchmarks.table2_video"),
     ("table3", "benchmarks.table3_audio"),
     ("kernels", "benchmarks.kernel_bench"),

@@ -19,6 +19,6 @@ grammar (flat ``name:k=v,...`` or nested ``per_type(attn=...,ffn=...)``).
 from repro.cache.artifact import CacheArtifact  # noqa: F401
 from repro.cache.pipeline import DiffusionPipeline, Pipeline  # noqa: F401
 from repro.cache.policy import (  # noqa: F401
-    BudgetedSmoothCache, CachePolicy, NoCache, PerLayerType, SmoothCache,
-    StaticInterval)
+    AdaptivePolicy, BudgetedSmoothCache, CachePolicy, NoCache, PerLayerType,
+    SmoothCache, StaticInterval)
 from repro.cache.registry import from_config, get, names, register  # noqa: F401

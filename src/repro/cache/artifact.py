@@ -23,7 +23,9 @@ from repro.cache.policy import CachePolicy
 from repro.core import plan as plan_lib
 from repro.core.schedule import Schedule
 
-FORMAT_VERSION = 1
+# v2: adds the optional ``adaptive`` payload (tau + fitted proxy→error map
+# + candidate pool provenance); v1 artifacts load unchanged
+FORMAT_VERSION = 2
 
 
 @dataclass
@@ -36,6 +38,7 @@ class CacheArtifact:
     curves: Dict[str, np.ndarray]             # {type: (S, K+1) float64}
     schedule: Optional[Schedule] = None       # resolved skip masks
     plan: Optional[Dict] = None               # ExecutionPlan.to_jsonable()
+    adaptive: Optional[Dict] = None           # tau, proxy_map, pool, k_max
     meta: Dict = field(default_factory=dict)  # calib_batch, k_max, cfg_scale…
 
     # -- resolution ----------------------------------------------------------
@@ -84,6 +87,7 @@ class CacheArtifact:
             "schedule": (json.loads(self.schedule.to_json())
                          if self.schedule is not None else None),
             "plan": self.plan,
+            "adaptive": self.adaptive,
             "meta": self.meta,
         }, sort_keys=True, allow_nan=False)
 
@@ -105,6 +109,7 @@ class CacheArtifact:
             schedule=(Schedule.from_json(json.dumps(sch))
                       if sch is not None else None),
             plan=d.get("plan"),
+            adaptive=d.get("adaptive"),
             meta=d.get("meta", {}))
 
     def save(self, path: str) -> str:

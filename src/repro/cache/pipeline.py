@@ -26,7 +26,7 @@ import numpy as np
 
 from repro.cache import registry
 from repro.cache.artifact import CacheArtifact
-from repro.cache.policy import CachePolicy
+from repro.cache.policy import AdaptivePolicy, CachePolicy
 from repro.core import calibration as calibration_lib
 from repro.core import plan as plan_lib
 from repro.core import solvers as solvers_lib
@@ -54,6 +54,7 @@ class DiffusionPipeline:
         self.per_sample: Optional[Dict[str, np.ndarray]] = None
         self._schedule: Optional[Schedule] = None
         self._plan: Optional[plan_lib.ExecutionPlan] = None
+        self._proxy_map: Optional[calibration_lib.ProxyMap] = None
 
     # -- introspection -------------------------------------------------------
 
@@ -78,6 +79,12 @@ class DiffusionPipeline:
             self._plan = self.executor.plan_for(self._schedule)
         return self._plan
 
+    @property
+    def proxy_map(self) -> Optional[calibration_lib.ProxyMap]:
+        """Fitted proxy→error map (adaptive policies): set by
+        ``calibrate()`` or reloaded by ``load_artifact()``."""
+        return self._proxy_map
+
     def summary(self) -> str:
         head = (f"DiffusionPipeline({self.cfg.name}, {self.solver.name}"
                 f"x{self.solver.num_steps}, policy={self.policy.spec()})")
@@ -94,21 +101,35 @@ class DiffusionPipeline:
         the policy's schedule, and return a serializable artifact.  Also
         stores per-sample curves on ``self.per_sample`` for CI analysis."""
         k = k_max if k_max is not None else max(self.policy.k_max, 1)
-        curves, per_sample, _ = calibration_lib.calibrate(
+        rec = calibration_lib.calibrate_record(
             self.executor, params, key, batch, cond_args=cond_args, k_max=k)
-        self.per_sample = per_sample
+        curves = rec.curves
+        self.per_sample = rec.per_sample
         sch = self.policy.build(self.cfg.layer_types(),
                                 self.solver.num_steps,
                                 curves if self.policy.requires_calibration
                                 else None)
         self._plan = self.executor.plan_for(sch)
+        adaptive = None
+        if isinstance(self.policy, AdaptivePolicy):
+            self._proxy_map = rec.proxy_map
+            pool = plan_lib.mask_lattice(sch)
+            adaptive = {
+                "tau": self.policy.tau,
+                "k_max": self.policy.k_max,
+                "proxy_map": rec.proxy_map.to_jsonable(),
+                "pool": [list(sig.live_in) for sig in pool],
+            }
         self.artifact = CacheArtifact(
             arch=self.cfg.name, solver=self.solver.name,
             num_steps=self.solver.num_steps,
             policy=self.policy.to_config(), curves=curves, schedule=sch,
-            plan=self._plan.to_jsonable(),
+            plan=self._plan.to_jsonable(), adaptive=adaptive,
             meta={"calib_batch": batch, "k_max": k,
-                  "cfg_scale": self.executor.cfg_scale})
+                  "cfg_scale": self.executor.cfg_scale,
+                  # under CFG only the conditioned half of the doubled
+                  # [cond; uncond] batch enters the curves
+                  "calib_cfg_half": "cond" if rec.cfg_halved else None})
         self._schedule = sch
         return self.artifact
 
@@ -160,7 +181,38 @@ class DiffusionPipeline:
                 raise ValueError(
                     f"artifact solver {art.solver}x{art.num_steps} != "
                     f"pipeline {self.solver.name}x{self.solver.num_steps}")
+            # the curves depend on guidance strength; legacy artifacts
+            # without the key are tolerated, a recorded mismatch is not
+            if ("cfg_scale" in art.meta
+                    and art.meta["cfg_scale"] != self.executor.cfg_scale):
+                raise ValueError(
+                    f"artifact was calibrated at "
+                    f"cfg_scale={art.meta['cfg_scale']}, pipeline runs "
+                    f"cfg_scale={self.executor.cfg_scale}")
+            # adaptive provenance: the runtime rule must use the artifact's
+            # decision parameters, not whatever this pipeline was typo'd with
+            if art.adaptive and isinstance(self.policy, AdaptivePolicy):
+                for k, mine in (("tau", self.policy.tau),
+                                ("k_max", self.policy.k_max)):
+                    if k in art.adaptive and art.adaptive[k] != mine:
+                        raise ValueError(
+                            f"artifact's adaptive policy has {k}="
+                            f"{art.adaptive[k]}, pipeline policy has "
+                            f"{k}={mine}")
+                # the stored pool must be the one this schedule derives —
+                # a mismatch means the payload was edited or mispaired
+                if "pool" in art.adaptive and art.schedule is not None:
+                    derived = [list(sig.live_in) for sig in
+                               plan_lib.mask_lattice(art.schedule)]
+                    if art.adaptive["pool"] != derived:
+                        raise ValueError(
+                            f"artifact's adaptive pool "
+                            f"{art.adaptive['pool']} does not match the "
+                            f"stored schedule's mask lattice {derived}")
         self.artifact = art
+        if art.adaptive and art.adaptive.get("proxy_map"):
+            self._proxy_map = calibration_lib.ProxyMap.from_jsonable(
+                art.adaptive["proxy_map"])
         self._schedule = (art.schedule if art.schedule is not None
                           else art.resolve(self.policy))
         # serving reloads the pre-analyzed plan instead of re-deriving it
@@ -171,12 +223,20 @@ class DiffusionPipeline:
     # -- generation ----------------------------------------------------------
 
     def generate(self, params, key, batch: int, *, label=None, memory=None,
-                 schedule=_UNSET, compiled: bool = True):
+                 schedule=_UNSET, compiled: bool = True,
+                 return_decisions: bool = False):
         """Sample a batch under the pipeline's schedule.  ``schedule=`` (a
         Schedule, a policy spec, or None for the uncached baseline)
         overrides per-call; ``compiled=True`` uses the segmented-plan
         executor path (one compiled program per unique mask/liveness
-        signature, reusing the pipeline's pre-analyzed plan)."""
+        signature, reusing the pipeline's pre-analyzed plan).
+
+        Adaptive policies route transparently to the executor's
+        ``sample_adaptive`` path (per-input runtime decisions over the
+        precompiled candidate pool); pass ``return_decisions=True`` to
+        also get the realized per-step skip sets.  An explicit
+        ``schedule=`` override, or ``compiled=False``, falls back to the
+        static paths."""
         if schedule is _UNSET:
             sch = self._schedule
             if sch is None and self.policy.requires_calibration:
@@ -187,13 +247,32 @@ class DiffusionPipeline:
                 sch = self.policy.build(self.cfg.layer_types(),
                                         self.solver.num_steps)
                 self._schedule = sch
+            if isinstance(self.policy, AdaptivePolicy) and compiled:
+                if self.policy.tau > 0 and self._proxy_map is None:
+                    raise ValueError(
+                        f"policy {self.policy.spec()!r} needs a calibrated "
+                        "proxy map — run calibrate()/load_artifact() before "
+                        "generate()")
+                return self.executor.sample_adaptive(
+                    params, key, batch, schedule=sch, tau=self.policy.tau,
+                    proxy_map=self._proxy_map, k_max=self.policy.k_max,
+                    label=label, memory=memory,
+                    return_decisions=return_decisions)
         elif schedule is None or isinstance(schedule, Schedule):
             sch = schedule
         else:
             sch = self.schedule_for(schedule)
+        if return_decisions:
+            raise ValueError("return_decisions is only meaningful on the "
+                             "adaptive path (no schedule= override, "
+                             "compiled=True)")
         if compiled:
-            plan = self._plan if (sch is not None
-                                  and sch is self._schedule) else None
+            # route through the lazy property: after prepare() reset
+            # _plan, and when serving from an artifact, this is what
+            # hands the pre-analyzed plan to the executor instead of
+            # silently re-deriving it
+            plan = self.plan if (sch is not None
+                                 and sch is self._schedule) else None
             return self.executor.sample_compiled(
                 params, key, batch, schedule=sch, label=label, memory=memory,
                 plan=plan)

@@ -20,12 +20,18 @@ Implemented policies
 ``PerLayerType``          different sub-policy per layer type — the
                           Δ-DiT [arXiv:2406.01125] / CorGi block-tailored
                           direction, expressed compositionally.
+``AdaptivePolicy``        TeaCache-style input-adaptive runtime rule over a
+                          static base policy: the base schedule defines the
+                          precompiled candidate pool, a calibrated
+                          proxy→error map + threshold τ decide per step and
+                          per input what to reuse (τ=0 ⇒ the static
+                          schedule, bit-identically).
 """
 from __future__ import annotations
 
 import abc
 import dataclasses
-from typing import Dict, Mapping, Optional, Sequence
+from typing import Dict, Mapping, Optional, Sequence, Union
 
 import numpy as np
 
@@ -193,6 +199,60 @@ class BudgetedSmoothCache(CachePolicy):
 
     def to_config(self):
         return {"name": self.name, "target": self.target, "k_max": self.k_max}
+
+
+# ---------------------------------------------------------------------------
+# Input-adaptive runtime policy
+# ---------------------------------------------------------------------------
+
+class AdaptivePolicy(CachePolicy):
+    """Input-adaptive runtime caching over a static ``base`` policy.
+
+    The base policy's schedule is resolved offline as usual; it defines the
+    *candidate signature pool* (the mask lattice over its ever-skipped
+    types — see :func:`repro.core.plan.mask_lattice`) and the static
+    fallback.  At runtime the executor's ``sample_adaptive`` path maps a
+    cheap per-step proxy signal (relative L1 change of the latent) through
+    a calibrated proxy→error map and reuses each layer type while the
+    error accumulated since its last compute stays below ``tau``,
+    dispatching among the pool's precompiled programs — so per-input
+    schedules never trigger per-step compilation.
+
+    ``tau=0`` disables the runtime rule and reproduces the base schedule
+    bit-identically; larger ``tau`` grants each cache run a larger
+    estimated-error budget (more reuse on easy inputs, earlier recompute
+    on hard ones).  Calibration-free bases (e.g. ``static``) still require
+    calibration: the proxy→error map is fitted from the same pass.
+    """
+    name = "adaptive"
+    requires_calibration = True
+
+    def __init__(self, base: Union[str, Dict, CachePolicy] = "smoothcache",
+                 tau: float = 0.05):
+        from repro.cache import registry   # late: registry imports policy
+        self.base = registry.get(base)
+        if isinstance(self.base, AdaptivePolicy):
+            raise ValueError("adaptive policies do not nest")
+        if tau < 0:
+            raise ValueError(f"tau must be >= 0, got {tau}")
+        self.tau = float(tau)
+        self.k_max = self.base.k_max
+
+    def build(self, types, num_steps, curves=None) -> Schedule:
+        """The *static* base schedule — the adaptive runtime's fallback and
+        the source of its candidate pool."""
+        return self.base.build(
+            types, num_steps,
+            curves if self.base.requires_calibration else None)
+
+    def to_config(self):
+        return {"name": self.name, "base": self.base.to_config(),
+                "tau": self.tau}
+
+    def spec(self) -> str:
+        s = self.base.spec()
+        base = s.replace(":", "(", 1) + ")" if ":" in s else s
+        return f"adaptive:base={base},tau={self.tau:g}"
 
 
 # ---------------------------------------------------------------------------

@@ -51,6 +51,12 @@ def _per_type(default=None, **policies) -> P.PerLayerType:
                           else None)
 
 
+@register("adaptive", "teacache")
+def _adaptive(base="smoothcache", tau=0.05) -> P.AdaptivePolicy:
+    # base may be a nested spec string, a to_config() dict, or a policy
+    return P.AdaptivePolicy(base=base, tau=tau)
+
+
 # -- spec parsing ------------------------------------------------------------
 
 def _split_top(s: str, sep: str = ","):
@@ -93,7 +99,12 @@ def _coerce(v: str):
 def parse(spec: str):
     """``spec`` → (name, kwargs)."""
     spec = spec.strip()
-    if "(" in spec:
+    # a spec is parenthesized only when "(" opens the *top-level* arg list,
+    # i.e. precedes any ":" — a flat spec may carry parenthesized nested
+    # values ("per_type:attn=smoothcache(alpha=0.1)") whose "(" belongs to
+    # the value, not the grammar
+    i_par, i_col = spec.find("("), spec.find(":")
+    if i_par != -1 and (i_col == -1 or i_par < i_col):
         if not spec.endswith(")"):
             raise ValueError(f"malformed policy spec {spec!r}")
         name, inner = spec.split("(", 1)

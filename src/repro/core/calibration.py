@@ -9,10 +9,23 @@ The error at step s for lag k is
 
 averaged over calibration samples; per-sample curves are also returned so
 the Fig. 2 confidence intervals can be reproduced.
+
+Under classifier-free guidance the executor doubles the batch to
+``[cond; uncond]``; calibration keeps only the **conditioned half**, so
+per-sample curves have leading dim ``calib_batch`` (not ``2*calib_batch``)
+and the mean curves never mix guided and unguided error statistics.
+
+For input-adaptive policies (:class:`repro.cache.AdaptivePolicy`) the same
+pass additionally records a cheap per-step **proxy signal** — the relative
+L1 change of the model input (the latent) between consecutive steps, the
+exact quantity the runtime rule can compute before each model call — and
+:func:`fit_proxy_map` fits a per-type linear proxy→error mapping that the
+runtime accumulates against its threshold τ.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Mapping, Optional
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -77,18 +90,152 @@ def error_curves_from_trajectory(cfg: ModelConfig,
     return mean_curves, per_sample
 
 
-def calibrate(executor, params, key, batch: int, *, cond_args=None,
-              k_max: int = 3):
+# ---------------------------------------------------------------------------
+# Proxy signal (input-adaptive policies)
+# ---------------------------------------------------------------------------
+
+def rel_l1_change(cur, prev):
+    """||cur − prev||₁ / ||prev||₁ over the whole tensor — THE proxy
+    formula, written backend-agnostically (``__abs__``/``.sum()``) so the
+    calibration pass (numpy, float64) and the executor's jitted runtime
+    proxy (jax, device dtype) provably compute the same signal from one
+    definition."""
+    return abs(cur - prev).sum() / (abs(prev).sum() + 1e-12)
+
+
+def proxy_signal(cur, prev) -> float:
+    """Relative L1 change of the model input between consecutive steps —
+    one scalar per step over the whole batch tensor.  This is the runtime
+    decision signal: it needs only the latents, so it is computable
+    *before* the model call it gates."""
+    return float(rel_l1_change(np.asarray(cur, np.float64),
+                               np.asarray(prev, np.float64)))
+
+
+def proxies_from_inputs(inputs: List[np.ndarray]) -> np.ndarray:
+    """Per-step proxy signals from the model-input trajectory.
+    ``proxies[0]`` is NaN (no previous input); ``proxies[s]`` compares the
+    inputs of steps s and s−1."""
+    out = np.full(len(inputs), np.nan)
+    for s in range(1, len(inputs)):
+        out[s] = proxy_signal(inputs[s], inputs[s - 1])
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ProxyMap:
+    """Fitted per-type linear map from the proxy signal to the one-step
+    (lag-1) relative output error: ``est_t(p) = max(a_t·p + b_t, 0)``.
+
+    The runtime rule accumulates ``est_t(proxy_s)`` over consecutive
+    reuse steps and recomputes type ``t`` once the sum would cross τ —
+    TeaCache-style, but with the mapping *fitted during calibration* and
+    shipped in the :class:`~repro.cache.artifact.CacheArtifact` so serving
+    never recalibrates."""
+    coeffs: Dict[str, Tuple[float, float]]   # type → (a, b)
+    mean_proxy: float = float("nan")         # calibration-mean proxy (diag)
+
+    def est(self, t: str, proxy: float) -> float:
+        a, b = self.coeffs[t]
+        return max(a * float(proxy) + b, 0.0)
+
+    def types(self):
+        return sorted(self.coeffs)
+
+    def to_jsonable(self) -> Dict:
+        return {"coeffs": {t: [float(a), float(b)]
+                           for t, (a, b) in sorted(self.coeffs.items())},
+                "mean_proxy": None if np.isnan(self.mean_proxy)
+                else float(self.mean_proxy)}
+
+    @staticmethod
+    def from_jsonable(d: Mapping) -> "ProxyMap":
+        mp = d.get("mean_proxy")
+        return ProxyMap(
+            coeffs={t: (float(a), float(b))
+                    for t, (a, b) in d["coeffs"].items()},
+            mean_proxy=float("nan") if mp is None else float(mp))
+
+
+def fit_proxy_map(curves: Mapping[str, np.ndarray],
+                  proxies: np.ndarray) -> ProxyMap:
+    """Least-squares fit of the lag-1 error column against the proxy
+    signal, per layer type.  Degenerate data (fewer than two finite points,
+    or a constant proxy) falls back to the constant map ``b = mean(err)``,
+    which still yields a sensible accumulate-and-threshold rule."""
+    coeffs = {}
+    for t, err in curves.items():
+        xs = np.asarray(proxies, np.float64)
+        ys = np.asarray(err[:, 1], np.float64)       # lag-1 column
+        ok = np.isfinite(xs) & np.isfinite(ys)
+        xs, ys = xs[ok], ys[ok]
+        if xs.size >= 2 and np.ptp(xs) > 1e-12:
+            a, b = np.polyfit(xs, ys, 1)
+        else:
+            a, b = 0.0, float(np.mean(ys)) if ys.size else 0.0
+        coeffs[t] = (float(a), float(b))
+    finite = np.asarray(proxies)[np.isfinite(proxies)]
+    return ProxyMap(coeffs=coeffs,
+                    mean_proxy=float(np.mean(finite)) if finite.size
+                    else float("nan"))
+
+
+# ---------------------------------------------------------------------------
+# Calibration passes
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CalibrationRecord:
+    """Everything one uncached calibration pass produces."""
+    curves: Dict[str, np.ndarray]        # {type: (S, K+1)} mean curves
+    per_sample: Dict[str, np.ndarray]    # {type: (calib_batch, S, K+1)}
+    proxies: np.ndarray                  # (S,) per-step proxy signal
+    proxy_map: ProxyMap                  # fitted proxy→lag-1-error map
+    x0: np.ndarray                       # final denoised latents
+    cfg_halved: bool                     # True → cond half of a CFG batch
+
+
+def calibrate_record(executor, params, key, batch: int, *, cond_args=None,
+                     k_max: int = 3) -> CalibrationRecord:
     """Run one uncached sampling pass with ``batch`` calibration samples
-    (paper uses 10) and return (mean_curves, per_sample, trajectory x₀)."""
+    (paper uses 10), recording branch outputs *and* the per-step proxy
+    signal, and fit the proxy→error map.
+
+    Under CFG the executor doubles the batch to ``[cond; uncond]``; only
+    the conditioned half enters the curves (``per_sample`` leading dim is
+    exactly ``batch``)."""
     cond_args = cond_args or {}
+    cfg_halved = executor.cfg_scale is not None
     per_step: List[Dict[str, List[np.ndarray]]] = []
 
     def hook(s, branch_tree):
-        per_step.append(branch_outputs_by_type(executor.cfg, branch_tree))
+        by_type = branch_outputs_by_type(executor.cfg, branch_tree)
+        if cfg_halved:
+            # keep the conditioned half of the [cond; uncond] doubled batch
+            by_type = {t: [a[:batch] for a in arrs]
+                       for t, arrs in by_type.items()}
+        per_step.append(by_type)
 
-    x0 = executor.sample(params, key, batch, schedule=None,
-                         collect_hook=hook, **cond_args)
+    x_init, _ = executor.initial_latent(key, batch)
+    x0, traj = executor.sample(params, key, batch, schedule=None,
+                               collect_hook=hook, return_trajectory=True,
+                               **cond_args)
+    # model input at step s: the initial noise for s=0, else the latent
+    # produced by step s−1
+    inputs = [np.asarray(x_init)] + [np.asarray(x) for x in traj[:-1]]
+    proxies = proxies_from_inputs(inputs)
     curves, per_sample = error_curves_from_trajectory(
         executor.cfg, per_step, k_max=k_max)
-    return curves, per_sample, x0
+    return CalibrationRecord(
+        curves=curves, per_sample=per_sample, proxies=proxies,
+        proxy_map=fit_proxy_map(curves, proxies), x0=np.asarray(x0),
+        cfg_halved=cfg_halved)
+
+
+def calibrate(executor, params, key, batch: int, *, cond_args=None,
+              k_max: int = 3):
+    """Back-compat wrapper over :func:`calibrate_record`:
+    returns (mean_curves, per_sample, trajectory x₀)."""
+    rec = calibrate_record(executor, params, key, batch,
+                           cond_args=cond_args, k_max=k_max)
+    return rec.curves, rec.per_sample, rec.x0

@@ -369,10 +369,32 @@ class SmoothCacheExecutor:
         self._fns["solver_step"] = fn
         return fn
 
+    def _get_proxy_fn(self):
+        """Relative-L1 change between consecutive model inputs — the
+        adaptive path's per-step decision scalar (one reduction over the
+        latent, computed before the model call it gates).  The formula is
+        shared with calibration (``calibration.rel_l1_change``) so the
+        fitted proxy→error maps stay valid at runtime."""
+        if "proxy" in self._fns:
+            return self._fns["proxy"]
+        from repro.core import calibration  # late: calibration is np-heavy
+        fn = calibration.rel_l1_change
+        if self._jit:
+            fn = jax.jit(fn)
+        self._fns["proxy"] = fn
+        return fn
+
     # -- sampling loops ------------------------------------------------------
 
     def latent_batch_shape(self, batch):
         return (batch,) + tuple(self.cfg.latent_shape)
+
+    def initial_latent(self, key, batch: int):
+        """The noise-init convention shared by every sampling path:
+        ``(x_init, loop_key)`` from one key split.  Calibration uses it to
+        reconstruct the model-input trajectory for the proxy signal."""
+        knoise, kloop = jax.random.split(key)
+        return jax.random.normal(knoise, self.latent_batch_shape(batch)), kloop
 
     def sample(self, params, key, batch: int, *, schedule=None, label=None,
                memory=None, collect_hook: Optional[Callable] = None,
@@ -384,8 +406,7 @@ class SmoothCacheExecutor:
             types = cfgm.layer_types()
             schedule = schedule_lib.no_cache(types, s_total)
         assert schedule.num_steps == s_total
-        knoise, kloop = jax.random.split(key)
-        x = jax.random.normal(knoise, self.latent_batch_shape(batch))
+        x, kloop = self.initial_latent(key, batch)
         state = self.solver.init_state()
         solver_step = self._get_solver_step()
         cache = None
@@ -433,8 +454,7 @@ class SmoothCacheExecutor:
                 != plan_lib.schedule_fingerprint(schedule)):
             raise ValueError("plan was analyzed from a different schedule "
                              "(fingerprint mismatch) — re-run plan_for()")
-        knoise, kloop = jax.random.split(key)
-        x = jax.random.normal(knoise, self.latent_batch_shape(batch))
+        x, kloop = self.initial_latent(key, batch)
         state = self.solver.init_state()
         structs = self._branch_structs(params, x, label, memory)
         cache = empty_branch_cache(self.cfg)
@@ -485,6 +505,116 @@ class SmoothCacheExecutor:
         return self.sample_with_plan(params, key, batch, plan=plan,
                                      schedule=schedule, label=label,
                                      memory=memory, check=check)
+
+    # -- input-adaptive runtime dispatch ------------------------------------
+
+    def sample_adaptive(self, params, key, batch: int, *, schedule,
+                        tau: float, proxy_map=None, pool=None, k_max: int = 3,
+                        label=None, memory=None,
+                        return_decisions: bool = False):
+        """Input-adaptive sampler: per-step reuse decisions dispatched over
+        the precompiled mask-lattice pool.
+
+        ``schedule`` is the offline (static) base schedule: it defines the
+        candidate pool (:func:`repro.core.plan.mask_lattice` over its
+        ever-skipped types) and is followed verbatim when ``tau == 0``.
+        With ``tau > 0`` the runtime rule takes over: before each model
+        call the proxy signal (relative L1 change of the latent) is mapped
+        through the calibrated ``proxy_map`` to a per-type error estimate;
+        a type is reused while the error accumulated since its last compute
+        stays under ``tau`` and the cache age stays ≤ ``k_max``, and is
+        recomputed (resetting the accumulator) otherwise.
+
+        Every decision selects a signature from the pool, so at most
+        ``len(pool)`` programs are ever compiled (2^|ever-skipped|,
+        typically 4) — never one per step.  All pool signatures share one
+        cache structure (the ever-skipped type set), so per-step dispatch
+        needs no cache restructuring; the per-signature programs are the
+        same ``"sigstep"`` table entries the non-scannable segmented path
+        uses, and the solver step runs through the same traced-index jit as
+        the eager path, so ``tau=0`` reproduces ``sample_compiled`` on the
+        same schedule bit-identically.
+
+        ``return_decisions=True`` additionally returns the realized
+        per-step skip sets (tuple of sorted type tuples) for accounting.
+        """
+        s_total = self.solver.num_steps
+        if schedule is None:
+            schedule = schedule_lib.no_cache(self.cfg.layer_types(), s_total)
+        if schedule.num_steps != s_total:
+            raise ValueError(f"schedule has {schedule.num_steps} steps, "
+                             f"solver {s_total}")
+        tau = float(tau)
+        if tau < 0:
+            raise ValueError(f"tau must be >= 0, got {tau}")
+        if tau > 0 and proxy_map is None:
+            raise ValueError(
+                "sample_adaptive with tau > 0 needs a calibrated proxy_map "
+                "(calibrate the adaptive policy or load its artifact)")
+        if pool is None:
+            pool = plan_lib.mask_lattice(schedule)
+        by_skipset = plan_lib.pool_index(pool)
+        pool_live = frozenset().union(*by_skipset) if by_skipset else \
+            frozenset()
+        types = self.cfg.layer_types()
+        if tau > 0:
+            missing = [t for t in pool_live if t not in proxy_map.coeffs]
+            if missing:
+                raise ValueError(f"proxy_map lacks coefficients for "
+                                 f"{missing}; recalibrate")
+        x, kloop = self.initial_latent(key, batch)
+        state = self.solver.init_state()
+        structs = self._branch_structs(params, x, label, memory)
+        # every pool signature shares the same structure; enter once with
+        # placeholder buffers for all ever-skipped types
+        cache = self._enter_run_cache(empty_branch_cache(self.cfg),
+                                      by_skipset[frozenset()], structs)
+        solver_step = self._get_solver_step()
+        proxy_fn = self._get_proxy_fn()
+        acc = {t: 0.0 for t in types}       # est. error since last compute
+        lag = {t: 0 for t in types}         # cache age in steps
+        x_prev = None
+        decisions = []
+        for s in range(s_total):
+            delta: Dict[str, float] = {}
+            if s == 0:
+                skipset = frozenset()       # cache is empty: compute all
+            elif tau == 0.0:
+                # trust the offline schedule verbatim (bit-identical to
+                # sample_compiled on the same schedule)
+                skipset = frozenset(t for t, sk in schedule.mask_key_at(s)
+                                    if sk)
+            else:
+                proxy = float(proxy_fn(x, x_prev))
+                chosen = set()
+                for t in sorted(pool_live):
+                    delta[t] = proxy_map.est(t, proxy)
+                    if lag[t] + 1 <= k_max and acc[t] + delta[t] < tau:
+                        chosen.add(t)
+                skipset = frozenset(chosen)
+            sig = by_skipset.get(skipset)
+            if sig is None:
+                raise ValueError(
+                    f"static schedule mask at step {s} skips "
+                    f"{sorted(skipset)}, absent from the candidate pool — "
+                    "derive the pool from this schedule via mask_lattice()")
+            for t in types:
+                if t in skipset:
+                    acc[t] += delta.get(t, 0.0)
+                    lag[t] += 1
+                else:
+                    acc[t] = 0.0
+                    lag[t] = 0
+            decisions.append(tuple(sorted(skipset)))
+            x_prev = x
+            t_arr = jnp.full((batch,), self.solver.model_times[s])
+            fn = self._get_sig_model_fn(sig)
+            pred, cache = fn(params, x, t_arr, label, memory, cache)
+            x, state = solver_step(x, pred, s, state,
+                                   jax.random.fold_in(kloop, s))
+        if return_decisions:
+            return x, tuple(decisions)
+        return x
 
     # -- whole-sampler lowering (for FLOP / roofline accounting) ------------
 

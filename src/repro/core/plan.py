@@ -242,6 +242,60 @@ def analyze(schedule) -> ExecutionPlan:
 
 
 # ---------------------------------------------------------------------------
+# Adaptive candidate pool
+# ---------------------------------------------------------------------------
+
+#: hard cap on ever-skipped types for pool derivation (2^n programs)
+MAX_LATTICE_TYPES = 8
+
+
+def mask_lattice(schedule) -> Tuple[ProgramSig, ...]:
+    """Candidate signature pool for input-adaptive runtime dispatch: the
+    full mask lattice over the schedule's *ever-skipped* type set.
+
+    A runtime policy (``repro.cache.AdaptivePolicy``) decides per step which
+    layer types to reuse, so ahead of time we only know the *menu* of masks
+    it may pick: any subset of the types the offline schedule ever skips
+    (types the offline analysis deems cache-eligible).  This returns one
+    :class:`ProgramSig` per subset — ``2^|ever-skipped|`` signatures,
+    typically 4 for {attn, ffn} — with the canonical collect set
+    ``computed ∩ ever-skipped``.  That choice makes every pool signature's
+    cache structure the *same* set (the ever-skipped types), so the branch
+    cache pytree is invariant across the whole adaptive run and per-step
+    dispatch among precompiled programs needs no restructuring.
+
+    The pool is ordered by skip-set size (all-compute first) and contains
+    every mask of the static schedule, so a τ=0 adaptive run dispatches the
+    exact static masks.  The executor compiles at most ``len(pool)``
+    programs, never one per step.
+    """
+    masks = [schedule.mask_key_at(s) for s in range(schedule.num_steps)]
+    types = sorted(t for t, _ in masks[0])
+    ever = sorted({t for m in masks for t, sk in m if sk})
+    if len(ever) > MAX_LATTICE_TYPES:
+        raise ValueError(
+            f"mask lattice over {len(ever)} skippable types would need "
+            f"2^{len(ever)} programs; restrict the base schedule (e.g. a "
+            "per_type composite with NoCache for some types)")
+    subsets: List[Tuple[str, ...]] = [()]
+    for t in ever:
+        subsets += [sub + (t,) for sub in subsets]
+    subsets.sort(key=lambda sub: (len(sub), sub))
+    pool = []
+    for sub in subsets:
+        skipset = set(sub)
+        mask = tuple(sorted((t, t in skipset) for t in types))
+        collect = tuple(sorted(t for t in ever if t not in skipset))
+        pool.append(ProgramSig(mask=mask, collect=collect))
+    return tuple(pool)
+
+
+def pool_index(pool) -> Dict[frozenset, ProgramSig]:
+    """Runtime dispatch table: frozenset of skipped types → signature."""
+    return {frozenset(sig.live_in): sig for sig in pool}
+
+
+# ---------------------------------------------------------------------------
 # Cache-size accounting
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,423 @@
+"""Input-adaptive runtime caching (`AdaptivePolicy` / `sample_adaptive`):
+mask-lattice candidate pools, proxy→error map fitting, τ=0 bitwise
+reduction to the static segmented path, compile-count bounds, artifact
+round-trips — plus regression tests for the PR's latent-bugfix sweep
+(plan-property routing in generate(), flat registry grammar with nested
+values, strict cfg_scale validation, CFG cond-half calibration)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import cache, configs
+from repro.core import calibration, diffusion, plan as plan_lib
+from repro.core import schedule as S, solvers
+from repro.core.executor import SmoothCacheExecutor
+
+
+# ---------------------------------------------------------------------------
+# Candidate pool (pure)
+# ---------------------------------------------------------------------------
+
+def _sched(skip_rows, types=("attn", "ffn")):
+    skip = {t: np.asarray(v, bool) for t, v in zip(types, skip_rows)}
+    return S.Schedule(skip, len(skip_rows[0]))
+
+
+def test_mask_lattice_is_powerset_of_ever_skipped():
+    sch = _sched([[0, 1, 1, 0, 1], [0, 0, 1, 0, 0]])
+    pool = plan_lib.mask_lattice(sch)
+    assert len(pool) == 4                       # 2^2
+    # all-compute first; every signature shares one cache structure
+    assert pool[0].live_in == ()
+    assert {sig.structure for sig in pool} == {("attn", "ffn")}
+    # every static mask of the schedule is in the pool
+    idx = plan_lib.pool_index(pool)
+    for s in range(sch.num_steps):
+        skipset = frozenset(t for t, sk in sch.mask_key_at(s) if sk)
+        assert skipset in idx
+    # collect is the complement of the skip set within the lattice types
+    for sig in pool:
+        assert set(sig.collect) == {"attn", "ffn"} - set(sig.live_in)
+
+
+def test_mask_lattice_excludes_never_skipped_types():
+    sch = _sched([[0, 1, 0, 1], [0, 0, 0, 0]])    # ffn never skipped
+    pool = plan_lib.mask_lattice(sch)
+    assert len(pool) == 2
+    for sig in pool:
+        assert "ffn" not in sig.structure         # never resident
+        assert "ffn" not in sig.collect
+
+
+def test_mask_lattice_no_skips_is_single_program():
+    pool = plan_lib.mask_lattice(_sched([[0, 0, 0], [0, 0, 0]]))
+    assert len(pool) == 1 and pool[0].collect == ()
+
+
+def test_mask_lattice_size_guard():
+    types = tuple(f"t{i}" for i in range(plan_lib.MAX_LATTICE_TYPES + 1))
+    rows = [[0, 1] for _ in types]
+    with pytest.raises(ValueError, match="lattice"):
+        plan_lib.mask_lattice(_sched(rows, types=types))
+
+
+# ---------------------------------------------------------------------------
+# Proxy map (pure)
+# ---------------------------------------------------------------------------
+
+def test_fit_proxy_map_recovers_linear_relation():
+    s_total, a, b = 20, 0.7, 0.02
+    proxies = np.full(s_total, np.nan)
+    proxies[1:] = np.linspace(0.1, 0.5, s_total - 1)
+    err = np.full((s_total, 4), np.nan)
+    err[:, 0] = 0.0
+    err[1:, 1] = a * proxies[1:] + b
+    pm = calibration.fit_proxy_map({"attn": err}, proxies)
+    fa, fb = pm.coeffs["attn"]
+    assert abs(fa - a) < 1e-8 and abs(fb - b) < 1e-8
+    assert pm.est("attn", 0.3) == pytest.approx(a * 0.3 + b)
+    # estimates are clamped at zero
+    assert pm.est("attn", -100.0) == 0.0
+
+
+def test_fit_proxy_map_degenerate_falls_back_to_mean():
+    s_total = 8
+    proxies = np.full(s_total, np.nan)
+    proxies[1:] = 0.25                           # constant proxy
+    err = np.full((s_total, 2), np.nan)
+    err[:, 0] = 0.0
+    err[1:, 1] = 0.1
+    pm = calibration.fit_proxy_map({"ffn": err}, proxies)
+    assert pm.coeffs["ffn"][0] == 0.0
+    assert pm.est("ffn", 123.0) == pytest.approx(0.1)
+
+
+def test_proxy_map_json_roundtrip():
+    pm = calibration.ProxyMap({"attn": (0.5, 0.01), "ffn": (0.0, 0.2)},
+                              mean_proxy=0.3)
+    pm2 = calibration.ProxyMap.from_jsonable(pm.to_jsonable())
+    assert pm2 == pm
+    nan_pm = calibration.ProxyMap({"attn": (1.0, 0.0)})
+    back = calibration.ProxyMap.from_jsonable(nan_pm.to_jsonable())
+    assert np.isnan(back.mean_proxy)
+
+
+def test_proxies_from_inputs_alignment():
+    inputs = [np.zeros((1, 4)), np.ones((1, 4)), np.ones((1, 4))]
+    p = calibration.proxies_from_inputs(inputs)
+    assert np.isnan(p[0])                        # step 0 has no predecessor
+    assert p[2] == 0.0                           # identical inputs
+    assert p[1] > 0
+
+
+# ---------------------------------------------------------------------------
+# Policy / registry specs
+# ---------------------------------------------------------------------------
+
+def test_adaptive_spec_roundtrip():
+    p = cache.get("adaptive:base=smoothcache(alpha=0.18,k_max=3),tau=0.05")
+    assert isinstance(p, cache.AdaptivePolicy)
+    assert isinstance(p.base, cache.SmoothCache)
+    assert p.tau == 0.05 and p.k_max == 3
+    assert cache.get(p.spec()) == p
+    assert cache.from_config(p.to_config()) == p
+    # teacache alias, calibration-free base
+    q = cache.get("teacache:base=static(n=2),tau=0.1")
+    assert isinstance(q.base, cache.StaticInterval)
+    assert q.requires_calibration                 # proxy map needs a pass
+    assert cache.get(q.spec()) == q
+
+
+def test_adaptive_policy_validation():
+    with pytest.raises(ValueError, match="nest"):
+        cache.AdaptivePolicy(base=cache.AdaptivePolicy())
+    with pytest.raises(ValueError, match="tau"):
+        cache.AdaptivePolicy(tau=-0.1)
+
+
+def test_adaptive_build_is_base_schedule():
+    curves_err = np.full((10, 4), np.nan)
+    curves_err[:, 0] = 0.0
+    curves_err[1:, 1:] = 0.01
+    curves = {"attn": curves_err, "ffn": curves_err.copy()}
+    p = cache.AdaptivePolicy(base=cache.SmoothCache(0.1), tau=0.3)
+    sch = p.build(["attn", "ffn"], 10, curves)
+    base = cache.SmoothCache(0.1).build(["attn", "ffn"], 10, curves)
+    assert sch.content_key() == base.content_key()
+
+
+# -- flat-grammar bugfix: nested values in the CLI-friendly form -----------
+
+def test_registry_flat_spec_with_nested_value():
+    p = cache.get("per_type:attn=smoothcache(alpha=0.1)")
+    assert isinstance(p, cache.PerLayerType)
+    assert isinstance(p.policies["attn"], cache.SmoothCache)
+    assert p.policies["attn"].alpha == 0.1
+    # equivalent to the parenthesized form
+    assert p == cache.get("per_type(attn=smoothcache(alpha=0.1))")
+    # multiple args, nested + scalar mixed
+    q = cache.get("per_type:attn=smoothcache(alpha=0.2,k_max=2),"
+                  "default=static(n=3)")
+    assert q.policies["attn"].k_max == 2
+    assert isinstance(q.default, cache.StaticInterval)
+    # genuinely malformed specs still fail
+    with pytest.raises(ValueError):
+        cache.get("per_type(attn=static(n=2)")
+
+
+# ---------------------------------------------------------------------------
+# Executor: the adaptive path (smoke DiT)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_dit():
+    cfg = configs.get("dit-xl-256", "smoke")
+    params = diffusion.init_params(jax.random.PRNGKey(0), cfg)
+    params = jax.tree.map(
+        lambda a: a + 0.05 * jax.random.normal(jax.random.PRNGKey(7), a.shape),
+        params)
+    return cfg, params
+
+
+def _calibrated_adaptive(cfg, params, tau, steps=8, alpha=0.5):
+    label = jnp.zeros((2,), jnp.int32)
+    pipe = cache.DiffusionPipeline(
+        cfg, solvers.ddim(steps),
+        f"adaptive:base=smoothcache(alpha={alpha}),tau={tau}", cfg_scale=1.5)
+    pipe.calibrate(params, jax.random.PRNGKey(1), 2,
+                   cond_args={"label": label})
+    return pipe, label
+
+
+def test_adaptive_tau0_bitwise_equals_sample_compiled(small_dit):
+    cfg, params = small_dit
+    pipe, label = _calibrated_adaptive(cfg, params, tau=0)
+    assert any(v.any() for v in pipe.schedule.skip.values())
+    x_ad = pipe.generate(params, jax.random.PRNGKey(2), 2, label=label)
+    ex = SmoothCacheExecutor(cfg, solvers.ddim(8), cfg_scale=1.5)
+    x_st = ex.sample_compiled(params, jax.random.PRNGKey(2), 2,
+                              schedule=pipe.schedule, label=label)
+    np.testing.assert_array_equal(np.asarray(x_ad), np.asarray(x_st))
+
+
+def test_adaptive_compile_count_bounded_by_pool(small_dit):
+    cfg, params = small_dit
+    pipe, label = _calibrated_adaptive(cfg, params, tau=0.3)
+    pool = plan_lib.mask_lattice(pipe.schedule)
+    # heterogeneous inputs: different seeds and labels force different
+    # per-step decisions, but never new programs
+    for seed in (2, 3, 4):
+        lab = jnp.full((2,), seed % cfg.num_classes, jnp.int32)
+        x, dec = pipe.generate(params, jax.random.PRNGKey(seed), 2,
+                               label=lab, return_decisions=True)
+        assert len(dec) == 8 and dec[0] == ()     # step 0 computes all
+        assert bool(jnp.all(jnp.isfinite(x)))
+    assert 0 < pipe.executor.compiled_variant_count("sigstep") <= len(pool)
+
+
+def test_adaptive_decisions_respect_k_max(small_dit):
+    cfg, params = small_dit
+    pipe, label = _calibrated_adaptive(cfg, params, tau=100.0)
+    _, dec = pipe.generate(params, jax.random.PRNGKey(5), 2, label=label,
+                           return_decisions=True)
+    # an absurdly large tau reuses as hard as allowed: cache age caps at
+    # the policy's k_max, so every k_max+1-length window recomputes
+    k_max = pipe.policy.k_max
+    age = {t: 0 for t in cfg.layer_types()}
+    for step in dec:
+        for t in cfg.layer_types():
+            if t in step:
+                age[t] += 1
+                assert age[t] <= k_max
+            else:
+                age[t] = 0
+
+
+def test_adaptive_tau_without_proxy_map_raises(small_dit):
+    cfg, params = small_dit
+    ex = SmoothCacheExecutor(cfg, solvers.ddim(6), cfg_scale=1.5)
+    sch = S.fora(cfg.layer_types(), 6, 2)
+    with pytest.raises(ValueError, match="proxy_map"):
+        ex.sample_adaptive(params, jax.random.PRNGKey(0), 1, schedule=sch,
+                           tau=0.1, label=jnp.zeros((1,), jnp.int32))
+
+
+def test_adaptive_artifact_roundtrip(small_dit, tmp_path):
+    cfg, params = small_dit
+    pipe, label = _calibrated_adaptive(cfg, params, tau=0.3)
+    assert pipe.artifact.adaptive is not None
+    assert pipe.artifact.adaptive["tau"] == 0.3
+    path = str(tmp_path / "adaptive.cache.json")
+    pipe.save_artifact(path)
+
+    serve = cache.DiffusionPipeline(
+        cfg, solvers.ddim(8), "adaptive:base=smoothcache(alpha=0.5),tau=0.3",
+        cfg_scale=1.5)
+    art = serve.load_artifact(path)
+    # adaptive config + fitted mapping survive; serving never recalibrates
+    assert art.adaptive == pipe.artifact.adaptive
+    assert serve.proxy_map == pipe.proxy_map
+    assert cache.from_config(art.policy) == pipe.policy
+    x1, d1 = pipe.generate(params, jax.random.PRNGKey(9), 2, label=label,
+                           return_decisions=True)
+    x2, d2 = serve.generate(params, jax.random.PRNGKey(9), 2, label=label,
+                            return_decisions=True)
+    assert d1 == d2
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+
+
+def test_adaptive_artifact_tau_mismatch_rejected(small_dit, tmp_path):
+    """The runtime rule must use the artifact's decision parameters — a
+    serving pipeline constructed with a different tau/k_max must not
+    silently generate under the artifact's provenance."""
+    cfg, params = small_dit
+    pipe, _ = _calibrated_adaptive(cfg, params, tau=0.3)
+    path = str(tmp_path / "tau.cache.json")
+    pipe.save_artifact(path)
+    other = cache.DiffusionPipeline(
+        cfg, solvers.ddim(8), "adaptive:base=smoothcache(alpha=0.5),tau=0.05",
+        cfg_scale=1.5)
+    with pytest.raises(ValueError, match="tau"):
+        other.load_artifact(path)
+    other.load_artifact(path, strict=False)       # explicit override works
+    # a matching policy loads fine
+    same = cache.DiffusionPipeline(
+        cfg, solvers.ddim(8), "adaptive:base=smoothcache(alpha=0.5),tau=0.3",
+        cfg_scale=1.5)
+    same.load_artifact(path)
+
+
+def test_adaptive_explicit_schedule_override_is_static(small_dit):
+    cfg, params = small_dit
+    pipe, label = _calibrated_adaptive(cfg, params, tau=0.3)
+    sch = S.fora(cfg.layer_types(), 8, 2)
+    x = pipe.generate(params, jax.random.PRNGKey(2), 2, label=label,
+                      schedule=sch)
+    ex = SmoothCacheExecutor(cfg, solvers.ddim(8), cfg_scale=1.5)
+    x_st = ex.sample_compiled(params, jax.random.PRNGKey(2), 2, schedule=sch,
+                              label=label)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(x_st))
+    with pytest.raises(ValueError, match="return_decisions"):
+        pipe.generate(params, jax.random.PRNGKey(2), 2, label=label,
+                      schedule=sch, return_decisions=True)
+
+
+# ---------------------------------------------------------------------------
+# Bugfix regressions: pipeline plan routing
+# ---------------------------------------------------------------------------
+
+def _spy_sample_compiled(monkeypatch, captured):
+    orig = SmoothCacheExecutor.sample_compiled
+
+    def spy(self, *args, **kwargs):
+        captured["plan"] = kwargs.get("plan")
+        return orig(self, *args, **kwargs)
+
+    monkeypatch.setattr(SmoothCacheExecutor, "sample_compiled", spy)
+
+
+def test_generate_after_prepare_hands_plan_to_executor(small_dit,
+                                                       monkeypatch):
+    """prepare() resets _plan to None; generate() must route through the
+    lazy .plan property instead of silently passing plan=None."""
+    cfg, params = small_dit
+    pipe = cache.DiffusionPipeline(cfg, solvers.ddim(5), "static:n=2",
+                                   cfg_scale=1.5)
+    pipe.prepare()
+    captured = {}
+    _spy_sample_compiled(monkeypatch, captured)
+    pipe.generate(params, jax.random.PRNGKey(0), 1,
+                  label=jnp.zeros((1,), jnp.int32))
+    assert captured["plan"] is not None
+    assert captured["plan"] is pipe.plan
+
+
+def test_generate_hands_artifact_plan_to_executor(small_dit, monkeypatch,
+                                                  tmp_path):
+    """A serving pipeline must hand the artifact's pre-analyzed plan object
+    to sample_compiled, not re-derive one."""
+    cfg, params = small_dit
+    label = jnp.zeros((2,), jnp.int32)
+    calib = cache.DiffusionPipeline(cfg, solvers.ddim(6),
+                                    "smoothcache:alpha=0.5", cfg_scale=1.5)
+    calib.calibrate(params, jax.random.PRNGKey(1), 2,
+                    cond_args={"label": label})
+    path = str(tmp_path / "p.cache.json")
+    calib.save_artifact(path)
+    serve = cache.DiffusionPipeline(cfg, solvers.ddim(6),
+                                    "smoothcache:alpha=0.5", cfg_scale=1.5)
+    art = serve.load_artifact(path)
+    captured = {}
+    _spy_sample_compiled(monkeypatch, captured)
+    serve.generate(params, jax.random.PRNGKey(2), 2, label=label)
+    assert captured["plan"] is serve.plan
+    assert captured["plan"] == art.execution_plan()
+
+
+# ---------------------------------------------------------------------------
+# Bugfix regressions: cfg_scale provenance + CFG calibration halves
+# ---------------------------------------------------------------------------
+
+def test_load_artifact_validates_cfg_scale(small_dit, tmp_path):
+    cfg, params = small_dit
+    label = jnp.zeros((2,), jnp.int32)
+    calib = cache.DiffusionPipeline(cfg, solvers.ddim(5),
+                                    "smoothcache:alpha=0.5", cfg_scale=1.5)
+    calib.calibrate(params, jax.random.PRNGKey(1), 2,
+                    cond_args={"label": label})
+    path = str(tmp_path / "cfg.cache.json")
+    calib.save_artifact(path)
+
+    # guidance-free pipeline must not silently adopt guided curves
+    plain = cache.DiffusionPipeline(cfg, solvers.ddim(5),
+                                    "smoothcache:alpha=0.5")
+    with pytest.raises(ValueError, match="cfg_scale"):
+        plain.load_artifact(path)
+    # ... nor a pipeline at a different guidance strength
+    other = cache.DiffusionPipeline(cfg, solvers.ddim(5),
+                                    "smoothcache:alpha=0.5", cfg_scale=4.0)
+    with pytest.raises(ValueError, match="cfg_scale"):
+        other.load_artifact(path)
+    # matching scale loads; strict=False overrides
+    same = cache.DiffusionPipeline(cfg, solvers.ddim(5),
+                                   "smoothcache:alpha=0.5", cfg_scale=1.5)
+    same.load_artifact(path)
+    plain.load_artifact(path, strict=False)
+
+    # legacy artifacts without the key are tolerated
+    art = cache.CacheArtifact.load(path)
+    del art.meta["cfg_scale"]
+    legacy = cache.DiffusionPipeline(cfg, solvers.ddim(5),
+                                     "smoothcache:alpha=0.5")
+    legacy.load_artifact(art)
+
+
+def test_cfg_calibration_keeps_cond_half(small_dit):
+    """Under CFG the executor doubles the batch to [cond; uncond]; the
+    per-sample curves must cover exactly the conditioned calib_batch
+    samples, not the doubled batch."""
+    cfg, params = small_dit
+    batch = 2
+    label = jnp.zeros((batch,), jnp.int32)
+    pipe = cache.DiffusionPipeline(cfg, solvers.ddim(5),
+                                   "smoothcache:alpha=0.5", cfg_scale=1.5)
+    art = pipe.calibrate(params, jax.random.PRNGKey(1), batch,
+                         cond_args={"label": label})
+    for t, arr in pipe.per_sample.items():
+        assert arr.shape[0] == batch, (t, arr.shape)
+    assert art.meta["calib_cfg_half"] == "cond"
+    # the mean curves are the mean of the recorded per-sample curves
+    for t in art.curves:
+        np.testing.assert_allclose(
+            np.nan_to_num(art.curves[t]),
+            np.nan_to_num(np.mean(pipe.per_sample[t], axis=0)), atol=1e-12)
+
+    # no CFG → no halving, and the meta records that
+    plain = cache.DiffusionPipeline(cfg, solvers.ddim(5),
+                                    "smoothcache:alpha=0.5")
+    art2 = plain.calibrate(params, jax.random.PRNGKey(1), batch,
+                           cond_args={"label": label})
+    for t, arr in plain.per_sample.items():
+        assert arr.shape[0] == batch
+    assert art2.meta["calib_cfg_half"] is None

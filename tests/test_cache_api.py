@@ -49,8 +49,10 @@ def test_registry_aliases_and_passthrough():
 
 
 def test_registry_unknown_name_raises():
+    # ("teacache" used to be the canonical unknown name here — it is now a
+    # registered alias of the adaptive policy)
     with pytest.raises(KeyError, match="unknown cache policy"):
-        cache.get("teacache:alpha=1")
+        cache.get("fancycache:alpha=1")
     with pytest.raises(KeyError, match="unknown cache policy"):
         cache.from_config({"name": "nope"})
 
