@@ -17,6 +17,7 @@ MODULES = [
     ("table1", "benchmarks.table1_dit"),
     ("executor", "benchmarks.executor_bench"),
     ("adaptive", "benchmarks.adaptive_bench"),
+    ("serve", "benchmarks.serve_bench"),
     ("table2", "benchmarks.table2_video"),
     ("table3", "benchmarks.table3_audio"),
     ("kernels", "benchmarks.kernel_bench"),

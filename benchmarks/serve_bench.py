@@ -1,0 +1,128 @@
+"""Serving-engine benchmark: no_cache vs smoothcache vs adaptive under
+one arrival trace.
+
+Calibrates a budgeted adaptive policy once on the smoke DiT, loads the
+artifact into an `ArtifactStore` three ways (uncached baseline, the static
+base schedule, the adaptive runtime rule), then drains the **same Poisson
+arrival trace** through the continuous-batching `ServeEngine` under each
+entry plus a heterogeneous mix.  Reports throughput, p50/p95 queue wait
+and service time, realized compute fraction, and compiled-program counts
+against the |buckets| × |signature pool| budget.  A warmup drain on a
+separate engine (same executor → same program table) absorbs compile time
+so the measured trace reflects steady-state serving.
+
+Writes ``BENCH_serve.json`` (results dir + repo-root trajectory mirror).
+
+Caveat for reading the numbers: on the CPU smoke model, per-segment
+dispatch overhead rivals the (tiny) model compute, so cached schedules
+need not beat ``no_cache`` on wall time here — the benchmark tracks the
+*serving layer* (queue wait vs service split, bucket formation, compile
+counts vs budget, realized compute fraction), which is scale-independent.
+
+    PYTHONPATH=src python -m benchmarks.run --only serve
+    SERVE_BENCH_STEPS=20 PYTHONPATH=src python -m benchmarks.serve_bench
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro import cache, configs, serve
+from repro.core import diffusion, solvers
+from repro.core.executor import SmoothCacheExecutor
+
+STEPS = int(os.environ.get("SERVE_BENCH_STEPS", "20"))
+TAU = float(os.environ.get("SERVE_BENCH_TAU", "0.5"))
+REQUESTS = int(os.environ.get("SERVE_BENCH_REQUESTS", "8"))
+RATE = float(os.environ.get("SERVE_BENCH_RATE", "4.0"))
+MAX_BATCH = 4
+CFG_SCALE = 1.5
+CALIB_BATCH = 2
+
+
+def _trace(policies, cfg, start: float):
+    """The shared arrival trace: same seeds/labels/arrival offsets for
+    every scenario; only the policy assignment changes."""
+    rng = np.random.RandomState(0)
+    arrivals = serve.poisson_arrivals(RATE, REQUESTS, rng)
+    return [serve.Request(
+        rid=i, seed=int(rng.randint(1 << 30)),
+        policy=policies[i % len(policies)],
+        label=int(rng.randint(cfg.num_classes)),
+        arrival=start + a) for i, a in enumerate(arrivals)]
+
+
+def _drain(executor, params, store, policies, cfg):
+    eng = serve.ServeEngine(executor, params, store, max_batch=MAX_BATCH,
+                            max_wait=0.2, max_inflight=2)
+    eng.submit(*_trace(policies, cfg, eng.clock.now()))
+    eng.run_until_drained()
+    return eng.report()
+
+
+def run() -> None:
+    cfg = configs.get("dit-xl-256", "smoke")
+    solver = solvers.ddim(STEPS)
+    params = diffusion.init_params(jax.random.PRNGKey(0), cfg)
+    params = jax.tree.map(
+        lambda a: a + 0.05 * jax.random.normal(jax.random.PRNGKey(7),
+                                               a.shape),
+        params)
+
+    # offline: one calibration pass → one artifact reused by both entries
+    pipe = cache.DiffusionPipeline(
+        cfg, solver, f"adaptive:base=budget(target=0.5),tau={TAU}",
+        cfg_scale=CFG_SCALE)
+    t0 = time.perf_counter()
+    pipe.calibrate(params, jax.random.PRNGKey(1), CALIB_BATCH,
+                   cond_args={"label": jnp.zeros((CALIB_BATCH,), jnp.int32)})
+    calib_s = time.perf_counter() - t0
+    art = pipe.artifact
+
+    # serving: store with the uncached baseline, the artifact's static base
+    # schedule, and the adaptive runtime rule over the same artifact
+    store = serve.ArtifactStore(cfg, solver, cfg_scale=CFG_SCALE)
+    store.add_policy("no_cache", "none")
+    store.add_artifact("smoothcache", art, policy="budget:target=0.5")
+    store.add_artifact("adaptive", art)
+
+    scenarios = {
+        "no_cache": ["no_cache"],
+        "smoothcache": ["smoothcache"],
+        "adaptive": ["adaptive"],
+        "mixed": ["no_cache", "smoothcache", "adaptive"],
+    }
+    results = {}
+    for name, policies in scenarios.items():
+        # fresh executor per scenario: program counts are attributable
+        # (warmup and measured drains share it, so compiles are absorbed)
+        executor = SmoothCacheExecutor(cfg, solver, cfg_scale=CFG_SCALE)
+        _drain(executor, params, store, policies, cfg)      # warmup compile
+        rep = _drain(executor, params, store, policies, cfg)
+        results[name] = rep
+        common.emit(f"serve/{name}/throughput_rps",
+                    rep["throughput_rps"] * 1e6,
+                    f"q_p95={rep['queue_wait_s']['p95']:.3f}s;"
+                    f"s_p95={rep['service_s']['p95']:.3f}s;"
+                    f"compute={rep['compute_fraction']:.2f}")
+        assert (rep["compiles"]["xla_programs"]
+                <= rep["program_budget"]), (
+            f"{name}: compiled {rep['compiles']['xla_programs']} programs, "
+            f"budget {rep['program_budget']}")
+
+    path = common.write_bench_json("BENCH_serve.json", {
+        "meta": {"steps": STEPS, "tau": TAU, "requests": REQUESTS,
+                 "rate_rps": RATE, "max_batch": MAX_BATCH,
+                 "calibration_s": calib_s, "arch": cfg.name},
+        "scenarios": results,
+    })
+    print(f"# wrote {path}")
+
+
+if __name__ == "__main__":
+    run()

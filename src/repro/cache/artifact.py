@@ -27,6 +27,8 @@ from repro.core.schedule import Schedule
 # + candidate pool provenance); v1 artifacts load unchanged
 FORMAT_VERSION = 2
 
+_UNSET = object()
+
 
 @dataclass
 class CacheArtifact:
@@ -67,6 +69,62 @@ class CacheArtifact:
         if self.schedule is not None:
             return plan_lib.analyze(self.schedule)
         return None
+
+    # -- validation ----------------------------------------------------------
+
+    def validate_for(self, *, arch: Optional[str] = None,
+                     solver: Optional[str] = None,
+                     num_steps: Optional[int] = None,
+                     cfg_scale=_UNSET, policy=None) -> None:
+        """Strict serving-side compatibility check: raise ``ValueError``
+        when this artifact cannot serve the given deployment (wrong
+        architecture, solver/step count, guidance strength, or — for
+        adaptive artifacts — mismatched runtime decision parameters).
+
+        This is the single validation seam shared by
+        :meth:`DiffusionPipeline.load_artifact` and the serving
+        :class:`~repro.serve.store.ArtifactStore` hot-reload path, so a
+        live swap can never admit an artifact a fresh load would reject.
+        Pass only the facts you want checked; ``cfg_scale`` is compared
+        only when the artifact recorded one (legacy artifacts without the
+        key are tolerated)."""
+        if arch is not None and self.arch != arch:
+            raise ValueError(f"artifact was calibrated on {self.arch!r}, "
+                             f"pipeline runs {arch!r}")
+        if ((solver is not None and self.solver != solver)
+                or (num_steps is not None and self.num_steps != num_steps)):
+            raise ValueError(
+                f"artifact solver {self.solver}x{self.num_steps} != "
+                f"pipeline {solver}x{num_steps}")
+        # the curves depend on guidance strength; legacy artifacts
+        # without the key are tolerated, a recorded mismatch is not
+        if (cfg_scale is not _UNSET and "cfg_scale" in self.meta
+                and self.meta["cfg_scale"] != cfg_scale):
+            raise ValueError(
+                f"artifact was calibrated at "
+                f"cfg_scale={self.meta['cfg_scale']}, pipeline runs "
+                f"cfg_scale={cfg_scale}")
+        # adaptive provenance: the runtime rule must use the artifact's
+        # decision parameters, not whatever the consumer was typo'd with
+        if self.adaptive and policy is not None \
+                and getattr(policy, "name", None) == "adaptive":
+            for k, mine in (("tau", policy.tau), ("k_max", policy.k_max)):
+                if k in self.adaptive and self.adaptive[k] != mine:
+                    raise ValueError(
+                        f"artifact's adaptive policy has {k}="
+                        f"{self.adaptive[k]}, pipeline policy has "
+                        f"{k}={mine}")
+        # the stored pool must be the one this schedule derives —
+        # a mismatch means the payload was edited or mispaired
+        if (self.adaptive and "pool" in self.adaptive
+                and self.schedule is not None):
+            derived = [list(sig.live_in) for sig in
+                       plan_lib.mask_lattice(self.schedule)]
+            if self.adaptive["pool"] != derived:
+                raise ValueError(
+                    f"artifact's adaptive pool "
+                    f"{self.adaptive['pool']} does not match the "
+                    f"stored schedule's mask lattice {derived}")
 
     # -- (de)serialization ---------------------------------------------------
 

@@ -173,42 +173,13 @@ class DiffusionPipeline:
         art = (path_or_artifact if isinstance(path_or_artifact, CacheArtifact)
                else CacheArtifact.load(path_or_artifact))
         if strict:
-            if art.arch != self.cfg.name:
-                raise ValueError(f"artifact was calibrated on {art.arch!r}, "
-                                 f"pipeline runs {self.cfg.name!r}")
-            if (art.solver != self.solver.name
-                    or art.num_steps != self.solver.num_steps):
-                raise ValueError(
-                    f"artifact solver {art.solver}x{art.num_steps} != "
-                    f"pipeline {self.solver.name}x{self.solver.num_steps}")
-            # the curves depend on guidance strength; legacy artifacts
-            # without the key are tolerated, a recorded mismatch is not
-            if ("cfg_scale" in art.meta
-                    and art.meta["cfg_scale"] != self.executor.cfg_scale):
-                raise ValueError(
-                    f"artifact was calibrated at "
-                    f"cfg_scale={art.meta['cfg_scale']}, pipeline runs "
-                    f"cfg_scale={self.executor.cfg_scale}")
-            # adaptive provenance: the runtime rule must use the artifact's
-            # decision parameters, not whatever this pipeline was typo'd with
-            if art.adaptive and isinstance(self.policy, AdaptivePolicy):
-                for k, mine in (("tau", self.policy.tau),
-                                ("k_max", self.policy.k_max)):
-                    if k in art.adaptive and art.adaptive[k] != mine:
-                        raise ValueError(
-                            f"artifact's adaptive policy has {k}="
-                            f"{art.adaptive[k]}, pipeline policy has "
-                            f"{k}={mine}")
-                # the stored pool must be the one this schedule derives —
-                # a mismatch means the payload was edited or mispaired
-                if "pool" in art.adaptive and art.schedule is not None:
-                    derived = [list(sig.live_in) for sig in
-                               plan_lib.mask_lattice(art.schedule)]
-                    if art.adaptive["pool"] != derived:
-                        raise ValueError(
-                            f"artifact's adaptive pool "
-                            f"{art.adaptive['pool']} does not match the "
-                            f"stored schedule's mask lattice {derived}")
+            # single validation seam shared with repro.serve.ArtifactStore
+            art.validate_for(
+                arch=self.cfg.name, solver=self.solver.name,
+                num_steps=self.solver.num_steps,
+                cfg_scale=self.executor.cfg_scale,
+                policy=self.policy if isinstance(self.policy, AdaptivePolicy)
+                else None)
         self.artifact = art
         if art.adaptive and art.adaptive.get("proxy_map"):
             self._proxy_map = calibration_lib.ProxyMap.from_jsonable(

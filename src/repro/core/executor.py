@@ -33,7 +33,8 @@ the paper's DiT-XL protocol; the cache covers both halves.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -120,6 +121,78 @@ def cache_entry_names(cfg: ModelConfig, types) -> List[tuple]:
     return out
 
 
+@dataclasses.dataclass
+class RunState:
+    """In-flight state of one segmented sampling run.
+
+    ``start_run`` creates it, ``advance_run`` consumes one plan segment per
+    call (the same ops ``sample_with_plan`` performs — that loop *is*
+    start + advance-until-done, so a run driven incrementally by a serving
+    engine produces bit-identical latents).  With buffer donation enabled
+    the previous state's device buffers are reused by the next one: hold
+    only the latest ``RunState`` per run.
+    """
+    x: Any                                   # latent (B, ...)
+    state: Any                               # solver state pytree
+    cache: Any                               # branch cache (exactly live)
+    kloop: Any                               # sampling-loop PRNG key
+    plan: plan_lib.ExecutionPlan
+    run_index: int                           # next plan.runs entry
+    label: Any = None
+    memory: Any = None
+    structs: Any = None                      # branch ShapeDtypeStructs
+
+    @property
+    def done(self) -> bool:
+        return self.run_index >= len(self.plan.runs)
+
+    @property
+    def step(self) -> int:
+        """Next sampling step to execute (== num_steps when done)."""
+        if self.done:
+            return self.plan.num_steps
+        return self.plan.runs[self.run_index].start
+
+    @property
+    def num_steps(self) -> int:
+        return self.plan.num_steps
+
+    #: adaptive runs record realized skip sets; static runs have none
+    decisions = None
+
+
+@dataclasses.dataclass
+class AdaptiveRunState:
+    """In-flight state of one input-adaptive sampling run (per-step
+    granularity: each ``advance_adaptive_run`` call executes one decision +
+    model + solver step, exactly the ``sample_adaptive`` loop body)."""
+    x: Any
+    state: Any
+    cache: Any
+    kloop: Any
+    step: int                                # next step to execute
+    x_prev: Any                              # model input of previous step
+    acc: Dict[str, float]                    # est. error since last compute
+    lag: Dict[str, int]                      # cache age per type
+    decisions: Tuple[tuple, ...]             # realized per-step skip sets
+    schedule: Any
+    tau: float
+    proxy_map: Any
+    by_skipset: Dict[frozenset, plan_lib.ProgramSig]
+    pool_live: frozenset
+    k_max: int
+    label: Any = None
+    memory: Any = None
+
+    @property
+    def done(self) -> bool:
+        return self.step >= self.schedule.num_steps
+
+    @property
+    def num_steps(self) -> int:
+        return self.schedule.num_steps
+
+
 class SmoothCacheExecutor:
     """Owns the compiled model/sampler variants (one per plan signature on
     the segmented path, one per distinct skip mask on the eager path) and
@@ -157,6 +230,25 @@ class SmoothCacheExecutor:
 
     def compiled_variant_count(self, kind: Optional[str] = None) -> int:
         return len(self.fn_keys(kind))
+
+    def xla_program_count(self, kind: Optional[str] = None) -> int:
+        """Actual XLA executable count behind the variant table: each jitted
+        entry holds one compilation per distinct input *shape* (a serving
+        engine's batch-size buckets multiply here — the program-budget bound
+        is |buckets| × |signatures|).  Falls back to one per entry when the
+        jit cache size is not introspectable (non-jit mode, older jax)."""
+        total = 0
+        for k in self.fn_keys(kind):
+            fn = self._fns[k]
+            n = None
+            cache_size = getattr(fn, "_cache_size", None)
+            if callable(cache_size):
+                try:
+                    n = int(cache_size())
+                except Exception:
+                    n = None
+            total += n if n is not None else 1
+        return total
 
     # -- plan resolution -----------------------------------------------------
 
@@ -437,15 +529,14 @@ class SmoothCacheExecutor:
                 traj.append(x)
         return (x, traj) if return_trajectory else x
 
-    def sample_with_plan(self, params, key, batch: int, *,
-                         plan: plan_lib.ExecutionPlan, schedule=None,
-                         label=None, memory=None, check: bool = False):
-        """Segmented sampler: Python dispatch per *segment* (not per step),
-        one compiled program per unique plan signature.
-
-        ``check=True`` verifies after every segment that the resident cache
-        pytree holds exactly the plan's live entries (the liveness
-        invariant: dead branches are provably absent)."""
+    def start_run(self, params, key, batch: int, *,
+                  plan: plan_lib.ExecutionPlan, schedule=None, label=None,
+                  memory=None) -> RunState:
+        """Begin a resumable segmented run: validate the plan, draw the
+        initial latent, and return a :class:`RunState` positioned before
+        the first segment.  Drive it with :meth:`advance_run` — a serving
+        engine interleaves several in-flight states this way, and
+        ``start + advance-until-done`` is exactly ``sample_with_plan``."""
         if plan.num_steps != self.solver.num_steps:
             raise ValueError(f"plan has {plan.num_steps} steps, solver "
                              f"{self.solver.num_steps}")
@@ -455,39 +546,69 @@ class SmoothCacheExecutor:
             raise ValueError("plan was analyzed from a different schedule "
                              "(fingerprint mismatch) — re-run plan_for()")
         x, kloop = self.initial_latent(key, batch)
-        state = self.solver.init_state()
-        structs = self._branch_structs(params, x, label, memory)
-        cache = empty_branch_cache(self.cfg)
-        fused = self.solver.scannable
-        solver_step = None if fused else self._get_solver_step()
-        for run in plan.runs:
-            cache = self._enter_run_cache(cache, run.sig, structs)
-            if fused:
-                fn = self._get_sig_loop_fn(run.sig)
-                x, state, cache = fn(params, x, state, cache, run.start,
-                                     run.length, kloop, label, memory)
-            else:
-                fn = self._get_sig_model_fn(run.sig)
-                for s in range(run.start, run.start + run.length):
-                    t = jnp.full((batch,), self.solver.model_times[s])
-                    pred, cache = fn(params, x, t, label, memory, cache)
-                    x, state = solver_step(x, pred, s, state,
-                                           jax.random.fold_in(kloop, s))
-            # exact liveness at the boundary: entries the next segment does
-            # not read are dead — drop them (free: a Python restructure;
-            # donation already recycled their buffers)
-            cache = prune_cache(self.cfg, cache, run.live_out)
-            if check:
-                expect = set(cache_entry_names(self.cfg, run.live_out))
-                got = {(si, bi, name)
-                       for si, stage in enumerate(cache)
-                       for bi, d in enumerate(stage)
-                       for name in d}
-                assert got == expect, (
-                    f"liveness violation after steps "
-                    f"[{run.start}, {run.start + run.length}): resident "
-                    f"{sorted(got)} != live {sorted(expect)}")
-        return x
+        return RunState(
+            x=x, state=self.solver.init_state(),
+            cache=empty_branch_cache(self.cfg), kloop=kloop, plan=plan,
+            run_index=0, label=label, memory=memory,
+            structs=self._branch_structs(params, x, label, memory))
+
+    def advance_run(self, params, rs: RunState, *,
+                    check: bool = False) -> RunState:
+        """Advance an in-flight run by one plan segment: enter the
+        signature's loop-invariant cache structure, execute the segment's
+        steps (fused ``fori_loop`` program, or per-step model programs +
+        eager solver for non-scannable solvers), and enforce exact liveness
+        at the boundary.  Returns the successor state; with donation the
+        input state's buffers are recycled — drop it."""
+        if rs.done:
+            raise ValueError("run is already complete")
+        run = rs.plan.runs[rs.run_index]
+        x, state, kloop = rs.x, rs.state, rs.kloop
+        label, memory = rs.label, rs.memory
+        cache = self._enter_run_cache(rs.cache, run.sig, rs.structs)
+        if self.solver.scannable:
+            fn = self._get_sig_loop_fn(run.sig)
+            x, state, cache = fn(params, x, state, cache, run.start,
+                                 run.length, kloop, label, memory)
+        else:
+            solver_step = self._get_solver_step()
+            fn = self._get_sig_model_fn(run.sig)
+            for s in range(run.start, run.start + run.length):
+                t = jnp.full((x.shape[0],), self.solver.model_times[s])
+                pred, cache = fn(params, x, t, label, memory, cache)
+                x, state = solver_step(x, pred, s, state,
+                                       jax.random.fold_in(kloop, s))
+        # exact liveness at the boundary: entries the next segment does
+        # not read are dead — drop them (free: a Python restructure;
+        # donation already recycled their buffers)
+        cache = prune_cache(self.cfg, cache, run.live_out)
+        if check:
+            expect = set(cache_entry_names(self.cfg, run.live_out))
+            got = {(si, bi, name)
+                   for si, stage in enumerate(cache)
+                   for bi, d in enumerate(stage)
+                   for name in d}
+            assert got == expect, (
+                f"liveness violation after steps "
+                f"[{run.start}, {run.start + run.length}): resident "
+                f"{sorted(got)} != live {sorted(expect)}")
+        return dataclasses.replace(rs, x=x, state=state, cache=cache,
+                                   run_index=rs.run_index + 1)
+
+    def sample_with_plan(self, params, key, batch: int, *,
+                         plan: plan_lib.ExecutionPlan, schedule=None,
+                         label=None, memory=None, check: bool = False):
+        """Segmented sampler: Python dispatch per *segment* (not per step),
+        one compiled program per unique plan signature.
+
+        ``check=True`` verifies after every segment that the resident cache
+        pytree holds exactly the plan's live entries (the liveness
+        invariant: dead branches are provably absent)."""
+        rs = self.start_run(params, key, batch, plan=plan, schedule=schedule,
+                            label=label, memory=memory)
+        while not rs.done:
+            rs = self.advance_run(params, rs, check=check)
+        return rs.x
 
     def sample_compiled(self, params, key, batch: int, *, schedule=None,
                         label=None, memory=None, plan=None,
@@ -538,6 +659,25 @@ class SmoothCacheExecutor:
         ``return_decisions=True`` additionally returns the realized
         per-step skip sets (tuple of sorted type tuples) for accounting.
         """
+        rs = self.start_adaptive_run(
+            params, key, batch, schedule=schedule, tau=tau,
+            proxy_map=proxy_map, pool=pool, k_max=k_max, label=label,
+            memory=memory)
+        while not rs.done:
+            rs = self.advance_adaptive_run(params, rs)
+        if return_decisions:
+            return rs.x, rs.decisions
+        return rs.x
+
+    def start_adaptive_run(self, params, key, batch: int, *, schedule,
+                           tau: float, proxy_map=None, pool=None,
+                           k_max: int = 3, label=None,
+                           memory=None) -> AdaptiveRunState:
+        """Begin a resumable adaptive run: validate the decision parameters,
+        derive/index the candidate pool, and enter the pool's shared cache
+        structure.  Drive it with :meth:`advance_adaptive_run` (one step per
+        call); ``start + advance-until-done`` is exactly
+        :meth:`sample_adaptive`."""
         s_total = self.solver.num_steps
         if schedule is None:
             schedule = schedule_lib.no_cache(self.cfg.layer_types(), s_total)
@@ -563,58 +703,70 @@ class SmoothCacheExecutor:
                 raise ValueError(f"proxy_map lacks coefficients for "
                                  f"{missing}; recalibrate")
         x, kloop = self.initial_latent(key, batch)
-        state = self.solver.init_state()
         structs = self._branch_structs(params, x, label, memory)
         # every pool signature shares the same structure; enter once with
         # placeholder buffers for all ever-skipped types
         cache = self._enter_run_cache(empty_branch_cache(self.cfg),
                                       by_skipset[frozenset()], structs)
-        solver_step = self._get_solver_step()
-        proxy_fn = self._get_proxy_fn()
-        acc = {t: 0.0 for t in types}       # est. error since last compute
-        lag = {t: 0 for t in types}         # cache age in steps
-        x_prev = None
-        decisions = []
-        for s in range(s_total):
-            delta: Dict[str, float] = {}
-            if s == 0:
-                skipset = frozenset()       # cache is empty: compute all
-            elif tau == 0.0:
-                # trust the offline schedule verbatim (bit-identical to
-                # sample_compiled on the same schedule)
-                skipset = frozenset(t for t, sk in schedule.mask_key_at(s)
-                                    if sk)
+        return AdaptiveRunState(
+            x=x, state=self.solver.init_state(), cache=cache, kloop=kloop,
+            step=0, x_prev=None,
+            acc={t: 0.0 for t in types},     # est. error since last compute
+            lag={t: 0 for t in types},       # cache age in steps
+            decisions=(), schedule=schedule, tau=tau, proxy_map=proxy_map,
+            by_skipset=by_skipset, pool_live=pool_live, k_max=k_max,
+            label=label, memory=memory)
+
+    def advance_adaptive_run(self, params,
+                             rs: AdaptiveRunState) -> AdaptiveRunState:
+        """Advance an in-flight adaptive run by one step: observe the proxy,
+        decide the skip set, dispatch the matching precompiled pool program,
+        and run the solver step.  Returns the successor state; with donation
+        the input state's cache buffers are recycled — drop it."""
+        if rs.done:
+            raise ValueError("run is already complete")
+        s = rs.step
+        x, schedule, tau = rs.x, rs.schedule, rs.tau
+        acc, lag = dict(rs.acc), dict(rs.lag)
+        types = self.cfg.layer_types()
+        delta: Dict[str, float] = {}
+        if s == 0:
+            skipset = frozenset()           # cache is empty: compute all
+        elif tau == 0.0:
+            # trust the offline schedule verbatim (bit-identical to
+            # sample_compiled on the same schedule)
+            skipset = frozenset(t for t, sk in schedule.mask_key_at(s)
+                                if sk)
+        else:
+            proxy = float(self._get_proxy_fn()(x, rs.x_prev))
+            chosen = set()
+            for t in sorted(rs.pool_live):
+                delta[t] = rs.proxy_map.est(t, proxy)
+                if lag[t] + 1 <= rs.k_max and acc[t] + delta[t] < tau:
+                    chosen.add(t)
+            skipset = frozenset(chosen)
+        sig = rs.by_skipset.get(skipset)
+        if sig is None:
+            raise ValueError(
+                f"static schedule mask at step {s} skips "
+                f"{sorted(skipset)}, absent from the candidate pool — "
+                "derive the pool from this schedule via mask_lattice()")
+        for t in types:
+            if t in skipset:
+                acc[t] += delta.get(t, 0.0)
+                lag[t] += 1
             else:
-                proxy = float(proxy_fn(x, x_prev))
-                chosen = set()
-                for t in sorted(pool_live):
-                    delta[t] = proxy_map.est(t, proxy)
-                    if lag[t] + 1 <= k_max and acc[t] + delta[t] < tau:
-                        chosen.add(t)
-                skipset = frozenset(chosen)
-            sig = by_skipset.get(skipset)
-            if sig is None:
-                raise ValueError(
-                    f"static schedule mask at step {s} skips "
-                    f"{sorted(skipset)}, absent from the candidate pool — "
-                    "derive the pool from this schedule via mask_lattice()")
-            for t in types:
-                if t in skipset:
-                    acc[t] += delta.get(t, 0.0)
-                    lag[t] += 1
-                else:
-                    acc[t] = 0.0
-                    lag[t] = 0
-            decisions.append(tuple(sorted(skipset)))
-            x_prev = x
-            t_arr = jnp.full((batch,), self.solver.model_times[s])
-            fn = self._get_sig_model_fn(sig)
-            pred, cache = fn(params, x, t_arr, label, memory, cache)
-            x, state = solver_step(x, pred, s, state,
-                                   jax.random.fold_in(kloop, s))
-        if return_decisions:
-            return x, tuple(decisions)
-        return x
+                acc[t] = 0.0
+                lag[t] = 0
+        t_arr = jnp.full((x.shape[0],), self.solver.model_times[s])
+        fn = self._get_sig_model_fn(sig)
+        pred, cache = fn(params, x, t_arr, rs.label, rs.memory, rs.cache)
+        x_next, state = self._get_solver_step()(
+            x, pred, s, rs.state, jax.random.fold_in(rs.kloop, s))
+        return dataclasses.replace(
+            rs, x=x_next, state=state, cache=cache, step=s + 1, x_prev=x,
+            acc=acc, lag=lag,
+            decisions=rs.decisions + (tuple(sorted(skipset)),))
 
     # -- whole-sampler lowering (for FLOP / roofline accounting) ------------
 

@@ -1,0 +1,36 @@
+"""repro.serve — cache-aware continuous-batching serving for diffusion.
+
+The layer that turns the executor machinery (segment-compiled plans,
+adaptive signature pools, serializable artifacts) into a system that
+drains heterogeneous traffic::
+
+    from repro import serve
+    from repro.core import solvers
+    from repro.core.executor import SmoothCacheExecutor
+
+    ex = SmoothCacheExecutor(cfg, solvers.ddim(50), cfg_scale=1.5)
+    store = serve.ArtifactStore(cfg, ex.solver, cfg_scale=1.5)
+    store.add_policy("no_cache", "none")
+    store.add_artifact("smooth", "dit_xl_ddim50.cache.json")   # validated
+
+    engine = serve.ServeEngine(ex, params, store, max_batch=8)
+    engine.submit(serve.Request(rid=0, seed=17, policy="smooth", label=3))
+    results = engine.run_until_drained()       # {rid: latent}
+    print(engine.report())                     # p50/p95, throughput, compiles
+
+Pieces: :class:`Request`/:class:`RequestQueue` (real arrival timestamps,
+virtual-clock test mode), :class:`MicroBatcher` (power-of-two buckets per
+(entry, signature) group), :class:`ArtifactStore` (strict-validated
+hot-reload; serving never recalibrates), :class:`ServeEngine`
+(step-interleaved scheduler over the executor's resumable runs), and
+:class:`ServerMetrics` (queue wait vs service percentiles, compile counts,
+realized compute fraction).
+"""
+from repro.serve.batcher import (  # noqa: F401
+    MicroBatch, MicroBatcher, bucket_for, bucket_sizes)
+from repro.serve.engine import (  # noqa: F401
+    BatchRecord, SCHEDULERS, ServeEngine, batch_key)
+from repro.serve.metrics import ServerMetrics, percentile  # noqa: F401
+from repro.serve.request import (  # noqa: F401
+    Request, RequestQueue, VirtualClock, WallClock, poisson_arrivals)
+from repro.serve.store import ArtifactStore, ServableEntry  # noqa: F401

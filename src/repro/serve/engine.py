@@ -1,0 +1,305 @@
+"""Step-interleaved continuous-batching serving engine.
+
+The engine drains a :class:`~repro.serve.request.RequestQueue` through the
+executor's **resumable stepping API** (``start_run`` / ``advance_run`` for
+static plans — one :class:`~repro.core.plan.ExecutionPlan` segment per
+advance — and ``start_adaptive_run`` / ``advance_adaptive_run`` for
+adaptive entries, a step-chunk per advance).  Several in-flight
+micro-batches timeslice the device: under the default ``interleave``
+scheduler each tick advances the head of a round-robin rotation, so a
+short, heavily-cached schedule admitted behind a full-compute one
+finishes early instead of convoying behind it (``fcfs`` reproduces the
+convoy for comparison).
+
+Determinism contract: a micro-batch over requests ``[r0..rn-1]`` samples
+with ``batch_key(seeds)`` — serving a batch is *bit-identical* to calling
+``DiffusionPipeline.generate(params, batch_key(seeds), n, label=...)``
+with the same store entry, because start+advance-until-done executes
+exactly the ops of ``sample_with_plan`` / ``sample_adaptive``
+(``tests/test_serve.py`` asserts this end-to-end).
+
+Compiled-program budget: programs specialize on (signature, batch shape),
+so the engine's compile count is bounded by |buckets used| ×
+|signature pool| across all entries — reported by :meth:`ServeEngine.report`
+against the executor's ``xla_program_count``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.batcher import MicroBatch, MicroBatcher, bucket_sizes
+from repro.serve.metrics import ServerMetrics
+from repro.serve.request import Request, RequestQueue, WallClock
+from repro.serve.store import ArtifactStore
+
+#: scheduling strategies: round-robin timeslicing vs run-to-completion
+SCHEDULERS = ("interleave", "fcfs")
+
+
+def batch_key(seeds: Sequence[int]):
+    """Deterministic PRNG key of a micro-batch: a fold of the member
+    requests' seeds (order-sensitive — the batch row order).  Exposed so
+    tests and clients can replay any served batch through
+    ``DiffusionPipeline.generate`` and get bit-identical latents."""
+    key = jax.random.PRNGKey(len(seeds))
+    for s in seeds:
+        # full 32-bit fold: seeds differing only in bit 31 must not
+        # collapse to the same key
+        key = jax.random.fold_in(key, jnp.uint32(int(s) & 0xFFFFFFFF))
+    return key
+
+
+@dataclasses.dataclass
+class BatchRecord:
+    """Provenance of one served micro-batch (enough to replay it)."""
+    group: str
+    version: int
+    bucket: int
+    rids: Tuple[int, ...]
+    seeds: Tuple[int, ...]
+    labels: Tuple[Optional[int], ...]
+    num_steps: int
+    compute_fraction: float
+    formed_at: float
+    finished_at: float
+    decisions: Optional[Tuple[tuple, ...]] = None   # adaptive runs only
+
+
+class _EagerState:
+    """Run-state stand-in for the ``--eager`` escape hatch (whole batch
+    sampled in one advance; no interleaving)."""
+
+    def __init__(self):
+        self.x = None
+        self.decisions = None
+
+    @property
+    def done(self) -> bool:
+        return self.x is not None
+
+
+@dataclasses.dataclass
+class _Inflight:
+    mb: MicroBatch
+    kind: str                                 # "plan" | "adaptive" | "eager"
+    rs: object
+    label: object
+
+
+class ServeEngine:
+    """Queue → batcher → interleaved executor runs → metrics."""
+
+    def __init__(self, executor, params, store: ArtifactStore, *,
+                 clock=None, max_batch: int = 8, max_wait: float = 0.0,
+                 max_inflight: int = 2, scheduler: str = "interleave",
+                 adaptive_chunk: int = 4, eager: bool = False,
+                 check: bool = False):
+        if scheduler not in SCHEDULERS:
+            raise ValueError(f"scheduler must be one of {SCHEDULERS}, got "
+                             f"{scheduler!r}")
+        if max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
+        if adaptive_chunk < 1:
+            raise ValueError(f"adaptive_chunk must be >= 1, got "
+                             f"{adaptive_chunk}")
+        self.executor = executor
+        self.params = params
+        self.store = store
+        self.clock = clock if clock is not None else WallClock()
+        self.queue = RequestQueue(self.clock)
+        self.batcher = MicroBatcher(self.queue, store, max_batch=max_batch,
+                                    max_wait=max_wait)
+        self.metrics = ServerMetrics()
+        self.scheduler = scheduler
+        self.max_inflight = max_inflight
+        self.adaptive_chunk = adaptive_chunk
+        self.eager = eager
+        self.check = check
+        self.results: Dict[int, np.ndarray] = {}
+        self.records: List[BatchRecord] = []
+        self._inflight: List[_Inflight] = []
+        self._rids: set = set()               # every rid ever submitted
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(self, *reqs: Request) -> None:
+        """Enqueue requests (arrival stamped now unless preset).  Unknown
+        policy names are rejected at the door, not at batch formation."""
+        seen = set()
+        for r in reqs:
+            if r.policy not in self.store:
+                raise KeyError(f"request {r.rid}: no servable entry "
+                               f"{r.policy!r}; have {self.store.names()}")
+            # against *every* rid ever submitted (queued, in flight, done,
+            # or earlier in this very call), not just completed ones — a
+            # duplicate would silently overwrite its sibling's result
+            if r.rid in self._rids or r.rid in seen:
+                raise ValueError(f"duplicate request id {r.rid}")
+            seen.add(r.rid)
+        self._rids |= seen
+        self.queue.submit_many(list(reqs))
+
+    # -- scheduling ----------------------------------------------------------
+
+    def _admit(self, now: float) -> None:
+        while len(self._inflight) < self.max_inflight:
+            mb = self.batcher.next_batch(now)
+            if mb is None:
+                return
+            self._launch(mb, now)
+
+    def _launch(self, mb: MicroBatch, now: float) -> None:
+        entry = mb.entry
+        key = batch_key(mb.seeds)
+        label = None
+        if any(lab is not None for lab in mb.labels):
+            label = jnp.asarray([0 if lab is None else int(lab)
+                                 for lab in mb.labels], jnp.int32)
+        if self.eager:
+            kind, rs = "eager", _EagerState()
+        elif entry.adaptive:
+            kind = "adaptive"
+            rs = self.executor.start_adaptive_run(
+                self.params, key, mb.bucket, schedule=entry.schedule,
+                tau=entry.tau, proxy_map=entry.proxy_map, pool=None,
+                k_max=entry.k_max, label=label)
+        else:
+            kind = "plan"
+            rs = self.executor.start_run(
+                self.params, key, mb.bucket, plan=entry.plan,
+                schedule=entry.schedule, label=label)
+        for r in mb.requests:
+            r.started = now
+        self._inflight.append(_Inflight(mb=mb, kind=kind, rs=rs,
+                                        label=label))
+
+    def _advance(self, fl: _Inflight) -> None:
+        entry = fl.mb.entry
+        if fl.kind == "plan":
+            fl.rs = self.executor.advance_run(self.params, fl.rs,
+                                              check=self.check)
+        elif fl.kind == "adaptive":
+            for _ in range(self.adaptive_chunk):
+                if fl.rs.done:
+                    break
+                fl.rs = self.executor.advance_adaptive_run(self.params,
+                                                           fl.rs)
+        else:                                  # eager escape hatch
+            key = batch_key(fl.mb.seeds)
+            fl.rs.x = self.executor.sample(
+                self.params, key, fl.mb.bucket, schedule=entry.schedule,
+                label=fl.label)
+
+    def _finish(self, fl: _Inflight) -> None:
+        mb, rs = fl.mb, fl.rs
+        x = jax.block_until_ready(rs.x)
+        done = self.clock.now()
+        x = np.asarray(x)
+        for j, r in enumerate(mb.requests):
+            r.finished = done
+            self.results[r.rid] = x[j]
+            self.metrics.observe_request(r)
+        entry = mb.entry
+        num_types = len(entry.schedule.skip)
+        decisions = getattr(rs, "decisions", None)
+        if decisions:
+            skipped = sum(len(d) for d in decisions)
+            frac = 1.0 - skipped / float(entry.plan.num_steps * num_types)
+        else:
+            frac = entry.compute_fraction()
+        self.metrics.observe_batch(mb.group, mb.bucket, frac,
+                                   entry.plan.num_steps, num_types)
+        self.records.append(BatchRecord(
+            group=mb.group, version=entry.version, bucket=mb.bucket,
+            rids=mb.rids, seeds=mb.seeds, labels=mb.labels,
+            num_steps=entry.plan.num_steps, compute_fraction=frac,
+            formed_at=mb.formed_at, finished_at=done, decisions=decisions))
+
+    def step(self) -> bool:
+        """One scheduling tick: admit what fits, then advance one in-flight
+        run by one unit (a plan segment / an adaptive step-chunk / a whole
+        eager batch).  Returns False when nothing is runnable *right now*
+        (requests may still be in flight toward their arrival time)."""
+        now = self.clock.now()
+        self._admit(now)
+        if not self._inflight:
+            return False
+        if self.scheduler == "interleave":
+            fl = self._inflight.pop(0)         # rotate: head runs one unit
+            self._advance(fl)
+            if fl.rs.done:
+                self._finish(fl)
+            else:
+                self._inflight.append(fl)
+        else:                                  # fcfs: run head to done
+            fl = self._inflight[0]
+            self._advance(fl)
+            if fl.rs.done:
+                self._inflight.pop(0)
+                self._finish(fl)
+        return True
+
+    def run_until_drained(self) -> Dict[int, np.ndarray]:
+        """Serve until every submitted request has a result, sleeping the
+        clock across arrival gaps / batching windows.  Returns
+        {rid: latent row}."""
+        while True:
+            if self.step():
+                continue
+            if len(self.queue) == 0:
+                break
+            now = self.clock.now()
+            t = self.batcher.next_event(now)
+            if t is None:
+                raise RuntimeError(
+                    "serve engine stalled: queued requests but no "
+                    "schedulable event")
+            if t <= now:
+                # wall clock crossed an arrival / batching window between
+                # step()'s reading and this one — the work is formable now,
+                # re-tick.  (Under a frozen VirtualClock t > now always:
+                # an expired window would have formed a batch in step().)
+                continue
+            self.clock.sleep_until(t)
+        return self.results
+
+    # -- reporting -----------------------------------------------------------
+
+    def program_budget(self) -> int:
+        """Static upper bound on shape-specialized model programs this
+        deployment may compile: |admissible buckets| × Σ per-entry
+        signature-pool size (the mask lattice for adaptive entries, the
+        plan's unique signatures otherwise).  Independent of the traffic
+        actually served — no request mix can push compiles past it; entries
+        sharing signatures only tighten it."""
+        buckets = len(bucket_sizes(self.batcher.max_batch))
+        pool = 0
+        for name in self.store.names():
+            entry = self.store.get(name)
+            if entry.adaptive:
+                ever = [t for t, v in entry.schedule.skip.items() if v.any()]
+                pool += 2 ** len(ever)
+            else:
+                pool += entry.plan.num_unique_signatures
+        return buckets * pool
+
+    #: executor table kinds holding *model* programs (the budgeted set;
+    #: the per-shape solver-step/proxy helper jits are not signature-bound)
+    MODEL_PROGRAM_KINDS = ("seg", "sigstep", "eager")
+
+    def report(self) -> Dict:
+        compiles = {
+            kind: self.executor.compiled_variant_count(kind)
+            for kind in self.MODEL_PROGRAM_KINDS
+            if self.executor.compiled_variant_count(kind)
+        }
+        compiles["xla_programs"] = sum(
+            self.executor.xla_program_count(kind)
+            for kind in self.MODEL_PROGRAM_KINDS)
+        return self.metrics.report(compile_counts=compiles,
+                                   program_budget=self.program_budget())

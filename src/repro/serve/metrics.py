@@ -1,0 +1,117 @@
+"""Serving metrics: latency percentiles, throughput, compute, compiles.
+
+Queue wait and service time are tracked **separately** (the old example
+reported their sum under one shared submit timestamp, which degenerates to
+queue position).  Realized compute fraction is the fraction of layer
+evaluations actually executed — for static entries that equals the
+schedule's compute fraction, for adaptive entries it comes from the run's
+realized per-step decisions, weighted by batch size.  Compile counts are
+injected by the engine from the executor's variant table
+(``compiled_variant_count`` per kind, plus shape-specialized
+``xla_program_count``) and reported against the program budget
+``|buckets used| × |signature pool|``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.serve.request import Request
+
+
+def percentile(xs: Sequence[float], p: float) -> float:
+    """Linear-interpolation percentile (numpy-free so fake-executor tests
+    stay dependency-light).  ``p`` in [0, 100]."""
+    if not xs:
+        raise ValueError("percentile of an empty sequence")
+    s = sorted(xs)
+    if len(s) == 1:
+        return float(s[0])
+    rank = (p / 100.0) * (len(s) - 1)
+    lo = int(rank)
+    hi = min(lo + 1, len(s) - 1)
+    return float(s[lo] + (s[hi] - s[lo]) * (rank - lo))
+
+
+def _dist(xs: List[float]) -> Dict[str, float]:
+    return {
+        "mean": sum(xs) / len(xs),
+        "p50": percentile(xs, 50),
+        "p95": percentile(xs, 95),
+        "max": max(xs),
+    }
+
+
+class ServerMetrics:
+    """Accumulates per-request and per-batch observations; ``report()``
+    renders one JSON-safe snapshot."""
+
+    def __init__(self):
+        self.queue_waits: List[float] = []
+        self.service_times: List[float] = []
+        self.first_arrival: Optional[float] = None
+        self.last_finish: Optional[float] = None
+        self.batches = 0
+        self.bucket_counts: Dict[int, int] = {}
+        self.group_requests: Dict[str, int] = {}
+        self._evals_done = 0.0                # request-weighted layer evals
+        self._evals_total = 0.0
+
+    # -- observation ---------------------------------------------------------
+
+    def observe_request(self, req: Request) -> None:
+        if req.queue_wait is None or req.service_time is None:
+            raise ValueError(f"request {req.rid} is missing timestamps")
+        self.queue_waits.append(req.queue_wait)
+        self.service_times.append(req.service_time)
+        if self.first_arrival is None or req.arrival < self.first_arrival:
+            self.first_arrival = req.arrival
+        if self.last_finish is None or req.finished > self.last_finish:
+            self.last_finish = req.finished
+
+    def observe_batch(self, group: str, bucket: int,
+                      compute_fraction: float, num_steps: int,
+                      num_types: int) -> None:
+        self.batches += 1
+        self.bucket_counts[bucket] = self.bucket_counts.get(bucket, 0) + 1
+        self.group_requests[group] = (self.group_requests.get(group, 0)
+                                      + bucket)
+        evals = float(num_steps * num_types * bucket)
+        self._evals_total += evals
+        self._evals_done += compute_fraction * evals
+
+    # -- reporting -----------------------------------------------------------
+
+    @property
+    def requests(self) -> int:
+        return len(self.queue_waits)
+
+    def realized_compute_fraction(self) -> Optional[float]:
+        if self._evals_total == 0:
+            return None
+        return self._evals_done / self._evals_total
+
+    def report(self, compile_counts: Optional[Dict[str, int]] = None,
+               program_budget: Optional[int] = None) -> Dict:
+        """One JSON-safe snapshot.  Throughput is measured over the
+        first-arrival → last-finish makespan (open-loop serving: arrival
+        gaps count against the server, idle pre-warm time does not)."""
+        out: Dict = {
+            "requests": self.requests,
+            "batches": self.batches,
+            "buckets": {str(b): c
+                        for b, c in sorted(self.bucket_counts.items())},
+            "per_group_requests": dict(sorted(self.group_requests.items())),
+            "compute_fraction": self.realized_compute_fraction(),
+        }
+        if self.requests:
+            makespan = self.last_finish - self.first_arrival
+            out["makespan_s"] = makespan
+            out["throughput_rps"] = (self.requests / makespan
+                                     if makespan > 0 else float("inf"))
+            out["queue_wait_s"] = _dist(self.queue_waits)
+            out["service_s"] = _dist(self.service_times)
+        if compile_counts is not None:
+            out["compiles"] = dict(compile_counts)
+        if program_budget is not None:
+            out["program_budget"] = program_budget
+        return out

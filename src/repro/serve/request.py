@@ -1,0 +1,168 @@
+"""Requests, clocks, and the arrival queue.
+
+A :class:`Request` is one generation job: a seed, an optional class label,
+and the name of the :class:`~repro.serve.store.ArtifactStore` entry whose
+schedule/plan should serve it.  Requests carry *real* arrival timestamps —
+queue wait and service time are separate, measurable quantities (the old
+``examples/serve_diffusion.py`` stamped every request with one shared
+submit time, so its "latency" was just queue position).
+
+Time comes from a :class:`Clock` so the whole serving stack runs in two
+modes: :class:`WallClock` for real deployments, and :class:`VirtualClock`
+for deterministic tests — a fake executor charges virtual seconds per
+segment and the scheduler's decisions (batch formation, interleaving,
+fairness) become exactly reproducible assertions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import time
+from typing import Dict, List, Optional, Sequence
+
+
+# ---------------------------------------------------------------------------
+# Clocks
+# ---------------------------------------------------------------------------
+
+class WallClock:
+    """Monotonic real time; ``sleep_until`` actually sleeps."""
+
+    def now(self) -> float:
+        return time.monotonic()
+
+    def sleep_until(self, t: float) -> None:
+        dt = t - self.now()
+        if dt > 0:
+            time.sleep(dt)
+
+
+class VirtualClock:
+    """Deterministic test clock: time moves only when told to."""
+
+    def __init__(self, start: float = 0.0):
+        self._now = float(start)
+
+    def now(self) -> float:
+        return self._now
+
+    def sleep_until(self, t: float) -> None:
+        self._now = max(self._now, float(t))
+
+    def advance(self, dt: float) -> float:
+        """Charge ``dt`` virtual seconds (fake executors call this to model
+        per-segment compute cost)."""
+        self._now += float(dt)
+        return self._now
+
+
+def poisson_arrivals(rate: float, n: int, rng, start: float = 0.0
+                     ) -> List[float]:
+    """``n`` arrival timestamps of a Poisson process with ``rate`` req/s
+    (i.i.d. exponential gaps) — the synthetic open-loop arrival trace the
+    serving example and benchmark share.  ``rng`` is a seeded
+    ``np.random.RandomState``/``Generator`` so traces are reproducible."""
+    if rate <= 0:
+        raise ValueError(f"arrival rate must be > 0, got {rate}")
+    t = float(start)
+    out = []
+    for _ in range(n):
+        t += float(rng.exponential(1.0 / rate))
+        out.append(t)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Requests
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    """One generation job.
+
+    ``seed`` feeds the micro-batch PRNG key (see
+    :func:`repro.serve.engine.batch_key`); ``policy`` names the store entry
+    (artifact / calibration-free policy) that serves it; ``priority`` breaks
+    ties ahead of arrival order (higher first).  ``arrival`` is stamped by
+    the queue at submit time unless given explicitly (virtual-clock tests
+    and replayed traces pass it)."""
+    rid: int
+    seed: int
+    policy: str
+    label: Optional[int] = None
+    priority: int = 0
+    arrival: Optional[float] = None
+    started: Optional[float] = None           # micro-batch launch time
+    finished: Optional[float] = None          # result materialized
+
+    @property
+    def queue_wait(self) -> Optional[float]:
+        if self.started is None or self.arrival is None:
+            return None
+        return self.started - self.arrival
+
+    @property
+    def service_time(self) -> Optional[float]:
+        if self.finished is None or self.started is None:
+            return None
+        return self.finished - self.started
+
+
+class RequestQueue:
+    """Arrival-ordered request queue with per-policy grouping.
+
+    Requests become *ready* once the clock passes their arrival timestamp;
+    ready requests are handed out per policy group in ``(-priority,
+    arrival, rid)`` order.  The queue never forms batches itself — that is
+    :class:`~repro.serve.batcher.MicroBatcher`'s job."""
+
+    def __init__(self, clock=None):
+        self.clock = clock if clock is not None else WallClock()
+        self._future: List = []               # heap of (arrival, tie, req)
+        self._ready: Dict[str, List[Request]] = {}
+        self._tie = itertools.count()
+
+    def submit(self, req: Request) -> Request:
+        if req.arrival is None:
+            req.arrival = self.clock.now()
+        heapq.heappush(self._future, (req.arrival, next(self._tie), req))
+        return req
+
+    def submit_many(self, reqs: Sequence[Request]) -> List[Request]:
+        return [self.submit(r) for r in reqs]
+
+    def _absorb(self, now: float) -> None:
+        while self._future and self._future[0][0] <= now:
+            _, _, req = heapq.heappop(self._future)
+            group = self._ready.setdefault(req.policy, [])
+            group.append(req)
+            group.sort(key=lambda r: (-r.priority, r.arrival, r.rid))
+
+    def ready_groups(self, now: Optional[float] = None) -> Dict[str, int]:
+        """{policy name: number of ready requests} at time ``now``."""
+        self._absorb(self.clock.now() if now is None else now)
+        return {g: len(rs) for g, rs in self._ready.items() if rs}
+
+    def peek(self, group: str, now: Optional[float] = None) -> List[Request]:
+        self._absorb(self.clock.now() if now is None else now)
+        return list(self._ready.get(group, ()))
+
+    def take(self, group: str, n: int,
+             now: Optional[float] = None) -> List[Request]:
+        """Remove and return the ``n`` highest-priority/oldest ready
+        requests of ``group``."""
+        self._absorb(self.clock.now() if now is None else now)
+        rs = self._ready.get(group, [])
+        taken, self._ready[group] = rs[:n], rs[n:]
+        return taken
+
+    def next_arrival(self, now: Optional[float] = None) -> Optional[float]:
+        """Earliest not-yet-ready arrival timestamp (None when everything
+        submitted has already arrived)."""
+        self._absorb(self.clock.now() if now is None else now)
+        return self._future[0][0] if self._future else None
+
+    def __len__(self) -> int:
+        return len(self._future) + sum(len(rs) for rs in
+                                       self._ready.values())

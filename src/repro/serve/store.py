@@ -1,0 +1,204 @@
+"""Servable artifact store: strict-validated load + hot-reload.
+
+Serving **never recalibrates** (the PR-1/PR-3 contract): every schedule a
+server runs comes either from a :class:`~repro.cache.artifact.CacheArtifact`
+produced by an offline calibration process, or from a calibration-free
+policy (``none``, ``static:n=2``) resolved directly.  The store is the
+serving side of that contract:
+
+* :meth:`ArtifactStore.add_artifact` loads an artifact and runs the *same*
+  strict validation as ``DiffusionPipeline.load_artifact``
+  (``CacheArtifact.validate_for``: architecture, solver × step count,
+  cfg_scale, adaptive tau/k_max/pool provenance) before the entry becomes
+  visible to the batcher.
+* :meth:`ArtifactStore.reload` hot-swaps an entry *atomically*: the
+  replacement is fully loaded and validated first, and a bad file leaves
+  the old entry serving (the swap raises instead of wedging traffic).
+  Each swap bumps ``entry.version`` — in-flight batches keep the entry
+  they launched with; new batches resolve the current one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Union
+
+from repro.cache import registry
+from repro.cache.artifact import CacheArtifact
+from repro.cache.policy import AdaptivePolicy, CachePolicy
+from repro.core import calibration as calibration_lib
+from repro.core import plan as plan_lib
+from repro.core.schedule import Schedule
+
+
+@dataclasses.dataclass
+class ServableEntry:
+    """Everything the engine needs to serve one policy: the resolved
+    schedule, its pre-analyzed execution plan, and — for adaptive policies
+    — the runtime decision parameters shipped in the artifact."""
+    name: str
+    policy: CachePolicy
+    schedule: Schedule
+    plan: plan_lib.ExecutionPlan
+    artifact: Optional[CacheArtifact] = None
+    proxy_map: Optional[calibration_lib.ProxyMap] = None
+    version: int = 1
+    path: Optional[str] = None
+    #: the ``policy=`` override add_artifact() was called with, if any —
+    #: reload() must re-apply it or a hot swap would silently fall back
+    #: to the artifact's stored policy (e.g. flip a static-base entry
+    #: back to adaptive serving)
+    policy_override: Optional[CachePolicy] = None
+
+    @property
+    def adaptive(self) -> bool:
+        return isinstance(self.policy, AdaptivePolicy)
+
+    @property
+    def tau(self) -> float:
+        return self.policy.tau if self.adaptive else 0.0
+
+    @property
+    def k_max(self) -> int:
+        return self.policy.k_max
+
+    def fingerprint(self) -> str:
+        """Schedule-content digest + version — an identifier for logs and
+        batch records.  (Version isolation itself needs no key: the
+        batcher snapshots the current entry atomically when it forms a
+        batch, so one micro-batch always serves exactly one version.)"""
+        return f"{self.schedule.fingerprint()}/v{self.version}"
+
+    def compute_fraction(self) -> float:
+        """Static compute fraction of the entry's schedule (adaptive runs
+        report their *realized* fraction per batch instead)."""
+        import numpy as np
+        return float(np.mean([1.0 - np.mean(v)
+                              for v in self.schedule.skip.values()]))
+
+
+class ArtifactStore:
+    """Named servable entries validated against one deployment
+    (architecture + solver + guidance scale)."""
+
+    def __init__(self, cfg, solver, *, cfg_scale: Optional[float] = None):
+        self.cfg = cfg
+        self.solver = solver
+        self.cfg_scale = cfg_scale
+        self._entries: Dict[str, ServableEntry] = {}
+
+    # -- loading -------------------------------------------------------------
+
+    def _build_entry(self, name: str,
+                     src: Union[str, CacheArtifact],
+                     policy: Optional[Union[str, dict, CachePolicy]],
+                     strict: bool, version: int) -> ServableEntry:
+        path = src if isinstance(src, str) else None
+        art = CacheArtifact.load(src) if isinstance(src, str) else src
+        override = registry.get(policy) if policy is not None else None
+        pol = override if override is not None \
+            else registry.from_config(art.policy)
+        if strict:
+            art.validate_for(
+                arch=self.cfg.name, solver=self.solver.name,
+                num_steps=self.solver.num_steps, cfg_scale=self.cfg_scale,
+                policy=pol if isinstance(pol, AdaptivePolicy) else None)
+        schedule = art.schedule if art.schedule is not None \
+            else art.resolve(pol)
+        plan = art.execution_plan()
+        if plan is None:
+            plan = plan_lib.analyze(schedule)
+        proxy_map = None
+        if art.adaptive and art.adaptive.get("proxy_map"):
+            proxy_map = calibration_lib.ProxyMap.from_jsonable(
+                art.adaptive["proxy_map"])
+        if isinstance(pol, AdaptivePolicy) and pol.tau > 0 \
+                and proxy_map is None:
+            raise ValueError(
+                f"entry {name!r}: adaptive policy with tau={pol.tau} needs "
+                "an artifact carrying a fitted proxy_map — recalibrate "
+                "(serving never calibrates)")
+        return ServableEntry(name=name, policy=pol, schedule=schedule,
+                             plan=plan, artifact=art, proxy_map=proxy_map,
+                             version=version, path=path,
+                             policy_override=override)
+
+    def add_artifact(self, name: str, src: Union[str, CacheArtifact], *,
+                     policy=None, strict: bool = True) -> ServableEntry:
+        """Load + validate an artifact under ``name``.  ``policy``
+        overrides the artifact's stored policy config (rare; e.g. serving
+        a stored schedule under its non-adaptive base)."""
+        if name in self._entries:
+            raise ValueError(f"entry {name!r} exists; use reload() to "
+                             "hot-swap it")
+        entry = self._build_entry(name, src, policy, strict, version=1)
+        self._entries[name] = entry
+        return entry
+
+    def add_policy(self, name: str,
+                   policy: Union[str, dict, CachePolicy]) -> ServableEntry:
+        """Register a calibration-free policy (``none``, ``static:n=2``)
+        resolved directly against the deployment — no artifact involved.
+        Calibration-based policies must arrive as artifacts."""
+        if name in self._entries:
+            raise ValueError(f"entry {name!r} exists; use reload() to "
+                             "hot-swap it")
+        pol = registry.get(policy)
+        if pol.requires_calibration:
+            raise ValueError(
+                f"policy {pol.spec()!r} needs calibration curves; serving "
+                "never calibrates — load its CacheArtifact via "
+                "add_artifact() instead")
+        schedule = pol.build(self.cfg.layer_types(), self.solver.num_steps)
+        entry = ServableEntry(name=name, policy=pol, schedule=schedule,
+                              plan=plan_lib.analyze(schedule))
+        self._entries[name] = entry
+        return entry
+
+    def reload(self, name: str,
+               src: Optional[Union[str, CacheArtifact]] = None, *,
+               strict: bool = True) -> ServableEntry:
+        """Hot-swap ``name`` with a freshly validated artifact (default:
+        re-read the entry's original path).  Validation happens *before*
+        the swap: a bad replacement raises and the old entry keeps
+        serving.  The new entry's ``version`` is bumped so the batcher's
+        grouping key changes and records show which version served."""
+        old = self.get(name)
+        if src is None:
+            if old.path is None:
+                raise ValueError(f"entry {name!r} was not loaded from a "
+                                 "path; pass the replacement explicitly")
+            src = old.path
+        entry = self._build_entry(name, src, old.policy_override, strict,
+                                  version=old.version + 1)
+        self._entries[name] = entry
+        return entry
+
+    # -- lookup --------------------------------------------------------------
+
+    def get(self, name: str) -> ServableEntry:
+        if name not in self._entries:
+            raise KeyError(f"no servable entry {name!r}; have "
+                           f"{sorted(self._entries)}")
+        return self._entries[name]
+
+    def names(self) -> List[str]:
+        return sorted(self._entries)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def summary(self) -> str:
+        rows = [f"ArtifactStore({self.cfg.name}, {self.solver.name}"
+                f"x{self.solver.num_steps}, {len(self._entries)} entries)"]
+        for name in self.names():
+            e = self._entries[name]
+            kind = "adaptive" if e.adaptive else "static"
+            src = e.path or ("artifact" if e.artifact else "policy")
+            rows.append(f"  {name:16s} {e.policy.spec():40s} {kind:8s} "
+                        f"v{e.version} [{src}] "
+                        f"compute={e.compute_fraction():.2f} "
+                        f"sigs={e.plan.num_unique_signatures}")
+        return "\n".join(rows)

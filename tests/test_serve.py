@@ -1,0 +1,616 @@
+"""repro.serve — scheduler/batcher/store unit tests on a virtual clock
+with a fake executor (batch formation, bucket selection, signature
+grouping, fairness under mixed schedules, artifact hot-swap, metrics),
+plus one end-to-end test on the smoke DiT proving served latents are
+bit-identical to direct ``DiffusionPipeline.generate`` with the same
+seeds (the serving determinism contract)."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro import serve
+from repro.cache.artifact import CacheArtifact
+from repro.core import plan as plan_lib
+from repro.core import schedule as S
+from repro.serve.batcher import bucket_for, bucket_sizes
+from repro.serve.metrics import percentile
+
+
+# ---------------------------------------------------------------------------
+# Fakes: deployment (cfg/solver), executor with virtual-clock costs
+# ---------------------------------------------------------------------------
+
+class FakeCfg:
+    name = "fake-arch"
+
+    def layer_types(self):
+        return ("attn", "ffn")
+
+
+class FakeSolver:
+    name = "ddim"
+
+    def __init__(self, num_steps=8):
+        self.num_steps = num_steps
+
+
+@dataclasses.dataclass
+class FakeRunState:
+    plan: plan_lib.ExecutionPlan
+    batch: int
+    run_index: int = 0
+    x: object = None
+    decisions = None
+
+    @property
+    def done(self):
+        return self.run_index >= len(self.plan.runs)
+
+
+@dataclasses.dataclass
+class FakeAdaptiveState:
+    schedule: object
+    batch: int
+    step: int = 0
+    x: object = None
+    decisions: tuple = ()
+
+    @property
+    def done(self):
+        return self.step >= self.schedule.num_steps
+
+
+class FakeExecutor:
+    """Implements the executor's resumable-run surface; each advance
+    charges the virtual clock per *computed* layer evaluation, so cheap
+    (heavily cached) schedules finish in less virtual time and scheduling
+    behavior becomes exact assertions."""
+
+    def __init__(self, clock, step_cost=1.0):
+        self.clock = clock
+        self.step_cost = step_cost
+        self._programs = set()               # (kind, sig-ish, batch shape)
+
+    def _charge(self, skip: dict, length: int):
+        computed = sum(1 for sk in skip.values() if not sk)
+        self.clock.advance(self.step_cost * length
+                           * computed / max(len(skip), 1))
+
+    def start_run(self, params, key, batch, *, plan, schedule=None,
+                  label=None, memory=None):
+        return FakeRunState(plan=plan, batch=batch)
+
+    def advance_run(self, params, rs, *, check=False):
+        run = rs.plan.runs[rs.run_index]
+        self._programs.add(("seg", run.sig, rs.batch))
+        self._charge(run.sig.skip, run.length)
+        rs = dataclasses.replace(rs, run_index=rs.run_index + 1)
+        if rs.done:
+            # row j encodes its batch position (tests result routing)
+            rs.x = np.arange(rs.batch, dtype=np.float64)[:, None]
+        return rs
+
+    def start_adaptive_run(self, params, key, batch, *, schedule, tau,
+                           proxy_map=None, pool=None, k_max=3, label=None,
+                           memory=None):
+        return FakeAdaptiveState(schedule=schedule, batch=batch)
+
+    def advance_adaptive_run(self, params, rs):
+        mask = {t: bool(v[rs.step]) for t, v in rs.schedule.skip.items()}
+        skipset = tuple(sorted(t for t, sk in mask.items() if sk))
+        self._programs.add(("sigstep", skipset, rs.batch))
+        self._charge(mask, 1)
+        rs = dataclasses.replace(rs, step=rs.step + 1,
+                                 decisions=rs.decisions + (skipset,))
+        if rs.done:
+            rs.x = np.arange(rs.batch, dtype=np.float64)[:, None]
+        return rs
+
+    def sample(self, params, key, batch, *, schedule=None, label=None,
+               memory=None):
+        self._programs.add(("eager", "all", batch))
+        for s in range(schedule.num_steps):
+            self._charge({t: bool(v[s])
+                          for t, v in schedule.skip.items()}, 1)
+        return np.arange(batch, dtype=np.float64)[:, None]
+
+    def compiled_variant_count(self, kind=None):
+        if kind is None:
+            return len(self._programs)
+        return len({p for p in self._programs if p[0] == kind})
+
+    def xla_program_count(self, kind=None):
+        return self.compiled_variant_count(kind)
+
+
+def make_store(num_steps=8, **entries):
+    store = serve.ArtifactStore(FakeCfg(), FakeSolver(num_steps))
+    for name, spec in entries.items():
+        store.add_policy(name, spec)
+    return store
+
+
+def make_engine(num_steps=8, store=None, **kw):
+    clock = serve.VirtualClock()
+    store = store if store is not None else make_store(
+        num_steps, no_cache="none", static2="static:n=2")
+    ex = FakeExecutor(clock)
+    kw.setdefault("max_batch", 4)
+    eng = serve.ServeEngine(ex, params=None, store=store, clock=clock, **kw)
+    return eng, clock
+
+
+def req(rid, policy, arrival=0.0, priority=0, seed=None, label=None):
+    return serve.Request(rid=rid, seed=rid if seed is None else seed,
+                         policy=policy, label=label, priority=priority,
+                         arrival=arrival)
+
+
+# ---------------------------------------------------------------------------
+# Buckets (pure)
+# ---------------------------------------------------------------------------
+
+def test_bucket_for_largest_power_of_two():
+    assert [bucket_for(n, 8) for n in (1, 2, 3, 4, 5, 7, 8, 9, 100)] \
+        == [1, 2, 2, 4, 4, 4, 8, 8, 8]
+    with pytest.raises(ValueError):
+        bucket_for(0, 8)
+
+
+def test_bucket_sizes():
+    assert bucket_sizes(8) == (1, 2, 4, 8)
+    assert bucket_sizes(1) == (1,)
+
+
+def test_max_batch_must_be_power_of_two():
+    with pytest.raises(ValueError, match="power of two"):
+        make_engine(max_batch=6)
+
+
+# ---------------------------------------------------------------------------
+# Batch formation / bucket selection
+# ---------------------------------------------------------------------------
+
+def test_tail_splits_into_power_of_two_buckets():
+    eng, _ = make_engine(max_batch=4)
+    eng.submit(*[req(i, "static2") for i in range(7)])
+    eng.run_until_drained()
+    assert sorted(r.bucket for r in eng.records) == [1, 2, 4]
+    # every row is a real request — no padding anywhere
+    assert sum(r.bucket for r in eng.records) == 7
+    assert sorted(eng.results) == list(range(7))
+
+
+def test_result_rows_route_to_the_right_request():
+    eng, _ = make_engine(max_batch=4)
+    eng.submit(*[req(i, "static2") for i in range(6)])
+    res = eng.run_until_drained()
+    for rec in eng.records:
+        for j, rid in enumerate(rec.rids):
+            assert res[rid][0] == j        # fake writes row index into row
+
+
+def test_batching_window_holds_partial_buckets():
+    eng, clock = make_engine(max_batch=4, max_wait=5.0)
+    eng.submit(req(0, "static2", arrival=0.0),
+               req(1, "static2", arrival=1.0),
+               req(2, "static2", arrival=2.0))
+    eng.run_until_drained()
+    # nothing fills the 4-bucket, so one 2-batch + one 1-batch form when
+    # the oldest member's wait hits max_wait — not at arrival
+    assert [r.bucket for r in eng.records] == [2, 1]
+    assert eng.records[0].formed_at == pytest.approx(5.0)
+    reqs0 = eng.records[0].rids
+    assert reqs0 == (0, 1)
+
+
+def test_full_bucket_forms_immediately_despite_window():
+    eng, _ = make_engine(max_batch=4, max_wait=100.0)
+    eng.submit(*[req(i, "static2", arrival=0.0) for i in range(4)])
+    eng.run_until_drained()
+    assert [r.bucket for r in eng.records] == [4]
+    assert eng.records[0].formed_at == pytest.approx(0.0)
+
+
+def test_priority_beats_arrival_within_group():
+    eng, _ = make_engine(max_batch=2, max_wait=0.0, max_inflight=1)
+    eng.submit(req(0, "static2", arrival=0.0),
+               req(1, "static2", arrival=0.0),
+               req(2, "static2", arrival=0.0, priority=5))
+    eng.run_until_drained()
+    assert 2 in eng.records[0].rids
+
+
+def test_arrivals_gate_admission():
+    eng, clock = make_engine(max_batch=4)
+    eng.submit(req(0, "static2", arrival=0.0),
+               req(1, "static2", arrival=50.0))
+    eng.run_until_drained()
+    # the late request cannot join the first batch
+    assert [r.bucket for r in eng.records] == [1, 1]
+    assert eng.records[1].formed_at >= 50.0
+
+
+# ---------------------------------------------------------------------------
+# Signature grouping + fairness
+# ---------------------------------------------------------------------------
+
+def test_policies_never_share_a_batch():
+    eng, _ = make_engine(max_batch=4)
+    eng.submit(*[req(i, "static2" if i % 2 else "no_cache")
+                 for i in range(8)])
+    eng.run_until_drained()
+    for rec in eng.records:
+        # one entry per batch: every member request targeted rec.group
+        assert all(rid % 2 == (rec.group == "static2") for rid in rec.rids)
+    by_group = {}
+    for rec in eng.records:
+        by_group.setdefault(rec.group, 0)
+        by_group[rec.group] += rec.bucket
+    assert by_group == {"no_cache": 4, "static2": 4}
+
+
+def test_round_robin_across_groups():
+    eng, _ = make_engine(max_batch=2, max_inflight=1)
+    eng.submit(*[req(i, "no_cache") for i in range(4)],
+               *[req(10 + i, "static2") for i in range(4)])
+    eng.run_until_drained()
+    # groups alternate instead of one draining fully first
+    assert [r.group for r in eng.records] == [
+        "no_cache", "static2", "no_cache", "static2"]
+
+
+def test_interleave_avoids_convoy_fcfs_does_not():
+    """A short heavily-cached batch admitted behind a long many-segment
+    one must not convoy under the interleaving scheduler.  The long job
+    (``static:n=2`` over 16 steps) has 16 plan segments ≈ 8 virtual
+    seconds of compute; the short job (``static:n=8``) has 4 segments ≈
+    2 seconds and arrives just after the long one starts."""
+    done_times = {}
+    for sched_name in ("interleave", "fcfs"):
+        store = make_store(16, longjob="static:n=2", cached="static:n=8")
+        eng, clock = make_engine(num_steps=16, store=store, max_batch=2,
+                                 max_inflight=2, scheduler=sched_name)
+        eng.submit(req(0, "longjob", arrival=0.0),
+                   req(1, "cached", arrival=0.5))
+        eng.run_until_drained()
+        done = {rec.group: rec.finished_at for rec in eng.records}
+        done_times[sched_name] = done
+    # fcfs: the cached run convoys behind the long run
+    assert done_times["fcfs"]["cached"] > done_times["fcfs"]["longjob"]
+    # interleave: the cheap run timeslices in and finishes first
+    assert (done_times["interleave"]["cached"]
+            < done_times["interleave"]["longjob"])
+    assert (done_times["interleave"]["cached"]
+            < done_times["fcfs"]["cached"])
+
+
+def test_adaptive_entries_route_through_adaptive_runs():
+    store = make_store(8, static2="static:n=2")
+    art = _adaptive_artifact(num_steps=8)
+    store.add_artifact("adaptive", art)
+    eng, _ = make_engine(store=store, max_batch=2)
+    eng.submit(req(0, "adaptive"), req(1, "adaptive"), req(2, "static2"))
+    eng.run_until_drained()
+    rec = {r.group: r for r in eng.records}
+    assert rec["adaptive"].decisions is not None
+    assert len(rec["adaptive"].decisions) == 8
+    assert rec["static2"].decisions is None
+    # realized fraction comes from decisions and matches the fake's rule
+    sch = store.get("adaptive").schedule
+    skipped = sum(int(v[s]) for v in sch.skip.values()
+                  for s in range(sch.num_steps))
+    assert rec["adaptive"].compute_fraction == pytest.approx(
+        1.0 - skipped / (8 * 2))
+
+
+def test_eager_escape_hatch():
+    eng, _ = make_engine(max_batch=2, eager=True)
+    eng.submit(req(0, "static2"), req(1, "static2"))
+    eng.run_until_drained()
+    assert eng.executor.compiled_variant_count("eager") == 1
+    assert eng.executor.compiled_variant_count("seg") == 0
+    assert sorted(eng.results) == [0, 1]
+
+
+def test_unknown_policy_rejected_at_submit():
+    eng, _ = make_engine()
+    with pytest.raises(KeyError, match="typo"):
+        eng.submit(req(0, "typo"))
+
+
+def test_duplicate_rid_rejected_even_while_pending():
+    eng, _ = make_engine()
+    eng.submit(req(0, "static2", arrival=100.0))     # queued, not served
+    with pytest.raises(ValueError, match="duplicate"):
+        eng.submit(req(0, "static2"))
+    with pytest.raises(ValueError, match="duplicate"):
+        eng.submit(req(1, "static2"), req(1, "static2"))  # same call
+
+
+def test_batch_key_distinguishes_high_bit_seeds():
+    a = np.asarray(serve.batch_key([5]))
+    b = np.asarray(serve.batch_key([2 ** 31 + 5]))
+    assert not np.array_equal(a, b)
+    # and is order-sensitive (row order is part of the batch identity)
+    c = np.asarray(serve.batch_key([1, 2]))
+    d = np.asarray(serve.batch_key([2, 1]))
+    assert not np.array_equal(c, d)
+
+
+# ---------------------------------------------------------------------------
+# Store: validation + hot swap
+# ---------------------------------------------------------------------------
+
+def _static_artifact(num_steps=8, n=2, arch="fake-arch", solver="ddim",
+                     name=None):
+    types = ("attn", "ffn")
+    sch = S.fora(types, num_steps, n)
+    return CacheArtifact(
+        arch=arch, solver=solver, num_steps=num_steps,
+        policy={"name": "static", "n": n}, curves={}, schedule=sch,
+        plan=plan_lib.analyze(sch).to_jsonable(), meta={})
+
+
+def _adaptive_artifact(num_steps=8, tau=0.1, k_max=1):
+    types = ("attn", "ffn")
+    sch = S.fora(types, num_steps, 2)
+    pool = [list(sig.live_in) for sig in plan_lib.mask_lattice(sch)]
+    return CacheArtifact(
+        arch="fake-arch", solver="ddim", num_steps=num_steps,
+        policy={"name": "adaptive", "base": {"name": "static", "n": 2},
+                "tau": tau},
+        curves={}, schedule=sch,
+        plan=plan_lib.analyze(sch).to_jsonable(),
+        adaptive={"tau": tau, "k_max": k_max,
+                  "proxy_map": {"coeffs": {"attn": [0.0, 0.01],
+                                           "ffn": [0.0, 0.01]},
+                                "mean_proxy": None},
+                  "pool": pool},
+        meta={})
+
+
+def test_store_rejects_calibration_needing_policy():
+    store = make_store()
+    with pytest.raises(ValueError, match="never calibrates"):
+        store.add_policy("smooth", "smoothcache:alpha=0.18")
+
+
+def test_store_validates_artifact_against_deployment():
+    store = make_store()
+    with pytest.raises(ValueError, match="calibrated on"):
+        store.add_artifact("bad", _static_artifact(arch="other-arch"))
+    with pytest.raises(ValueError, match="solver"):
+        store.add_artifact("bad", _static_artifact(num_steps=99))
+    # non-strict loads anyway (explicit override)
+    store.add_artifact("forced", _static_artifact(arch="other-arch"),
+                       strict=False)
+
+
+def test_store_adaptive_tau_without_proxy_map_rejected():
+    art = _adaptive_artifact()
+    art.adaptive.pop("proxy_map")
+    store = make_store()
+    with pytest.raises(ValueError, match="proxy_map"):
+        store.add_artifact("adaptive", art)
+
+
+def test_hot_swap_bumps_version_and_serves_new_schedule(tmp_path):
+    path = str(tmp_path / "entry.cache.json")
+    art1 = _static_artifact(n=2)
+    with open(path, "w") as f:
+        f.write(art1.to_json())
+    store = make_store()
+    e1 = store.add_artifact("entry", path)
+    assert e1.version == 1
+
+    eng, _ = make_engine(store=store, max_batch=2)
+    eng.submit(req(0, "entry"), req(1, "entry"))
+    eng.run_until_drained()
+    assert eng.records[-1].version == 1
+
+    # overwrite on disk with a different schedule, then hot-swap
+    art2 = _static_artifact(n=4)
+    with open(path, "w") as f:
+        f.write(art2.to_json())
+    e2 = store.reload("entry")
+    assert e2.version == 2
+    assert e2.schedule.fingerprint() != e1.schedule.fingerprint()
+
+    eng.submit(req(2, "entry"), req(3, "entry"))
+    eng.run_until_drained()
+    assert eng.records[-1].version == 2
+    assert len(eng.results) == 4
+
+
+def test_hot_swap_of_invalid_artifact_keeps_old_entry(tmp_path):
+    path = str(tmp_path / "entry.cache.json")
+    with open(path, "w") as f:
+        f.write(_static_artifact(n=2).to_json())
+    store = make_store()
+    store.add_artifact("entry", path)
+
+    # replacement calibrated for a different deployment must be refused
+    with open(path, "w") as f:
+        f.write(_static_artifact(num_steps=13).to_json())
+    with pytest.raises(ValueError, match="solver"):
+        store.reload("entry")
+    assert store.get("entry").version == 1          # old entry still serves
+    assert store.get("entry").schedule.num_steps == 8
+
+
+def test_reload_keeps_policy_override(tmp_path):
+    """An entry added with a policy override (e.g. serving an adaptive
+    artifact's static base schedule) must keep that override across a
+    hot swap — not silently flip back to the artifact's stored policy."""
+    path = str(tmp_path / "entry.cache.json")
+    with open(path, "w") as f:
+        f.write(_adaptive_artifact().to_json())
+    store = make_store()
+    e1 = store.add_artifact("entry", path, policy="static:n=2")
+    assert not e1.adaptive
+    e2 = store.reload("entry")
+    assert e2.version == 2
+    assert not e2.adaptive                     # override survived the swap
+    assert e2.policy.spec() == e1.policy.spec()
+
+
+def test_reload_of_policy_entry_needs_explicit_source():
+    store = make_store(static2="static:n=2")
+    with pytest.raises(ValueError, match="path"):
+        store.reload("static2")
+
+
+# ---------------------------------------------------------------------------
+# Metrics
+# ---------------------------------------------------------------------------
+
+def test_percentile_interpolates():
+    xs = [1.0, 2.0, 3.0, 4.0]
+    assert percentile(xs, 0) == 1.0
+    assert percentile(xs, 100) == 4.0
+    assert percentile(xs, 50) == pytest.approx(2.5)
+    assert percentile([7.0], 95) == 7.0
+    with pytest.raises(ValueError):
+        percentile([], 50)
+
+
+def test_queue_wait_and_service_reported_separately():
+    eng, clock = make_engine(max_batch=1, max_inflight=1)
+    eng.submit(req(0, "no_cache", arrival=0.0),
+               req(1, "no_cache", arrival=0.0))
+    eng.run_until_drained()
+    rep = eng.report()
+    assert rep["requests"] == 2
+    # the fake charges 1.0 virtual second per full-compute step (8 steps):
+    # both service times are 8s; the second request queues behind the first
+    assert rep["service_s"]["p50"] == pytest.approx(8.0)
+    assert rep["queue_wait_s"]["max"] == pytest.approx(8.0)
+    assert rep["queue_wait_s"]["p50"] == pytest.approx(4.0)  # mean of 0, 8
+    assert rep["makespan_s"] == pytest.approx(16.0)
+    assert rep["throughput_rps"] == pytest.approx(2 / 16.0)
+    json.dumps(rep)                                  # JSON-safe
+
+
+def test_report_includes_compile_counts_and_budget():
+    eng, _ = make_engine(max_batch=4)
+    eng.submit(*[req(i, "static2") for i in range(6)])
+    eng.run_until_drained()
+    rep = eng.report()
+    assert rep["compiles"]["xla_programs"] > 0
+    assert rep["compiles"]["xla_programs"] <= rep["program_budget"]
+    assert rep["buckets"] == {"2": 1, "4": 1}
+
+
+def test_realized_compute_fraction_static():
+    eng, _ = make_engine(max_batch=2)
+    eng.submit(req(0, "static2"), req(1, "static2"))
+    eng.run_until_drained()
+    sch = eng.store.get("static2").schedule
+    expect = float(np.mean([1.0 - np.mean(v)
+                            for v in sch.skip.values()]))
+    assert eng.report()["compute_fraction"] == pytest.approx(expect)
+
+
+# ---------------------------------------------------------------------------
+# Poisson arrivals (pure)
+# ---------------------------------------------------------------------------
+
+def test_poisson_arrivals_reproducible_and_increasing():
+    rng1 = np.random.RandomState(3)
+    rng2 = np.random.RandomState(3)
+    a = serve.poisson_arrivals(2.0, 50, rng1, start=1.0)
+    b = serve.poisson_arrivals(2.0, 50, rng2, start=1.0)
+    assert a == b
+    assert all(x < y for x, y in zip(a, a[1:]))
+    assert a[0] > 1.0
+    # mean gap ≈ 1/rate
+    gaps = np.diff([1.0] + a)
+    assert 0.2 < float(np.mean(gaps)) < 1.0
+    with pytest.raises(ValueError):
+        serve.poisson_arrivals(0.0, 5, rng1)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: served latents ≡ direct pipeline.generate (smoke DiT)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_dit():
+    import jax
+    from repro import configs
+    from repro.core import diffusion
+    cfg = configs.get("dit-xl-256", "smoke")
+    params = diffusion.init_params(jax.random.PRNGKey(0), cfg)
+    params = jax.tree.map(
+        lambda a: a + 0.05 * jax.random.normal(jax.random.PRNGKey(7),
+                                               a.shape),
+        params)
+    return cfg, params
+
+
+def test_served_latents_bit_identical_to_generate(small_dit, tmp_path):
+    """Acceptance: a heterogeneous queue mixing a static and an adaptive
+    policy drains through the engine within the compile budget, and every
+    served latent equals a direct ``DiffusionPipeline.generate`` replay of
+    its micro-batch, bitwise."""
+    import jax
+    import jax.numpy as jnp
+    from repro import cache
+    from repro.core import solvers
+    from repro.core.executor import SmoothCacheExecutor
+
+    cfg, params = small_dit
+    steps = 6
+
+    # offline calibration process → artifact on disk
+    calib = cache.DiffusionPipeline(
+        cfg, solvers.ddim(steps),
+        "adaptive:base=smoothcache(alpha=0.5),tau=0.3", cfg_scale=1.5)
+    calib.calibrate(params, jax.random.PRNGKey(1), 2,
+                    cond_args={"label": jnp.zeros((2,), jnp.int32)})
+    path = str(tmp_path / "adaptive.cache.json")
+    calib.save_artifact(path)
+
+    # serving process: store + engine, never recalibrates
+    solver = solvers.ddim(steps)
+    ex = SmoothCacheExecutor(cfg, solver, cfg_scale=1.5)
+    store = serve.ArtifactStore(cfg, solver, cfg_scale=1.5)
+    store.add_policy("static2", "static:n=2")
+    store.add_artifact("adaptive", path)
+    eng = serve.ServeEngine(ex, params, store, max_batch=2, max_inflight=2,
+                            clock=serve.VirtualClock(), check=True)
+    eng.submit(*[serve.Request(
+        rid=i, seed=100 + i,
+        policy="adaptive" if i % 2 else "static2",
+        label=i % cfg.num_classes, arrival=0.0) for i in range(5)])
+    res = eng.run_until_drained()
+    assert sorted(res) == list(range(5))
+    assert {r.group for r in eng.records} == {"static2", "adaptive"}
+
+    # compile budget: ≤ |buckets used| × signature pool size
+    rep = eng.report()
+    assert rep["compiles"]["xla_programs"] <= rep["program_budget"]
+
+    # replay every micro-batch through the pipeline facade
+    static_pipe = cache.DiffusionPipeline(cfg, solvers.ddim(steps),
+                                          "static:n=2", cfg_scale=1.5)
+    static_pipe.prepare()
+    adaptive_pipe = cache.DiffusionPipeline(
+        cfg, solvers.ddim(steps),
+        "adaptive:base=smoothcache(alpha=0.5),tau=0.3", cfg_scale=1.5)
+    adaptive_pipe.load_artifact(path)
+    for rec in eng.records:
+        key = serve.batch_key(rec.seeds)
+        lab = jnp.asarray(rec.labels, jnp.int32)
+        if rec.group == "adaptive":
+            x, dec = adaptive_pipe.generate(params, key, rec.bucket,
+                                            label=lab,
+                                            return_decisions=True)
+            assert dec == rec.decisions
+        else:
+            x = static_pipe.generate(params, key, rec.bucket, label=lab)
+        for j, rid in enumerate(rec.rids):
+            np.testing.assert_array_equal(np.asarray(x[j]), res[rid])
