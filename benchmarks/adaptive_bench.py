@@ -1,20 +1,27 @@
-"""Static SmoothCache vs input-adaptive runtime caching.
+"""Static SmoothCache vs input-adaptive runtime caching, fused vs host.
 
 Calibrates one adaptive policy (SmoothCache base at a ~50% compute budget,
 TeaCache-style accumulated-error threshold τ) on the smoke DiT, then runs
-**heterogeneous inputs** (different seeds and class labels) through three
+**heterogeneous inputs** (different seeds and class labels) through four
 paths:
 
-* ``reference`` — uncached sampling (quality anchor),
-* ``static``    — ``sample_compiled`` under the offline schedule (the same
-                  compute for every input),
-* ``adaptive``  — ``sample_adaptive`` (per-input decisions dispatched over
-                  the precompiled mask-lattice pool).
+* ``reference``      — uncached sampling (quality anchor),
+* ``static``         — ``sample_compiled`` under the offline schedule (the
+                       same compute for every input),
+* ``adaptive_fused`` — ``sample_adaptive_fused``: the whole decision +
+                       ``lax.switch`` dispatch loop in ONE donated device
+                       program (zero per-step host syncs, one program per
+                       pool),
+* ``adaptive_host``  — ``sample_adaptive``: per-step host dispatch over
+                       the precompiled pool (one decision sync + one
+                       program dispatch per step).
 
 Per input it reports realized compute fraction, steady-state wall time,
-and L1 distance to the uncached reference; the adaptive path's program
-count is asserted against the pool size (compile count must be bounded by
-the pool, never per step).  Writes ``BENCH_adaptive.json`` (results dir +
+and L1 distance to the uncached reference; the fused-vs-host columns add
+per-step dispatch overhead (host wall − fused wall, per step) and the
+device→host decision-sync counts.  Program counts are asserted: fused
+compiles exactly one program, host dispatch stays bounded by the pool —
+never one per step.  Writes ``BENCH_adaptive.json`` (results dir +
 repo-root trajectory mirror).
 
     PYTHONPATH=src python -m benchmarks.run --only adaptive
@@ -79,6 +86,8 @@ def run() -> None:
 
     ex_static = SmoothCacheExecutor(cfg, solver, cfg_scale=CFG_SCALE)
     ex_ref = SmoothCacheExecutor(cfg, solver, cfg_scale=CFG_SCALE)
+    ex_host = SmoothCacheExecutor(cfg, solver, cfg_scale=CFG_SCALE)
+    proxy_map, k_max = pipe.proxy_map, pipe.policy.k_max
 
     inputs = []
     for seed, lab in INPUTS:
@@ -93,27 +102,54 @@ def run() -> None:
         _, t_static_first = _timed(run_static)
         x_static, t_static = _timed(run_static)
 
-        run_adaptive = lambda: pipe.generate(params, key, BATCH, label=label,
-                                             return_decisions=True)
-        _, t_adapt_first = _timed(run_adaptive)
-        (x_adapt, decisions), t_adapt = _timed(run_adaptive)
+        # fused: pipe.generate routes to sample_adaptive_fused (ddim is
+        # scannable) — one donated program, decisions on device
+        run_fused = lambda: pipe.generate(params, key, BATCH, label=label,
+                                          return_decisions=True)
+        _, t_fused_first = _timed(run_fused)
+        (x_fused, decisions), t_fused = _timed(run_fused)
         skipped = sum(len(d) for d in decisions)
         adapt_fraction = 1.0 - skipped / (STEPS * len(types))
+
+        # host loop: per-step decision sync + program dispatch
+        run_host = lambda: ex_host.sample_adaptive(
+            params, key, BATCH, schedule=sch, tau=TAU, proxy_map=proxy_map,
+            k_max=k_max, label=label, return_decisions=True)
+        _, _ = _timed(run_host)
+        syncs_before = ex_host.host_sync_count
+        (x_host, dec_host), t_host = _timed(run_host)
+        host_syncs = ex_host.host_sync_count - syncs_before
+        assert dec_host == decisions, (
+            "fused and host decision sequences diverged")
 
         inputs.append({
             "seed": seed, "label": int(lab % cfg.num_classes),
             "static": {"compute_fraction": static_fraction,
                        "sample_s": t_static,
                        "l1_vs_reference": _rel_l1(x_static, x_ref)},
-            "adaptive": {"compute_fraction": adapt_fraction,
-                         "sample_s": t_adapt,
-                         "l1_vs_reference": _rel_l1(x_adapt, x_ref),
-                         "skips_per_step": [list(d) for d in decisions]},
+            "adaptive_fused": {
+                "compute_fraction": adapt_fraction,
+                "sample_s": t_fused,
+                "l1_vs_reference": _rel_l1(x_fused, x_ref),
+                "device_syncs": 0,       # decisions stay on device
+                "skips_per_step": [list(d) for d in decisions]},
+            "adaptive_host": {
+                "compute_fraction": adapt_fraction,
+                "sample_s": t_host,
+                "l1_vs_reference": _rel_l1(x_host, x_ref),
+                "device_syncs": host_syncs},
         })
 
-    programs = pipe.executor.compiled_variant_count("sigstep")
-    assert programs <= len(pool), (programs, len(pool))
+    fused_programs = pipe.executor.compiled_variant_count("fused")
+    host_programs = ex_host.compiled_variant_count("sigstep")
+    assert fused_programs == 1, fused_programs
+    assert pipe.executor.host_sync_count == 0
+    assert 0 < host_programs <= len(pool), (host_programs, len(pool))
 
+    mean = lambda path, key_: float(np.mean([i[path][key_]
+                                             for i in inputs]))
+    t_fused_mean = mean("adaptive_fused", "sample_s")
+    t_host_mean = mean("adaptive_host", "sample_s")
     result = {
         "config": cfg.name, "solver": solver.name, "steps": STEPS,
         "batch": BATCH, "cfg_scale": CFG_SCALE, "tau": TAU,
@@ -121,34 +157,47 @@ def run() -> None:
         "calibrate_s": calib_s,
         "pool": {"size": len(pool),
                  "masks": [list(sig.live_in) for sig in pool],
-                 "programs_compiled": programs},
+                 "fused_programs_compiled": fused_programs,
+                 "host_programs_compiled": host_programs},
         "static_schedule": {"name": sch.name, "alpha": sch.alpha,
                             "compute_fraction": static_fraction},
         "inputs": inputs,
         "mean": {
             "static_compute_fraction": static_fraction,
-            "adaptive_compute_fraction": float(np.mean(
-                [i["adaptive"]["compute_fraction"] for i in inputs])),
-            "static_sample_s": float(np.mean(
-                [i["static"]["sample_s"] for i in inputs])),
-            "adaptive_sample_s": float(np.mean(
-                [i["adaptive"]["sample_s"] for i in inputs])),
-            "static_l1": float(np.mean(
-                [i["static"]["l1_vs_reference"] for i in inputs])),
-            "adaptive_l1": float(np.mean(
-                [i["adaptive"]["l1_vs_reference"] for i in inputs])),
+            "adaptive_compute_fraction": mean("adaptive_fused",
+                                              "compute_fraction"),
+            "static_sample_s": mean("static", "sample_s"),
+            "adaptive_fused_sample_s": t_fused_mean,
+            "adaptive_host_sample_s": t_host_mean,
+            "per_step_dispatch_overhead_s": (t_host_mean - t_fused_mean)
+                                            / STEPS,
+            "fused_device_syncs_per_run": 0,
+            "host_device_syncs_per_run": mean("adaptive_host",
+                                              "device_syncs"),
+            "static_l1": mean("static", "l1_vs_reference"),
+            "adaptive_l1": mean("adaptive_fused", "l1_vs_reference"),
         },
     }
     common.write_bench_json("BENCH_adaptive.json", result)
 
     m = result["mean"]
-    for name in ("static", "adaptive"):
+    common.emit("adaptive/static_sample", m["static_sample_s"] * 1e6,
+                f"compute_frac={m['static_compute_fraction']:.3f}"
+                f";l1_vs_ref={m['static_l1']:.4f}")
+    for name in ("fused", "host"):
         common.emit(
-            f"adaptive/{name}_sample", m[f"{name}_sample_s"] * 1e6,
-            f"compute_frac={m[f'{name}_compute_fraction']:.3f}"
-            f";l1_vs_ref={m[f'{name}_l1']:.4f}")
+            f"adaptive/{name}_sample",
+            m[f"adaptive_{name}_sample_s"] * 1e6,
+            f"compute_frac={m['adaptive_compute_fraction']:.3f}"
+            f";l1_vs_ref={m['adaptive_l1']:.4f}"
+            f";syncs={m[f'{name}_device_syncs_per_run']:g}")
+    common.emit("adaptive/dispatch_overhead",
+                m["per_step_dispatch_overhead_s"] * 1e6,
+                f"per_step_us;steps={STEPS}")
     common.emit("adaptive/pool", len(pool),
-                f"programs={programs};inputs={len(inputs)};tau={TAU}")
+                f"fused_programs={fused_programs}"
+                f";host_programs={host_programs}"
+                f";inputs={len(inputs)};tau={TAU}")
 
 
 if __name__ == "__main__":

@@ -114,6 +114,28 @@ class CacheArtifact:
                         f"artifact's adaptive policy has {k}="
                         f"{self.adaptive[k]}, pipeline policy has "
                         f"{k}={mine}")
+        # the stacked device representation (what the fused sampling
+        # program evaluates) must agree with the fitted proxy map — a
+        # mismatch means the payload was edited or mispaired
+        if (self.adaptive and self.adaptive.get("proxy_map_stacked")
+                and self.adaptive.get("proxy_map")):
+            from repro.core import calibration as calibration_lib
+            stk = self.adaptive["proxy_map_stacked"]
+            pm = calibration_lib.ProxyMap.from_jsonable(
+                self.adaptive["proxy_map"])
+            try:
+                a, b = pm.stacked(stk.get("types", []))
+            except KeyError as e:
+                raise ValueError(
+                    f"artifact's stacked proxy-map types {stk.get('types')} "
+                    f"are not covered by its fitted coefficients: {e}")
+            if (not np.allclose(a, np.asarray(stk.get("a"), np.float32))
+                    or not np.allclose(b, np.asarray(stk.get("b"),
+                                                     np.float32))):
+                raise ValueError(
+                    "artifact's stacked proxy-map coefficients do not "
+                    "match its fitted proxy_map — the adaptive payload "
+                    "was edited or mispaired")
         # the stored pool must be the one this schedule derives —
         # a mismatch means the payload was edited or mispaired
         if (self.adaptive and "pool" in self.adaptive

@@ -114,10 +114,21 @@ class DiffusionPipeline:
         if isinstance(self.policy, AdaptivePolicy):
             self._proxy_map = rec.proxy_map
             pool = plan_lib.mask_lattice(sch)
+            # the device representation the fused program evaluates:
+            # per-type (a, b) stacked float32 in pool-type order — shipped
+            # explicitly so a serving process can audit/consume the exact
+            # coefficients the runtime rule will see
+            pool_types = sorted({t for sig in pool for t in sig.live_in})
+            coeff_a, coeff_b = rec.proxy_map.stacked(pool_types)
             adaptive = {
                 "tau": self.policy.tau,
                 "k_max": self.policy.k_max,
                 "proxy_map": rec.proxy_map.to_jsonable(),
+                "proxy_map_stacked": {
+                    "types": pool_types,
+                    "a": [float(v) for v in coeff_a],
+                    "b": [float(v) for v in coeff_b],
+                },
                 "pool": [list(sig.live_in) for sig in pool],
             }
         self.artifact = CacheArtifact(
@@ -202,12 +213,14 @@ class DiffusionPipeline:
         executor path (one compiled program per unique mask/liveness
         signature, reusing the pipeline's pre-analyzed plan).
 
-        Adaptive policies route transparently to the executor's
-        ``sample_adaptive`` path (per-input runtime decisions over the
-        precompiled candidate pool); pass ``return_decisions=True`` to
-        also get the realized per-step skip sets.  An explicit
-        ``schedule=`` override, or ``compiled=False``, falls back to the
-        static paths."""
+        Adaptive policies route transparently to the executor's fused
+        adaptive path when the solver is scannable (``sample_adaptive_fused``:
+        the whole decision+dispatch loop in one donated device program,
+        zero per-step host syncs), falling back to the host-dispatched
+        ``sample_adaptive`` loop otherwise — both produce identical
+        decision sequences; pass ``return_decisions=True`` to also get
+        the realized per-step skip sets.  An explicit ``schedule=``
+        override, or ``compiled=False``, falls back to the static paths."""
         if schedule is _UNSET:
             sch = self._schedule
             if sch is None and self.policy.requires_calibration:
@@ -224,7 +237,10 @@ class DiffusionPipeline:
                         f"policy {self.policy.spec()!r} needs a calibrated "
                         "proxy map — run calibrate()/load_artifact() before "
                         "generate()")
-                return self.executor.sample_adaptive(
+                sampler = (self.executor.sample_adaptive_fused
+                           if self.executor.supports_fused_adaptive
+                           else self.executor.sample_adaptive)
+                return sampler(
                     params, key, batch, schedule=sch, tau=self.policy.tau,
                     proxy_map=self._proxy_map, k_max=self.policy.k_max,
                     label=label, memory=memory,

@@ -228,7 +228,7 @@ class AdaptivePolicy(CachePolicy):
     requires_calibration = True
 
     def __init__(self, base: Union[str, Dict, CachePolicy] = "smoothcache",
-                 tau: float = 0.05):
+                 tau: float = 0.05, k_max: Optional[int] = None):
         from repro.cache import registry   # late: registry imports policy
         self.base = registry.get(base)
         if isinstance(self.base, AdaptivePolicy):
@@ -236,7 +236,16 @@ class AdaptivePolicy(CachePolicy):
         if tau < 0:
             raise ValueError(f"tau must be >= 0, got {tau}")
         self.tau = float(tau)
-        self.k_max = self.base.k_max
+        self._k_max_override = None if k_max is None else int(k_max)
+        self.k_max = (self.base.k_max if k_max is None else int(k_max))
+        if self.k_max < 1:
+            raise ValueError(
+                f"adaptive k_max must be >= 1, got {self.k_max}"
+                + ("" if k_max is not None else
+                   f" from base {self.base.spec()!r}")
+                + " — k_max=0 would compile the whole candidate pool yet "
+                "never reuse a cache entry (silently behaving like "
+                "no_cache), and negative values are nonsense")
 
     def build(self, types, num_steps, curves=None) -> Schedule:
         """The *static* base schedule — the adaptive runtime's fallback and
@@ -246,13 +255,19 @@ class AdaptivePolicy(CachePolicy):
             curves if self.base.requires_calibration else None)
 
     def to_config(self):
-        return {"name": self.name, "base": self.base.to_config(),
-                "tau": self.tau}
+        cfg = {"name": self.name, "base": self.base.to_config(),
+               "tau": self.tau}
+        if self._k_max_override is not None:
+            cfg["k_max"] = self._k_max_override
+        return cfg
 
     def spec(self) -> str:
         s = self.base.spec()
         base = s.replace(":", "(", 1) + ")" if ":" in s else s
-        return f"adaptive:base={base},tau={self.tau:g}"
+        spec = f"adaptive:base={base},tau={self.tau:g}"
+        if self._k_max_override is not None:
+            spec += f",k_max={self._k_max_override}"
+        return spec
 
 
 # ---------------------------------------------------------------------------

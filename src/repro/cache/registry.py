@@ -52,9 +52,12 @@ def _per_type(default=None, **policies) -> P.PerLayerType:
 
 
 @register("adaptive", "teacache")
-def _adaptive(base="smoothcache", tau=0.05) -> P.AdaptivePolicy:
-    # base may be a nested spec string, a to_config() dict, or a policy
-    return P.AdaptivePolicy(base=base, tau=tau)
+def _adaptive(base="smoothcache", tau=0.05, k_max=None) -> P.AdaptivePolicy:
+    # base may be a nested spec string, a to_config() dict, or a policy;
+    # k_max (cache-age cap, default: the base's) is validated >= 1 in
+    # AdaptivePolicy — "adaptive:...,k_max=0" must fail loudly, not
+    # compile the whole pool and silently never reuse
+    return P.AdaptivePolicy(base=base, tau=tau, k_max=k_max)
 
 
 # -- spec parsing ------------------------------------------------------------

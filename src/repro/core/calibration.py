@@ -103,6 +103,27 @@ def rel_l1_change(cur, prev):
     return abs(cur - prev).sum() / (abs(prev).sum() + 1e-12)
 
 
+def runtime_rule(proxy, acc, lag, a, b, tau, k_max, force_compute=False):
+    """One evaluation of the adaptive reuse rule, vectorized over layer
+    types: estimate the per-type lag-1 error from the proxy signal
+    (``max(a·proxy + b, 0)`` — clamped, so an adversarial fit can never
+    shrink the accumulator while skipping), skip a type while the error
+    accumulated since its last compute stays under ``tau`` and the cache
+    age stays ≤ ``k_max``, and return the updated accumulator/lag state.
+
+    THE decision arithmetic: the executor's fused sampling program inlines
+    it into its ``fori_loop`` body and the host-dispatch path jits it
+    standalone, so fused and host decision sequences agree bit-for-bit.
+    ``acc``/``a``/``b`` are float32, ``lag`` int32; ``force_compute``
+    (step 0, empty cache) overrides every skip."""
+    delta = jnp.maximum(a * proxy + b, 0.0)
+    skip = ((lag + 1 <= k_max) & (acc + delta < tau)
+            & jnp.logical_not(force_compute))
+    acc = jnp.where(skip, acc + delta, 0.0)
+    lag = jnp.where(skip, lag + 1, 0)
+    return skip, acc, lag
+
+
 def proxy_signal(cur, prev) -> float:
     """Relative L1 change of the model input between consecutive steps —
     one scalar per step over the whole batch tensor.  This is the runtime
@@ -127,6 +148,12 @@ class ProxyMap:
     """Fitted per-type linear map from the proxy signal to the one-step
     (lag-1) relative output error: ``est_t(p) = max(a_t·p + b_t, 0)``.
 
+    The clamp at zero is load-bearing: an adversarial fit (negative slope
+    or intercept) would otherwise yield negative per-type estimates, so the
+    accumulator could *decrease* while a type keeps skipping and postpone
+    its recompute indefinitely.  Both the scalar :meth:`est` and the device
+    rule (:func:`runtime_rule` over :meth:`stacked` coefficients) clamp.
+
     The runtime rule accumulates ``est_t(proxy_s)`` over consecutive
     reuse steps and recomputes type ``t`` once the sum would cross τ —
     TeaCache-style, but with the mapping *fitted during calibration* and
@@ -138,6 +165,19 @@ class ProxyMap:
     def est(self, t: str, proxy: float) -> float:
         a, b = self.coeffs[t]
         return max(a * float(proxy) + b, 0.0)
+
+    def stacked(self, types) -> Tuple[np.ndarray, np.ndarray]:
+        """Device representation: per-type ``(a, b)`` coefficients stacked
+        into two float32 arrays in the given type order — what the fused
+        sampling program (and the host decide step, for parity) evaluates
+        as one vectorized ``max(a·p + b, 0)``."""
+        missing = [t for t in types if t not in self.coeffs]
+        if missing:
+            raise KeyError(f"proxy_map lacks coefficients for {missing}; "
+                           f"have {self.types()}")
+        a = np.asarray([self.coeffs[t][0] for t in types], np.float32)
+        b = np.asarray([self.coeffs[t][1] for t in types], np.float32)
+        return a, b
 
     def types(self):
         return sorted(self.coeffs)

@@ -38,6 +38,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import ModelConfig
 from repro.core import diffusion, plan as plan_lib, schedule as schedule_lib
@@ -163,23 +164,31 @@ class RunState:
 
 @dataclasses.dataclass
 class AdaptiveRunState:
-    """In-flight state of one input-adaptive sampling run (per-step
-    granularity: each ``advance_adaptive_run`` call executes one decision +
-    model + solver step, exactly the ``sample_adaptive`` loop body)."""
+    """In-flight state of one host-dispatched input-adaptive sampling run
+    (per-step granularity: each ``advance_adaptive_run`` call executes one
+    decision + model + solver step, exactly the ``sample_adaptive`` loop
+    body).  The accumulator/lag decision state lives on device (float32 /
+    int32 arrays over ``pool_types``) and is updated by the same
+    :func:`~repro.core.calibration.runtime_rule` the fused program inlines;
+    only the realized skip *bits* cross to the host — one small
+    device→host sync per step, which is exactly what
+    :meth:`SmoothCacheExecutor.sample_adaptive_fused` eliminates."""
     x: Any
     state: Any
     cache: Any
     kloop: Any
     step: int                                # next step to execute
     x_prev: Any                              # model input of previous step
-    acc: Dict[str, float]                    # est. error since last compute
-    lag: Dict[str, int]                      # cache age per type
+    acc: Any                                 # (T,) f32 est. error since compute
+    lag: Any                                 # (T,) i32 cache age per type
     decisions: Tuple[tuple, ...]             # realized per-step skip sets
     schedule: Any
     tau: float
     proxy_map: Any
     by_skipset: Dict[frozenset, plan_lib.ProgramSig]
-    pool_live: frozenset
+    pool_types: Tuple[str, ...]              # acc/lag/coeff row order
+    coeff_a: Any                             # (T,) f32 proxy-map slopes
+    coeff_b: Any                             # (T,) f32 proxy-map intercepts
     k_max: int
     label: Any = None
     memory: Any = None
@@ -191,6 +200,58 @@ class AdaptiveRunState:
     @property
     def num_steps(self) -> int:
         return self.schedule.num_steps
+
+
+@dataclasses.dataclass
+class FusedAdaptiveRunState:
+    """In-flight state of one *fused* adaptive run: everything the
+    decision rule touches — latent, previous model input, solver state,
+    branch cache, accumulator/lag arrays, and the per-step decision trace
+    — is a device array threaded through one donated
+    ``lax.fori_loop`` program, so ``advance_adaptive_fused(n_steps)``
+    executes a whole step-chunk in a single dispatch with **zero**
+    per-step host syncs.  ``decisions`` materializes the trace on the
+    host — call it after the run (or chunk), never per step."""
+    x: Any
+    x_prev: Any                              # model input of previous step
+    state: Any
+    cache: Any                               # pool-shared structure
+    acc: Any                                 # (T,) float32
+    lag: Any                                 # (T,) int32
+    trace: Any                               # (S, T) bool realized skips
+    kloop: Any
+    step: int                                # next step to execute
+    schedule: Any
+    tau: float
+    k_max: int
+    table: plan_lib.SwitchTable
+    runtime: bool                            # tau > 0: on-device rule
+    skip_table: Any                          # (S, T) bool static decisions
+    coeff_a: Any                             # (T,) float32
+    coeff_b: Any                             # (T,) float32
+    label: Any = None
+    memory: Any = None
+
+    @property
+    def done(self) -> bool:
+        return self.step >= self.schedule.num_steps
+
+    @property
+    def num_steps(self) -> int:
+        return self.schedule.num_steps
+
+    @property
+    def pool_types(self) -> Tuple[str, ...]:
+        return self.table.types
+
+    @property
+    def decisions(self) -> Tuple[tuple, ...]:
+        """Realized per-step skip sets of the executed steps (tuple of
+        sorted type tuples) — one device→host transfer of the packed
+        bool trace, *not* a per-step sync."""
+        bits = np.asarray(jax.device_get(self.trace))[:self.step]
+        return tuple(tuple(t for t, hit in zip(self.table.types, row)
+                           if hit) for row in bits)
 
 
 class SmoothCacheExecutor:
@@ -215,6 +276,18 @@ class SmoothCacheExecutor:
         self._fns: Dict = {}
         self._plans: Dict[str, plan_lib.ExecutionPlan] = {}
         self._struct_cache: Dict = {}
+        #: per-step device→host decision syncs performed by the
+        #: host-dispatched adaptive loop; the fused path never increments
+        #: it (asserted by tests and reported by benchmarks)
+        self.host_sync_count: int = 0
+
+    @property
+    def supports_fused_adaptive(self) -> bool:
+        """Whether :meth:`sample_adaptive_fused` is available: the solver
+        step must run under ``lax.fori_loop`` (traced index, structure-
+        stable state).  Non-scannable solvers (DPM++(3M)) fall back to the
+        host-dispatched :meth:`sample_adaptive` loop."""
+        return self.solver.scannable
 
     # -- instrumentation -----------------------------------------------------
 
@@ -476,6 +549,101 @@ class SmoothCacheExecutor:
         self._fns["proxy"] = fn
         return fn
 
+    def _get_decide_fn(self):
+        """One jitted evaluation of the adaptive reuse rule for the
+        host-dispatched loop: proxy reduction + ``calibration.runtime_rule``
+        — the *same* float32 arithmetic the fused program inlines into its
+        loop body, so host and fused decision sequences agree bit-for-bit.
+        Returns ``(skip_bits, acc', lag')``; only the bits are pulled to
+        the host (the per-step sync the fused path removes)."""
+        if "decide" in self._fns:
+            return self._fns["decide"]
+        from repro.core import calibration
+
+        def fn(x, x_prev, acc, lag, a, b, tau, k_max):
+            proxy = calibration.rel_l1_change(x, x_prev)
+            return calibration.runtime_rule(proxy, acc, lag, a, b, tau,
+                                            k_max)
+
+        if self._jit:
+            fn = jax.jit(fn)
+        self._fns["decide"] = fn
+        return fn
+
+    # -- fused adaptive program ---------------------------------------------
+
+    def _get_fused_fn(self, table: plan_lib.SwitchTable, runtime: bool):
+        """The whole adaptive sampling loop as ONE donated program: proxy
+        computation, ``runtime_rule`` over stacked proxy-map coefficients,
+        accumulator/lag state carried as device arrays, ``lax.switch``
+        over the pool's branch programs (every pool signature shares one
+        cache structure, so the carry is uniform by construction), the
+        solver step, and a packed bool decision trace — under a
+        ``lax.fori_loop`` with a dynamic ``[start, start+length)`` range,
+        so one compilation per (batch-shape, pool) signature serves every
+        chunk size a serving engine timeslices with.  No value ever
+        crosses to the host inside the loop.
+
+        ``runtime=False`` (τ=0) replaces the rule with a lookup into the
+        static schedule's precomputed ``skip_table`` — same program
+        structure, bit-identical to ``sample_compiled``."""
+        key = ("fused", table, runtime)
+        if key in self._fns:
+            return self._fns[key]
+        if not self.solver.scannable:
+            raise ValueError(
+                f"solver {self.solver.name!r} is not scannable; the fused "
+                "adaptive path needs the solver step inside lax.fori_loop "
+                "— use sample_adaptive (host dispatch) instead")
+        from repro.core import calibration
+        solver = self.solver
+        types = table.types
+        n_types = len(types)
+        weights = jnp.asarray([1 << i for i in range(n_types)], jnp.int32)
+
+        def fn(params, x, x_prev, state, cache, acc, lag, trace,
+               start, length, kloop, label, memory, a, b, tau, k_max,
+               skip_table):
+            def make_branch(sig):
+                def branch(bx, bt, bcache):
+                    return self._sig_step(params, bx, bt, label, memory,
+                                          bcache, skip=sig.skip,
+                                          collect=sig.collect, live=types)
+                return branch
+
+            branches = [make_branch(sig) for sig in table.branches]
+
+            def body(s, carry):
+                x, x_prev, state, cache, acc, lag, trace = carry
+                if runtime:
+                    proxy = calibration.rel_l1_change(x, x_prev)
+                    bits, acc, lag = calibration.runtime_rule(
+                        proxy, acc, lag, a, b, tau, k_max,
+                        force_compute=(s == 0))
+                else:
+                    bits = skip_table[s]
+                code = (jnp.sum(bits.astype(jnp.int32) * weights)
+                        if n_types else jnp.int32(0))
+                t = jnp.full((x.shape[0],), solver.model_times[s])
+                pred, cache = jax.lax.switch(code, branches, x, t, cache)
+                kstep = (jax.random.fold_in(kloop, s)
+                         if solver.stochastic else None)
+                x_next, state = solver.step(x, pred, s, state, kstep)
+                trace = trace.at[s].set(bits)
+                return (x_next, x, state, cache, acc, lag, trace)
+
+            return jax.lax.fori_loop(
+                start, start + length, body,
+                (x, x_prev, state, cache, acc, lag, trace))
+
+        if self._jit:
+            # donate everything the successor state replaces; kloop /
+            # label / memory / coefficients are reused across chunks
+            donate = (1, 2, 3, 4, 5, 6, 7) if self._donate else ()
+            fn = jax.jit(fn, donate_argnums=donate)
+        self._fns[key] = fn
+        return fn
+
     # -- sampling loops ------------------------------------------------------
 
     def latent_batch_shape(self, batch):
@@ -669,15 +837,11 @@ class SmoothCacheExecutor:
             return rs.x, rs.decisions
         return rs.x
 
-    def start_adaptive_run(self, params, key, batch: int, *, schedule,
-                           tau: float, proxy_map=None, pool=None,
-                           k_max: int = 3, label=None,
-                           memory=None) -> AdaptiveRunState:
-        """Begin a resumable adaptive run: validate the decision parameters,
-        derive/index the candidate pool, and enter the pool's shared cache
-        structure.  Drive it with :meth:`advance_adaptive_run` (one step per
-        call); ``start + advance-until-done`` is exactly
-        :meth:`sample_adaptive`."""
+    def _adaptive_setup(self, schedule, tau, proxy_map, pool, k_max):
+        """Shared validation + pool derivation for both adaptive paths.
+        Returns ``(schedule, tau, pool, by_skipset, pool_types,
+        coeff_a, coeff_b)`` with the proxy-map coefficients stacked into
+        the device representation (zeros when τ=0 never evaluates them)."""
         s_total = self.solver.num_steps
         if schedule is None:
             schedule = schedule_lib.no_cache(self.cfg.layer_types(), s_total)
@@ -687,6 +851,11 @@ class SmoothCacheExecutor:
         tau = float(tau)
         if tau < 0:
             raise ValueError(f"tau must be >= 0, got {tau}")
+        if int(k_max) < 1:
+            raise ValueError(
+                f"adaptive k_max must be >= 1, got {k_max} — k_max=0 "
+                "would compile the whole candidate pool yet never reuse "
+                "a cache entry (silently behaving like no_cache)")
         if tau > 0 and proxy_map is None:
             raise ValueError(
                 "sample_adaptive with tau > 0 needs a calibrated proxy_map "
@@ -696,12 +865,33 @@ class SmoothCacheExecutor:
         by_skipset = plan_lib.pool_index(pool)
         pool_live = frozenset().union(*by_skipset) if by_skipset else \
             frozenset()
-        types = self.cfg.layer_types()
+        pool_types = tuple(sorted(pool_live))
         if tau > 0:
-            missing = [t for t in pool_live if t not in proxy_map.coeffs]
-            if missing:
-                raise ValueError(f"proxy_map lacks coefficients for "
-                                 f"{missing}; recalibrate")
+            try:
+                a, b = proxy_map.stacked(pool_types)
+            except KeyError as e:
+                # keep the adaptive misconfiguration contract: every
+                # invalid-parameter path out of here is a ValueError
+                raise ValueError(f"proxy_map lacks coefficients for the "
+                                 f"candidate pool — recalibrate: {e}")
+            coeff_a, coeff_b = jnp.asarray(a), jnp.asarray(b)
+        else:
+            zeros = np.zeros((len(pool_types),), np.float32)
+            coeff_a = coeff_b = jnp.asarray(zeros)
+        return schedule, tau, pool, by_skipset, pool_types, coeff_a, coeff_b
+
+    def start_adaptive_run(self, params, key, batch: int, *, schedule,
+                           tau: float, proxy_map=None, pool=None,
+                           k_max: int = 3, label=None,
+                           memory=None) -> AdaptiveRunState:
+        """Begin a resumable host-dispatched adaptive run: validate the
+        decision parameters, derive/index the candidate pool, and enter the
+        pool's shared cache structure.  Drive it with
+        :meth:`advance_adaptive_run` (one step per call);
+        ``start + advance-until-done`` is exactly :meth:`sample_adaptive`."""
+        schedule, tau, pool, by_skipset, pool_types, coeff_a, coeff_b = \
+            self._adaptive_setup(schedule, tau, proxy_map, pool, k_max)
+        n_types = len(pool_types)
         x, kloop = self.initial_latent(key, batch)
         structs = self._branch_structs(params, x, label, memory)
         # every pool signature shares the same structure; enter once with
@@ -711,25 +901,26 @@ class SmoothCacheExecutor:
         return AdaptiveRunState(
             x=x, state=self.solver.init_state(), cache=cache, kloop=kloop,
             step=0, x_prev=None,
-            acc={t: 0.0 for t in types},     # est. error since last compute
-            lag={t: 0 for t in types},       # cache age in steps
+            acc=jnp.zeros((n_types,), jnp.float32),
+            lag=jnp.zeros((n_types,), jnp.int32),
             decisions=(), schedule=schedule, tau=tau, proxy_map=proxy_map,
-            by_skipset=by_skipset, pool_live=pool_live, k_max=k_max,
+            by_skipset=by_skipset, pool_types=pool_types,
+            coeff_a=coeff_a, coeff_b=coeff_b, k_max=int(k_max),
             label=label, memory=memory)
 
     def advance_adaptive_run(self, params,
                              rs: AdaptiveRunState) -> AdaptiveRunState:
-        """Advance an in-flight adaptive run by one step: observe the proxy,
-        decide the skip set, dispatch the matching precompiled pool program,
-        and run the solver step.  Returns the successor state; with donation
-        the input state's cache buffers are recycled — drop it."""
+        """Advance an in-flight adaptive run by one step: evaluate the
+        decision rule on device (shared with the fused path), pull the
+        skip *bits* to the host — the one per-step sync this path pays —
+        dispatch the matching precompiled pool program, and run the solver
+        step.  Returns the successor state; with donation the input
+        state's cache buffers are recycled — drop it."""
         if rs.done:
             raise ValueError("run is already complete")
         s = rs.step
         x, schedule, tau = rs.x, rs.schedule, rs.tau
-        acc, lag = dict(rs.acc), dict(rs.lag)
-        types = self.cfg.layer_types()
-        delta: Dict[str, float] = {}
+        acc, lag = rs.acc, rs.lag
         if s == 0:
             skipset = frozenset()           # cache is empty: compute all
         elif tau == 0.0:
@@ -738,26 +929,19 @@ class SmoothCacheExecutor:
             skipset = frozenset(t for t, sk in schedule.mask_key_at(s)
                                 if sk)
         else:
-            proxy = float(self._get_proxy_fn()(x, rs.x_prev))
-            chosen = set()
-            for t in sorted(rs.pool_live):
-                delta[t] = rs.proxy_map.est(t, proxy)
-                if lag[t] + 1 <= rs.k_max and acc[t] + delta[t] < tau:
-                    chosen.add(t)
-            skipset = frozenset(chosen)
+            bits_dev, acc, lag = self._get_decide_fn()(
+                x, rs.x_prev, rs.acc, rs.lag, rs.coeff_a, rs.coeff_b,
+                tau, rs.k_max)
+            bits = np.asarray(jax.device_get(bits_dev))
+            self.host_sync_count += 1       # the per-step device→host sync
+            skipset = frozenset(t for t, hit in zip(rs.pool_types, bits)
+                                if hit)
         sig = rs.by_skipset.get(skipset)
         if sig is None:
             raise ValueError(
                 f"static schedule mask at step {s} skips "
                 f"{sorted(skipset)}, absent from the candidate pool — "
                 "derive the pool from this schedule via mask_lattice()")
-        for t in types:
-            if t in skipset:
-                acc[t] += delta.get(t, 0.0)
-                lag[t] += 1
-            else:
-                acc[t] = 0.0
-                lag[t] = 0
         t_arr = jnp.full((x.shape[0],), self.solver.model_times[s])
         fn = self._get_sig_model_fn(sig)
         pred, cache = fn(params, x, t_arr, rs.label, rs.memory, rs.cache)
@@ -767,6 +951,114 @@ class SmoothCacheExecutor:
             rs, x=x_next, state=state, cache=cache, step=s + 1, x_prev=x,
             acc=acc, lag=lag,
             decisions=rs.decisions + (tuple(sorted(skipset)),))
+
+    # -- fused adaptive sampling (decision + dispatch on device) -------------
+
+    def sample_adaptive_fused(self, params, key, batch: int, *, schedule,
+                              tau: float, proxy_map=None, pool=None,
+                              k_max: int = 3, label=None, memory=None,
+                              return_decisions: bool = False):
+        """Input-adaptive sampler fused into a single donated program:
+        the entire loop — proxy computation, ``runtime_rule`` over the
+        proxy map's stacked coefficients, accumulator/lag carry, and
+        ``lax.switch`` dispatch over the pool's branch programs — runs on
+        device, with **zero** per-step host syncs and exactly one
+        compiled program per (batch-shape, pool) signature (vs pool-size
+        programs × per-step dispatches on :meth:`sample_adaptive`).
+
+        Decision sequences are bit-identical to :meth:`sample_adaptive`
+        (both evaluate :func:`~repro.core.calibration.runtime_rule` in
+        float32 on device), and at ``tau=0`` the whole run is
+        bit-identical to :meth:`sample_compiled` on the same schedule.
+        Requires a scannable solver — see :attr:`supports_fused_adaptive`.
+
+        ``return_decisions=True`` additionally returns the realized
+        per-step skip sets, materialized from the device-side decision
+        trace after the run (one transfer, not per step)."""
+        rs = self.start_adaptive_fused_run(
+            params, key, batch, schedule=schedule, tau=tau,
+            proxy_map=proxy_map, pool=pool, k_max=k_max, label=label,
+            memory=memory)
+        rs = self.advance_adaptive_fused(params, rs)
+        if return_decisions:
+            return rs.x, rs.decisions
+        return rs.x
+
+    def start_adaptive_fused_run(self, params, key, batch: int, *,
+                                 schedule, tau: float, proxy_map=None,
+                                 pool=None, k_max: int = 3, label=None,
+                                 memory=None) -> FusedAdaptiveRunState:
+        """Begin a resumable fused adaptive run.  Drive it with
+        :meth:`advance_adaptive_fused` — a serving engine timeslices with
+        ``n_steps`` chunks, each a single program dispatch."""
+        if not self.supports_fused_adaptive:
+            raise ValueError(
+                f"solver {self.solver.name!r} is not scannable; the fused "
+                "adaptive path needs the solver step inside lax.fori_loop "
+                "— use sample_adaptive (host dispatch) instead")
+        schedule, tau, pool, by_skipset, pool_types, coeff_a, coeff_b = \
+            self._adaptive_setup(schedule, tau, proxy_map, pool, k_max)
+        table = plan_lib.switch_branch_table(pool)
+        s_total = schedule.num_steps
+        n_types = len(table.types)
+        runtime = tau > 0
+        if runtime:
+            # the rule only ever selects subsets of the pool types; the
+            # static table is never read — pass a shape-stable dummy
+            skip_table = jnp.zeros((1, n_types), jnp.bool_)
+        else:
+            cols = [np.asarray(schedule.skip[t], bool) for t in table.types]
+            skip_table = (np.stack(cols, axis=1) if cols
+                          else np.zeros((s_total, 0), bool))
+            for s in range(s_total):
+                skipset = frozenset(t for t, sk in schedule.mask_key_at(s)
+                                    if sk)
+                if skipset not in by_skipset:
+                    raise ValueError(
+                        f"static schedule mask at step {s} skips "
+                        f"{sorted(skipset)}, absent from the candidate "
+                        "pool — derive the pool from this schedule via "
+                        "mask_lattice()")
+            skip_table = jnp.asarray(skip_table)
+        x, kloop = self.initial_latent(key, batch)
+        structs = self._branch_structs(params, x, label, memory)
+        cache = self._enter_run_cache(empty_branch_cache(self.cfg),
+                                      table.branches[0], structs)
+        return FusedAdaptiveRunState(
+            x=x, x_prev=jnp.zeros_like(x), state=self.solver.init_state(),
+            cache=cache,
+            acc=jnp.zeros((n_types,), jnp.float32),
+            lag=jnp.zeros((n_types,), jnp.int32),
+            trace=jnp.zeros((s_total, n_types), jnp.bool_),
+            kloop=kloop, step=0, schedule=schedule, tau=tau,
+            k_max=int(k_max), table=table, runtime=runtime,
+            skip_table=skip_table, coeff_a=coeff_a, coeff_b=coeff_b,
+            label=label, memory=memory)
+
+    def advance_adaptive_fused(self, params, rs: FusedAdaptiveRunState,
+                               n_steps: Optional[int] = None
+                               ) -> FusedAdaptiveRunState:
+        """Advance an in-flight fused run by ``n_steps`` sampling steps
+        (default: all remaining) in ONE program dispatch — the dynamic
+        ``(start, length)`` trip count means chunk size never triggers a
+        recompile, so a serving engine can timeslice adaptive runs
+        without per-step host round-trips.  Returns the successor state;
+        with donation the input state's buffers are recycled — drop it."""
+        if rs.done:
+            raise ValueError("run is already complete")
+        remaining = rs.num_steps - rs.step
+        length = remaining if n_steps is None else min(int(n_steps),
+                                                       remaining)
+        if length < 1:
+            raise ValueError(f"n_steps must be >= 1, got {n_steps}")
+        fn = self._get_fused_fn(rs.table, rs.runtime)
+        x, x_prev, state, cache, acc, lag, trace = fn(
+            params, rs.x, rs.x_prev, rs.state, rs.cache, rs.acc, rs.lag,
+            rs.trace, rs.step, length, rs.kloop, rs.label, rs.memory,
+            rs.coeff_a, rs.coeff_b, rs.tau, rs.k_max, rs.skip_table)
+        return dataclasses.replace(
+            rs, x=x, x_prev=x_prev, state=state, cache=cache, acc=acc,
+            lag=lag, trace=trace, step=rs.step + length)
 
     # -- whole-sampler lowering (for FLOP / roofline accounting) ------------
 

@@ -3,8 +3,13 @@
 The engine drains a :class:`~repro.serve.request.RequestQueue` through the
 executor's **resumable stepping API** (``start_run`` / ``advance_run`` for
 static plans — one :class:`~repro.core.plan.ExecutionPlan` segment per
-advance — and ``start_adaptive_run`` / ``advance_adaptive_run`` for
-adaptive entries, a step-chunk per advance).  Several in-flight
+advance — and, for adaptive entries, ``start_adaptive_fused_run`` /
+``advance_adaptive_fused`` when the executor supports the fused path: a
+whole ``adaptive_chunk`` of steps in ONE donated program dispatch, with
+the reuse decisions made on device, so timeslicing adaptive runs costs
+zero per-step host round-trips.  Non-scannable solvers fall back to the
+host-dispatched ``start_adaptive_run`` / ``advance_adaptive_run`` loop —
+one decision sync + program dispatch per step).  Several in-flight
 micro-batches timeslice the device: under the default ``interleave``
 scheduler each tick advances the head of a round-robin rotation, so a
 short, heavily-cached schedule admitted behind a full-compute one
@@ -162,12 +167,18 @@ class ServeEngine:
                                  for lab in mb.labels], jnp.int32)
         if self.eager:
             kind, rs = "eager", _EagerState()
+        elif entry.adaptive and self._fused_adaptive:
+            kind = "adaptive_fused"
+            rs = self.executor.start_adaptive_fused_run(
+                self.params, key, mb.bucket, schedule=entry.schedule,
+                tau=entry.tau, proxy_map=entry.proxy_map,
+                pool=entry.pool(), k_max=entry.k_max, label=label)
         elif entry.adaptive:
             kind = "adaptive"
             rs = self.executor.start_adaptive_run(
                 self.params, key, mb.bucket, schedule=entry.schedule,
-                tau=entry.tau, proxy_map=entry.proxy_map, pool=None,
-                k_max=entry.k_max, label=label)
+                tau=entry.tau, proxy_map=entry.proxy_map,
+                pool=entry.pool(), k_max=entry.k_max, label=label)
         else:
             kind = "plan"
             rs = self.executor.start_run(
@@ -178,11 +189,25 @@ class ServeEngine:
         self._inflight.append(_Inflight(mb=mb, kind=kind, rs=rs,
                                         label=label))
 
+    @property
+    def _fused_adaptive(self) -> bool:
+        """Serve adaptive entries through the fused on-device path when
+        the executor offers it (scannable solver): one program per entry
+        instead of pool-size × steps of dispatches, zero per-step
+        decision syncs."""
+        return bool(getattr(self.executor, "supports_fused_adaptive",
+                            False))
+
     def _advance(self, fl: _Inflight) -> None:
         entry = fl.mb.entry
         if fl.kind == "plan":
             fl.rs = self.executor.advance_run(self.params, fl.rs,
                                               check=self.check)
+        elif fl.kind == "adaptive_fused":
+            # the whole chunk is one program dispatch — the timeslice
+            # granularity costs no extra host round-trips
+            fl.rs = self.executor.advance_adaptive_fused(
+                self.params, fl.rs, n_steps=self.adaptive_chunk)
         elif fl.kind == "adaptive":
             for _ in range(self.adaptive_chunk):
                 if fl.rs.done:
@@ -273,24 +298,24 @@ class ServeEngine:
     def program_budget(self) -> int:
         """Static upper bound on shape-specialized model programs this
         deployment may compile: |admissible buckets| × Σ per-entry
-        signature-pool size (the mask lattice for adaptive entries, the
-        plan's unique signatures otherwise).  Independent of the traffic
-        actually served — no request mix can push compiles past it; entries
-        sharing signatures only tighten it."""
+        program cost.  A **fused** adaptive servable costs 1 program per
+        bucket (the whole candidate pool rides inside one ``lax.switch``
+        program); a host-dispatched adaptive entry costs its pool size
+        (2^|ever-skipped| per-signature programs); a static entry costs
+        its plan's unique signatures.  Independent of the traffic
+        actually served — no request mix can push compiles past it;
+        entries sharing signatures only tighten it."""
         buckets = len(bucket_sizes(self.batcher.max_batch))
         pool = 0
         for name in self.store.names():
             entry = self.store.get(name)
-            if entry.adaptive:
-                ever = [t for t, v in entry.schedule.skip.items() if v.any()]
-                pool += 2 ** len(ever)
-            else:
-                pool += entry.plan.num_unique_signatures
+            pool += entry.program_cost(fused=self._fused_adaptive)
         return buckets * pool
 
     #: executor table kinds holding *model* programs (the budgeted set;
-    #: the per-shape solver-step/proxy helper jits are not signature-bound)
-    MODEL_PROGRAM_KINDS = ("seg", "sigstep", "eager")
+    #: the per-shape solver-step/proxy/decide helper jits are not
+    #: signature-bound)
+    MODEL_PROGRAM_KINDS = ("seg", "sigstep", "eager", "fused")
 
     def report(self) -> Dict:
         compiles = {

@@ -48,10 +48,42 @@ class ServableEntry:
     #: to the artifact's stored policy (e.g. flip a static-base entry
     #: back to adaptive serving)
     policy_override: Optional[CachePolicy] = None
+    #: memoized candidate pool (adaptive entries) — derived once per
+    #: entry, not per launched batch
+    _pool: Optional[tuple] = dataclasses.field(default=None, repr=False)
 
     @property
     def adaptive(self) -> bool:
         return isinstance(self.policy, AdaptivePolicy)
+
+    def pool(self) -> tuple:
+        """Precompiled candidate signature pool of an adaptive entry (the
+        schedule's mask lattice — already validated against the artifact's
+        stored pool provenance by ``validate_for``), memoized so the
+        engine derives it once per entry rather than once per batch."""
+        if not self.adaptive:
+            raise ValueError(f"entry {self.name!r} is not adaptive")
+        if self._pool is None:
+            self._pool = plan_lib.mask_lattice(self.schedule)
+        return self._pool
+
+    def pool_size(self) -> int:
+        """Candidate-pool cardinality (2^|ever-skipped| for adaptive
+        entries, the plan's unique signatures otherwise) — the per-entry
+        factor in the host-dispatch program budget."""
+        if self.adaptive:
+            return len(self.pool())
+        return self.plan.num_unique_signatures
+
+    def program_cost(self, fused: bool) -> int:
+        """Shape-specialized model programs this entry can compile per
+        batch bucket: a fused adaptive servable compiles ONE program (the
+        whole pool's branches live inside a single ``lax.switch``
+        program) vs ``pool_size()`` per-signature programs under host
+        dispatch; static entries compile one per plan signature."""
+        if self.adaptive and fused:
+            return 1
+        return self.pool_size()
 
     @property
     def tau(self) -> float:

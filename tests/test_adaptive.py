@@ -63,6 +63,41 @@ def test_mask_lattice_size_guard():
 
 
 # ---------------------------------------------------------------------------
+# Switch-branch table (pure)
+# ---------------------------------------------------------------------------
+
+def test_switch_branch_table_codes_map_to_skip_sets():
+    sch = _sched([[0, 1, 1, 0, 1], [0, 0, 1, 0, 0]])
+    table = plan_lib.switch_branch_table(plan_lib.mask_lattice(sch))
+    assert table.types == ("attn", "ffn")
+    assert len(table.branches) == 4
+    # branches[code] skips exactly {types[i] : bit i of code}
+    for code, sig in enumerate(table.branches):
+        expect = {t for i, t in enumerate(table.types) if code >> i & 1}
+        assert set(sig.live_in) == expect
+        assert table.code_of(expect) == code
+    # all branches share one cache structure — the lax.switch carry is
+    # uniform by construction
+    assert {sig.structure for sig in table.branches} == {("attn", "ffn")}
+    with pytest.raises(KeyError, match="outside the pool"):
+        table.code_of({"mlp"})
+
+
+def test_switch_branch_table_rejects_partial_pool():
+    sch = _sched([[0, 1, 1, 0, 1], [0, 0, 1, 0, 0]])
+    pool = plan_lib.mask_lattice(sch)
+    with pytest.raises(ValueError, match="full mask lattice"):
+        plan_lib.switch_branch_table(pool[:-1])   # drop {attn, ffn}
+
+
+def test_switch_branch_table_empty_pool_single_branch():
+    table = plan_lib.switch_branch_table(
+        plan_lib.mask_lattice(_sched([[0, 0], [0, 0]])))
+    assert table.types == () and len(table.branches) == 1
+    assert table.code_of(set()) == 0
+
+
+# ---------------------------------------------------------------------------
 # Proxy map (pure)
 # ---------------------------------------------------------------------------
 
@@ -111,6 +146,59 @@ def test_proxies_from_inputs_alignment():
     assert p[1] > 0
 
 
+def test_proxy_map_est_clamped_under_adversarial_fit():
+    """Regression: a least-squares fit on decreasing error-vs-proxy data
+    yields a negative slope AND a negative intercept is possible — the
+    per-type estimate must clamp at zero or the accumulator would
+    *decrease* while skipping and postpone recompute indefinitely."""
+    s_total = 20
+    proxies = np.full(s_total, np.nan)
+    proxies[1:] = np.linspace(0.1, 0.9, s_total - 1)
+    err = np.full((s_total, 2), np.nan)
+    err[:, 0] = 0.0
+    err[1:, 1] = 0.2 - 0.3 * proxies[1:]         # decreasing error signal
+    pm = calibration.fit_proxy_map({"attn": err}, proxies)
+    a, b = pm.coeffs["attn"]
+    assert a < 0                                 # adversarial slope
+    assert pm.est("attn", 0.9) == 0.0            # raw a·p+b < 0 → clamped
+    for p in np.linspace(0.0, 5.0, 50):
+        assert pm.est("attn", p) >= 0.0
+    # the stacked device representation evaluates the same clamped rule
+    ca, cb = pm.stacked(("attn",))
+    est_dev = jnp.maximum(ca * jnp.float32(0.9) + cb, 0.0)
+    assert float(est_dev[0]) == 0.0
+
+
+def test_runtime_rule_accumulator_never_decreases_while_skipping():
+    """The device rule shares the clamp: with adversarial (negative)
+    coefficients the estimated delta is 0 — the accumulator stays flat
+    while skipping (never decreases) and k_max still forces recompute."""
+    a = jnp.asarray([-2.0], jnp.float32)         # est would be negative
+    b = jnp.asarray([-0.1], jnp.float32)
+    acc = jnp.asarray([0.05], jnp.float32)
+    lag = jnp.asarray([0], jnp.int32)
+    k_max, tau = 2, 0.5
+    for step in range(1, 6):
+        skip, acc2, lag2 = calibration.runtime_rule(
+            jnp.float32(0.3), acc, lag, a, b, tau, k_max)
+        if bool(skip[0]):
+            assert float(acc2[0]) >= float(acc[0])   # clamp: never down
+        acc, lag = acc2, lag2
+        assert int(lag[0]) <= k_max                  # age cap still bites
+    # with the cap at 2, a 5-step window must have recomputed at least once
+    assert int(lag[0]) < 5
+
+
+def test_proxy_map_stacked_device_representation():
+    pm = calibration.ProxyMap({"attn": (0.5, 0.01), "ffn": (-0.2, 0.3)})
+    a, b = pm.stacked(("attn", "ffn"))
+    assert a.dtype == np.float32 and b.dtype == np.float32
+    np.testing.assert_allclose(a, [0.5, -0.2], rtol=1e-6)
+    np.testing.assert_allclose(b, [0.01, 0.3], rtol=1e-6)
+    with pytest.raises(KeyError, match="mlp"):
+        pm.stacked(("attn", "mlp"))
+
+
 # ---------------------------------------------------------------------------
 # Policy / registry specs
 # ---------------------------------------------------------------------------
@@ -134,6 +222,40 @@ def test_adaptive_policy_validation():
         cache.AdaptivePolicy(base=cache.AdaptivePolicy())
     with pytest.raises(ValueError, match="tau"):
         cache.AdaptivePolicy(tau=-0.1)
+
+
+def test_adaptive_k_max_validated_everywhere():
+    """k_max=0 compiles the whole candidate pool yet silently never
+    reuses a cache entry (≡ no_cache at pool-size compile cost), and
+    negative values are nonsense — every entry point must reject them
+    with a clear message."""
+    # policy constructor
+    with pytest.raises(ValueError, match="k_max must be >= 1"):
+        cache.AdaptivePolicy(base="static:n=2", k_max=0)
+    with pytest.raises(ValueError, match="k_max must be >= 1"):
+        cache.AdaptivePolicy(base="static:n=2", k_max=-3)
+    # registry spec parse path (flat grammar)
+    with pytest.raises(ValueError, match="k_max must be >= 1"):
+        cache.get("adaptive:base=static(n=2),k_max=0")
+    # a base whose own k_max is 0 (none never caches) is equally useless
+    with pytest.raises(ValueError, match="k_max must be >= 1"):
+        cache.get("adaptive:base=none")
+    # an explicit valid override round-trips through spec and config
+    p = cache.get("adaptive:base=static(n=2),tau=0.1,k_max=5")
+    assert p.k_max == 5
+    assert cache.get(p.spec()) == p
+    assert cache.from_config(p.to_config()) == p
+
+
+def test_executor_adaptive_k_max_validated(small_dit):
+    cfg, params = small_dit
+    sch = S.fora(cfg.layer_types(), 6, 2)
+    for start in ("start_adaptive_run", "start_adaptive_fused_run"):
+        ex = SmoothCacheExecutor(cfg, solvers.ddim(6), cfg_scale=1.5)
+        with pytest.raises(ValueError, match="k_max must be >= 1"):
+            getattr(ex, start)(params, jax.random.PRNGKey(0), 1,
+                               schedule=sch, tau=0.0, k_max=0,
+                               label=jnp.zeros((1,), jnp.int32))
 
 
 def test_adaptive_build_is_base_schedule():
@@ -213,6 +335,17 @@ def test_adaptive_compile_count_bounded_by_pool(small_dit):
                                label=lab, return_decisions=True)
         assert len(dec) == 8 and dec[0] == ()     # step 0 computes all
         assert bool(jnp.all(jnp.isfinite(x)))
+    # generate() routes through the fused path (ddim is scannable): the
+    # whole pool rides inside ONE lax.switch program — no per-signature
+    # "sigstep" dispatch programs at all
+    assert pipe.executor.compiled_variant_count("fused") == 1
+    assert pipe.executor.compiled_variant_count("sigstep") == 0
+    # the host-dispatched loop stays bounded by the pool
+    x_host, dec_host = pipe.executor.sample_adaptive(
+        params, jax.random.PRNGKey(2), 2, schedule=pipe.schedule, tau=0.3,
+        proxy_map=pipe.proxy_map,
+        label=jnp.full((2,), 2 % cfg.num_classes, jnp.int32),
+        return_decisions=True)
     assert 0 < pipe.executor.compiled_variant_count("sigstep") <= len(pool)
 
 
@@ -241,6 +374,14 @@ def test_adaptive_tau_without_proxy_map_raises(small_dit):
     with pytest.raises(ValueError, match="proxy_map"):
         ex.sample_adaptive(params, jax.random.PRNGKey(0), 1, schedule=sch,
                            tau=0.1, label=jnp.zeros((1,), jnp.int32))
+    # a map missing pool-type coefficients is the same misconfiguration
+    # class: ValueError (not a KeyError escaping from stacked())
+    partial = calibration.ProxyMap({"attn": (0.1, 0.0)})
+    for start in ("start_adaptive_run", "start_adaptive_fused_run"):
+        with pytest.raises(ValueError, match="lacks coefficients"):
+            getattr(ex, start)(params, jax.random.PRNGKey(0), 1,
+                               schedule=sch, tau=0.1, proxy_map=partial,
+                               label=jnp.zeros((1,), jnp.int32))
 
 
 def test_adaptive_artifact_roundtrip(small_dit, tmp_path):
@@ -301,6 +442,152 @@ def test_adaptive_explicit_schedule_override_is_static(small_dit):
     with pytest.raises(ValueError, match="return_decisions"):
         pipe.generate(params, jax.random.PRNGKey(2), 2, label=label,
                       schedule=sch, return_decisions=True)
+
+
+# ---------------------------------------------------------------------------
+# Fused adaptive sampling (decision + dispatch on device)
+# ---------------------------------------------------------------------------
+
+def test_fused_matches_host_loop_on_heterogeneous_inputs(small_dit):
+    """Fused and host-dispatched adaptive runs share one decision rule
+    (`calibration.runtime_rule`, float32, on device): identical per-step
+    decision sequences and allclose latents across heterogeneous
+    seeds/labels at tau > 0."""
+    cfg, params = small_dit
+    pipe, _ = _calibrated_adaptive(cfg, params, tau=0.3)
+    ex = pipe.executor
+    for seed in (2, 5, 11):
+        lab = jnp.full((2,), seed % cfg.num_classes, jnp.int32)
+        key = jax.random.PRNGKey(seed)
+        x_host, d_host = ex.sample_adaptive(
+            params, key, 2, schedule=pipe.schedule, tau=0.3,
+            proxy_map=pipe.proxy_map, label=lab, return_decisions=True)
+        x_fused, d_fused = ex.sample_adaptive_fused(
+            params, key, 2, schedule=pipe.schedule, tau=0.3,
+            proxy_map=pipe.proxy_map, label=lab, return_decisions=True)
+        assert d_fused == d_host
+        assert any(d for d in d_fused)            # the rule actually skips
+        np.testing.assert_allclose(np.asarray(x_fused), np.asarray(x_host),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_fused_tau0_bitwise_equals_sample_compiled(small_dit):
+    """Acceptance: at tau=0 the fused program replays the static schedule
+    bit-identically to the segmented sample_compiled path."""
+    cfg, params = small_dit
+    pipe, label = _calibrated_adaptive(cfg, params, tau=0)
+    assert any(v.any() for v in pipe.schedule.skip.values())
+    ex = SmoothCacheExecutor(cfg, solvers.ddim(8), cfg_scale=1.5)
+    x_fused, dec = ex.sample_adaptive_fused(
+        params, jax.random.PRNGKey(2), 2, schedule=pipe.schedule, tau=0.0,
+        label=label, return_decisions=True)
+    ex2 = SmoothCacheExecutor(cfg, solvers.ddim(8), cfg_scale=1.5)
+    x_static = ex2.sample_compiled(params, jax.random.PRNGKey(2), 2,
+                                   schedule=pipe.schedule, label=label)
+    np.testing.assert_array_equal(np.asarray(x_fused), np.asarray(x_static))
+    # and the decision trace is the schedule verbatim
+    expect = tuple(tuple(sorted(t for t, sk in pipe.schedule.mask_key_at(s)
+                                if sk)) for s in range(8))
+    assert dec == expect
+
+
+def test_fused_zero_per_step_host_syncs(small_dit, monkeypatch):
+    """Acceptance: the fused loop performs no device→host sync per step —
+    no device_get/float() between start and done (the decision trace is
+    read back once, after the run)."""
+    cfg, params = small_dit
+    pipe, label = _calibrated_adaptive(cfg, params, tau=0.3)
+    ex = pipe.executor
+    # warm the program so compilation noise is out of the picture
+    ex.sample_adaptive_fused(params, jax.random.PRNGKey(3), 2,
+                             schedule=pipe.schedule, tau=0.3,
+                             proxy_map=pipe.proxy_map, label=label)
+    ex.host_sync_count = 0
+    d2h = {"n": 0}
+    real_device_get = jax.device_get
+
+    def counting_device_get(x):
+        d2h["n"] += 1
+        return real_device_get(x)
+
+    monkeypatch.setattr(jax, "device_get", counting_device_get)
+    # transfer_guard is a no-op on CPU (zero-copy) but trips on real
+    # accelerators — belt and braces with the device_get counter
+    with jax.transfer_guard_device_to_host("disallow"):
+        rs = ex.start_adaptive_fused_run(
+            params, jax.random.PRNGKey(4), 2, schedule=pipe.schedule,
+            tau=0.3, proxy_map=pipe.proxy_map, label=label)
+        while not rs.done:
+            rs = ex.advance_adaptive_fused(params, rs, n_steps=3)
+    assert d2h["n"] == 0                      # zero per-step syncs
+    assert ex.host_sync_count == 0
+    # the decision readback is ONE transfer, outside the loop
+    dec = rs.decisions
+    assert len(dec) == 8 and d2h["n"] == 1
+    # the host loop, by contrast, syncs the decision bits every step
+    monkeypatch.undo()
+    ex.host_sync_count = 0
+    ex.sample_adaptive(params, jax.random.PRNGKey(4), 2,
+                       schedule=pipe.schedule, tau=0.3,
+                       proxy_map=pipe.proxy_map, label=label)
+    assert ex.host_sync_count == 8 - 1        # every step but the first
+
+
+def test_fused_chunked_advance_bitwise_matches_one_shot(small_dit):
+    """advance_adaptive_fused(n_steps) timeslices through the SAME
+    program (dynamic start/length): any chunking produces bit-identical
+    latents, identical decisions, and compiles exactly one program."""
+    cfg, params = small_dit
+    pipe, label = _calibrated_adaptive(cfg, params, tau=0.3)
+    ex = pipe.executor
+    key = jax.random.PRNGKey(6)
+    x_one, d_one = ex.sample_adaptive_fused(
+        params, key, 2, schedule=pipe.schedule, tau=0.3,
+        proxy_map=pipe.proxy_map, label=label, return_decisions=True)
+    n_fused = ex.compiled_variant_count("fused")
+    for chunk in (1, 3, 5):
+        rs = ex.start_adaptive_fused_run(
+            params, key, 2, schedule=pipe.schedule, tau=0.3,
+            proxy_map=pipe.proxy_map, label=label)
+        while not rs.done:
+            rs = ex.advance_adaptive_fused(params, rs, n_steps=chunk)
+        np.testing.assert_array_equal(np.asarray(rs.x), np.asarray(x_one))
+        assert rs.decisions == d_one
+    # chunk size is a dynamic trip count, never a new program
+    assert ex.compiled_variant_count("fused") == n_fused == 1
+
+
+def test_fused_requires_scannable_solver(small_dit):
+    cfg, params = small_dit
+    ex = SmoothCacheExecutor(cfg, solvers.dpmpp_3m_sde(6), cfg_scale=1.5)
+    assert not ex.supports_fused_adaptive
+    sch = S.fora(cfg.layer_types(), 6, 2)
+    with pytest.raises(ValueError, match="not scannable"):
+        ex.start_adaptive_fused_run(params, jax.random.PRNGKey(0), 1,
+                                    schedule=sch, tau=0.0,
+                                    label=jnp.zeros((1,), jnp.int32))
+
+
+def test_generate_falls_back_to_host_loop_when_not_scannable(small_dit,
+                                                             monkeypatch):
+    """Pipelines route adaptive generate() through the fused path only
+    when the executor supports it; otherwise the host-dispatched loop
+    serves (same decisions, per-step dispatch)."""
+    cfg, params = small_dit
+    pipe, label = _calibrated_adaptive(cfg, params, tau=0.3)
+    monkeypatch.setattr(SmoothCacheExecutor, "supports_fused_adaptive",
+                        property(lambda self: False))
+    called = {}
+    orig = SmoothCacheExecutor.sample_adaptive
+
+    def spy(self, *a, **kw):
+        called["host"] = True
+        return orig(self, *a, **kw)
+
+    monkeypatch.setattr(SmoothCacheExecutor, "sample_adaptive", spy)
+    x = pipe.generate(params, jax.random.PRNGKey(2), 2, label=label)
+    assert called.get("host")
+    assert bool(jnp.all(jnp.isfinite(x)))
 
 
 # ---------------------------------------------------------------------------

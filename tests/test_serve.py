@@ -306,6 +306,98 @@ def test_adaptive_entries_route_through_adaptive_runs():
         1.0 - skipped / (8 * 2))
 
 
+# ---------------------------------------------------------------------------
+# Fused adaptive servables
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FakeFusedState:
+    schedule: object
+    batch: int
+    step: int = 0
+    x: object = None
+    chunks: int = 0                          # program dispatches so far
+
+    @property
+    def done(self):
+        return self.step >= self.schedule.num_steps
+
+    @property
+    def decisions(self):
+        return tuple(
+            tuple(sorted(t for t, v in self.schedule.skip.items()
+                         if v[s]))
+            for s in range(self.step))
+
+
+class FakeFusedExecutor(FakeExecutor):
+    """Fused-capable fake: one "fused" program per entry pool regardless
+    of chunking, a whole n_steps chunk per advance."""
+
+    supports_fused_adaptive = True
+    fused_advances = 0
+
+    def start_adaptive_fused_run(self, params, key, batch, *, schedule,
+                                 tau, proxy_map=None, pool=None, k_max=3,
+                                 label=None, memory=None):
+        self._programs.add(("fused", tuple(sorted(
+            tuple(s.live_in) for s in pool)), batch))
+        return FakeFusedState(schedule=schedule, batch=batch)
+
+    def advance_adaptive_fused(self, params, rs, n_steps=None):
+        self.fused_advances += 1
+        remaining = rs.schedule.num_steps - rs.step
+        length = remaining if n_steps is None else min(n_steps, remaining)
+        for s in range(rs.step, rs.step + length):
+            self._charge({t: bool(v[s])
+                          for t, v in rs.schedule.skip.items()}, 1)
+        rs = dataclasses.replace(rs, step=rs.step + length,
+                                 chunks=rs.chunks + 1)
+        if rs.done:
+            rs.x = np.arange(rs.batch, dtype=np.float64)[:, None]
+        return rs
+
+
+def test_fused_adaptive_servables_route_and_count_one_program():
+    store = make_store(8, static2="static:n=2")
+    store.add_artifact("adaptive", _adaptive_artifact(num_steps=8))
+    clock = serve.VirtualClock()
+    ex = FakeFusedExecutor(clock)
+    eng = serve.ServeEngine(ex, params=None, store=store, clock=clock,
+                            max_batch=2, adaptive_chunk=3)
+    eng.submit(req(0, "adaptive"), req(1, "adaptive"), req(2, "static2"))
+    eng.run_until_drained()
+    rec = {r.group: r for r in eng.records}
+    # decisions survive through the fused trace; the run advanced in
+    # ceil(8/3) = 3 chunk dispatches, not 8 per-step ones
+    assert len(rec["adaptive"].decisions) == 8
+    assert ex.fused_advances == 3
+    # exactly ONE fused program for the entry's whole pool; no per-
+    # signature "sigstep" dispatch programs
+    assert ex.compiled_variant_count("fused") == 1
+    assert ex.compiled_variant_count("sigstep") == 0
+
+
+def test_program_budget_counts_fused_adaptive_as_one():
+    store = make_store(8, static2="static:n=2")
+    store.add_artifact("adaptive", _adaptive_artifact(num_steps=8))
+    clock = serve.VirtualClock()
+    static_sigs = store.get("static2").plan.num_unique_signatures
+    ever = [t for t, v in store.get("adaptive").schedule.skip.items()
+            if v.any()]
+    buckets = len(bucket_sizes(4))
+    # host-dispatched executor: the adaptive entry costs its whole pool
+    eng_host = serve.ServeEngine(FakeExecutor(clock), params=None,
+                                 store=store, clock=clock, max_batch=4)
+    assert eng_host.program_budget() == buckets * (static_sigs
+                                                   + 2 ** len(ever))
+    # fused executor: the adaptive entry costs ONE program per bucket
+    eng_fused = serve.ServeEngine(FakeFusedExecutor(clock), params=None,
+                                  store=store, clock=clock, max_batch=4)
+    assert eng_fused.program_budget() == buckets * (static_sigs + 1)
+    assert eng_fused.program_budget() < eng_host.program_budget()
+
+
 def test_eager_escape_hatch():
     eng, _ = make_engine(max_batch=2, eager=True)
     eng.submit(req(0, "static2"), req(1, "static2"))
@@ -593,6 +685,13 @@ def test_served_latents_bit_identical_to_generate(small_dit, tmp_path):
     # compile budget: ≤ |buckets used| × signature pool size
     rep = eng.report()
     assert rep["compiles"]["xla_programs"] <= rep["program_budget"]
+
+    # adaptive batches were served through the fused on-device path:
+    # one switch program, no per-signature dispatch programs, zero
+    # per-step decision syncs
+    assert ex.compiled_variant_count("fused") >= 1
+    assert ex.compiled_variant_count("sigstep") == 0
+    assert ex.host_sync_count == 0
 
     # replay every micro-batch through the pipeline facade
     static_pipe = cache.DiffusionPipeline(cfg, solvers.ddim(steps),
