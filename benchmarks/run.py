@@ -18,6 +18,7 @@ MODULES = [
     ("executor", "benchmarks.executor_bench"),
     ("adaptive", "benchmarks.adaptive_bench"),
     ("serve", "benchmarks.serve_bench"),
+    ("slo", "benchmarks.slo_bench"),
     ("table2", "benchmarks.table2_video"),
     ("table3", "benchmarks.table3_audio"),
     ("kernels", "benchmarks.kernel_bench"),

@@ -213,6 +213,32 @@ class CacheArtifact:
             rows.append(self.schedule.summary())
         return "\n".join(rows)
 
+    def at_tau(self, tau: float) -> "CacheArtifact":
+        """Copy of an adaptive artifact re-targeted at another τ rung.
+
+        Everything that costs compilation or calibration is *shared* —
+        curves, schedule, plan, proxy→error map, candidate pool — and only
+        the runtime threshold changes (in both the stored policy config
+        and the adaptive payload, so ``validate_for`` stays consistent).
+        This is the τ-ladder seam: the fused adaptive program takes τ as a
+        traced scalar argument, so every rung built this way serves from
+        the same compiled programs."""
+        if not self.adaptive:
+            raise ValueError("at_tau needs an artifact with an adaptive "
+                             "payload (calibrated under an adaptive "
+                             "policy)")
+        tau = float(tau)
+        if tau < 0:
+            raise ValueError(f"tau must be >= 0, got {tau}")
+        pol = dict(self.policy)
+        if pol.get("name") not in ("adaptive", "teacache"):
+            raise ValueError(
+                f"at_tau needs an adaptive stored policy, artifact has "
+                f"{pol.get('name')!r}")
+        pol["tau"] = tau
+        return dataclasses.replace(
+            self, policy=pol, adaptive={**self.adaptive, "tau": tau})
+
     def with_schedule(self, schedule: Schedule) -> "CacheArtifact":
         return dataclasses.replace(
             self, schedule=schedule,

@@ -57,35 +57,45 @@ def _adaptive(base="smoothcache", tau=0.05, k_max=None) -> P.AdaptivePolicy:
     # k_max (cache-age cap, default: the base's) is validated >= 1 in
     # AdaptivePolicy — "adaptive:...,k_max=0" must fail loudly, not
     # compile the whole pool and silently never reuse
+    if isinstance(tau, (list, tuple)):
+        raise ValueError(
+            f"tau={list(tau)} is a τ-ladder spec — one policy per rung, "
+            "not a single policy; expand it with "
+            "registry.expand_ladder(spec) or register it via "
+            "ArtifactStore.add_ladder()")
     return P.AdaptivePolicy(base=base, tau=tau, k_max=k_max)
 
 
 # -- spec parsing ------------------------------------------------------------
 
 def _split_top(s: str, sep: str = ","):
-    """Split on ``sep`` at paren depth 0."""
+    """Split on ``sep`` at paren/bracket depth 0 (brackets delimit list
+    values — the τ-ladder grammar's ``tau=[0.0,0.05,0.2]``)."""
     out, depth, cur = [], 0, []
     for ch in s:
-        if ch == "(":
+        if ch in "([":
             depth += 1
-        elif ch == ")":
+        elif ch in ")]":
             depth -= 1
             if depth < 0:
-                raise ValueError(f"unbalanced ')' in spec {s!r}")
+                raise ValueError(f"unbalanced {ch!r} in spec {s!r}")
         if ch == sep and depth == 0:
             out.append("".join(cur))
             cur = []
         else:
             cur.append(ch)
     if depth != 0:
-        raise ValueError(f"unbalanced '(' in spec {s!r}")
+        raise ValueError(f"unbalanced '(' or '[' in spec {s!r}")
     if cur or out:
         out.append("".join(cur))
     return [p.strip() for p in out if p.strip()]
 
 
 def _coerce(v: str):
-    """Typed coercion: nested spec > bool > int > float > str."""
+    """Typed coercion: list > nested spec > bool > int > float > str."""
+    if v.startswith("[") and v.endswith("]"):
+        inner = v[1:-1].strip()
+        return [_coerce(p) for p in _split_top(inner)] if inner else []
     if "(" in v or v.lower() in _REGISTRY:
         return get(v)
     low = v.lower()
@@ -138,6 +148,32 @@ def get(spec: Union[str, dict, P.CachePolicy]) -> P.CachePolicy:
         raise KeyError(
             f"unknown cache policy {name!r}; registered: {names()}")
     return _REGISTRY[name](**kwargs)
+
+
+def expand_ladder(spec: str):
+    """Expand a τ-ladder spec into one adaptive policy per rung.
+
+    ``"adaptive:base=smoothcache(alpha=0.18),tau=[0.0,0.05,0.2]"`` →
+    three :class:`~repro.cache.policy.AdaptivePolicy` instances sharing
+    base (and ``k_max``), with strictly ascending τ values.  The rungs of
+    a ladder serve the *same* artifact — same schedule, proxy map, and
+    candidate pool (``ArtifactStore.add_ladder`` validates that) — so the
+    τ values are the only thing this grammar varies."""
+    name, kwargs = parse(spec)
+    if name not in ("adaptive", "teacache"):
+        raise ValueError(
+            f"a τ ladder is rungs of one adaptive policy; got {name!r} "
+            f"in {spec!r}")
+    taus = kwargs.pop("tau", None)
+    if not isinstance(taus, (list, tuple)) or not taus:
+        raise ValueError(
+            f"τ-ladder spec needs tau=[v0,v1,...] with at least one "
+            f"rung, got tau={taus!r} in {spec!r}")
+    taus = [float(t) for t in taus]
+    if sorted(taus) != taus or len(set(taus)) != len(taus):
+        raise ValueError(
+            f"ladder taus must be strictly ascending, got {taus}")
+    return [_REGISTRY[name](tau=t, **kwargs) for t in taus]
 
 
 def from_config(cfg: dict) -> P.CachePolicy:

@@ -25,6 +25,12 @@ hot-reload; serving never recalibrates), :class:`ServeEngine`
 (step-interleaved scheduler over the executor's resumable runs), and
 :class:`ServerMetrics` (queue wait vs service percentiles, compile counts,
 realized compute fraction).
+
+Production QoS — deadlines, priorities, quality floors, admission
+control, and the τ-elastic degradation controller over
+:meth:`ArtifactStore.add_ladder` τ ladders — lives one layer up in
+:mod:`repro.slo`; the engine accepts any of its scheduling policies via
+``scheduler=`` and its admission controllers via ``admission=``.
 """
 from repro.serve.batcher import (  # noqa: F401
     MicroBatch, MicroBatcher, bucket_for, bucket_sizes)
@@ -33,4 +39,5 @@ from repro.serve.engine import (  # noqa: F401
 from repro.serve.metrics import ServerMetrics, percentile  # noqa: F401
 from repro.serve.request import (  # noqa: F401
     Request, RequestQueue, VirtualClock, WallClock, poisson_arrivals)
-from repro.serve.store import ArtifactStore, ServableEntry  # noqa: F401
+from repro.serve.store import (  # noqa: F401
+    ArtifactStore, ServableEntry, TauLadder)

@@ -106,20 +106,45 @@ class MicroBatcher:
     def next_batch(self, now: float) -> Optional[MicroBatch]:
         """Form and return one micro-batch, or None if no group is ready
         to form one at ``now``.  Unknown policy names raise KeyError —
-        submission should have validated against the store."""
+        submission should have validated against the store.
+
+        A group's requests resolve to a store entry through
+        ``store.resolve_entry_for`` (for τ ladders: the active rung,
+        clamped to each request's quality floor), and one micro-batch
+        runs one entry — so the batch is the oldest resolvable request's
+        rung plus every group-mate sharing it; other rungs' requests stay
+        queued for the next formation pass.  Quality-infeasible requests
+        (no admissible rung) are skipped here; the engine's SLO sweep
+        sheds them with an explicit reason."""
         groups = self.queue.ready_groups(now)
         for g in self._group_order(groups):
-            n = groups[g]
+            entry, eligible = None, []
+            for r in self.queue.peek(g, now):
+                e = self.store.resolve_entry_for(g, r)
+                if e is None:
+                    continue
+                if entry is None:
+                    entry = e
+                    eligible = [r]
+                elif e.name == entry.name:
+                    eligible.append(r)
+            if entry is None:
+                continue
+            n = len(eligible)
             if n >= self.max_batch:
                 take = self.max_batch
             elif self.max_wait == 0.0 or (
-                    now - self.queue.peek(g, now)[0].arrival
-                    >= self.max_wait):
+                    now >= eligible[0].arrival + self.max_wait):
+                # the expiry test must be the SAME float expression
+                # ``arrival + max_wait`` that next_event() reports: under
+                # a virtual clock the engine sleeps to exactly that value,
+                # and ``now - arrival >= max_wait`` can round the other
+                # way ((a+w)-a < w), freezing the clock in a livelock
                 take = bucket_for(n, self.max_batch)
             else:
                 continue
-            entry = self.store.get(g)
-            reqs = tuple(self.queue.take(g, take, now))
+            reqs = tuple(self.queue.take_rids(
+                g, [r.rid for r in eligible[:take]], now))
             # move the drained group to the back of the rotation
             self._rr.remove(g)
             self._rr.append(g)
@@ -128,13 +153,21 @@ class MicroBatcher:
 
     def next_event(self, now: float) -> Optional[float]:
         """Earliest future time at which a batch *could* form: the next
-        arrival, or a held group's oldest request reaching ``max_wait``.
-        None when the queue is empty."""
+        arrival, or a held group's hold window expiring.  None when the
+        queue is empty.
+
+        The hold candidate is based on the group's oldest *resolvable*
+        request — the same request whose arrival anchors next_batch()'s
+        expiry test — so the time reported here is guaranteed to actually
+        form a batch (quality-infeasible requests never expire a window;
+        the engine's SLO sweep sheds them)."""
         candidates = []
         nxt = self.queue.next_arrival(now)
         if nxt is not None:
             candidates.append(nxt)
         for g in self.queue.ready_groups(now):
-            oldest = self.queue.peek(g, now)[0].arrival
-            candidates.append(max(now, oldest + self.max_wait))
+            for r in self.queue.peek(g, now):
+                if self.store.resolve_entry_for(g, r) is not None:
+                    candidates.append(max(now, r.arrival + self.max_wait))
+                    break
         return min(candidates) if candidates else None

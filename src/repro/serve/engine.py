@@ -10,11 +10,25 @@ the reuse decisions made on device, so timeslicing adaptive runs costs
 zero per-step host round-trips.  Non-scannable solvers fall back to the
 host-dispatched ``start_adaptive_run`` / ``advance_adaptive_run`` loop —
 one decision sync + program dispatch per step).  Several in-flight
-micro-batches timeslice the device: under the default ``interleave``
-scheduler each tick advances the head of a round-robin rotation, so a
-short, heavily-cached schedule admitted behind a full-compute one
-finishes early instead of convoying behind it (``fcfs`` reproduces the
-convoy for comparison).
+micro-batches timeslice the device: which one advances each tick is
+decided by a pluggable :class:`repro.slo.SchedulingPolicy` — the default
+``interleave`` (round-robin, so a short, heavily-cached schedule admitted
+behind a full-compute one finishes early instead of convoying behind it),
+``fcfs`` (the convoy baseline), ``edf`` (least-slack-first over member
+deadlines, remaining-steps-aware), or an ``elastic`` policy object that
+additionally drives the store's τ ladders from measured p95 waits.
+Preemption granularity is the advance unit (plan segment / adaptive
+chunk) — a batch is never torn mid-program.
+
+SLO semantics (all optional — without them the engine behaves exactly as
+before): requests may carry a :class:`repro.slo.SLO`; each tick first
+runs an SLO sweep that sheds quality-infeasible requests (no registered
+rung at or below the request's ``max_tau``) and, when an
+:class:`repro.slo.AdmissionController` is installed, sheds/defers against
+the estimated backlog (queue depth × the online-calibrated per-step
+service cost).  Every rejection is recorded with a reason in
+``ServeEngine.shed`` and the metrics — check :meth:`ServeEngine.outcome`
+for any rid.
 
 Determinism contract: a micro-batch over requests ``[r0..rn-1]`` samples
 with ``batch_key(seeds)`` — serving a batch is *bit-identical* to calling
@@ -42,8 +56,10 @@ from repro.serve.metrics import ServerMetrics
 from repro.serve.request import Request, RequestQueue, WallClock
 from repro.serve.store import ArtifactStore
 
-#: scheduling strategies: round-robin timeslicing vs run-to-completion
-SCHEDULERS = ("interleave", "fcfs")
+#: built-in scheduler names (resolved through repro.slo.resolve_policy;
+#: "elastic" additionally exists as a policy *object* since it needs a
+#: constructed controller)
+SCHEDULERS = ("interleave", "fcfs", "edf")
 
 
 def batch_key(seeds: Sequence[int]):
@@ -73,6 +89,8 @@ class BatchRecord:
     formed_at: float
     finished_at: float
     decisions: Optional[Tuple[tuple, ...]] = None   # adaptive runs only
+    tau: float = 0.0                          # realized τ (rung at launch)
+    quality_cost: Optional[float] = None      # predicted, from proxy map
 
 
 class _EagerState:
@@ -101,12 +119,13 @@ class ServeEngine:
 
     def __init__(self, executor, params, store: ArtifactStore, *,
                  clock=None, max_batch: int = 8, max_wait: float = 0.0,
-                 max_inflight: int = 2, scheduler: str = "interleave",
+                 max_inflight: int = 2, scheduler="interleave",
                  adaptive_chunk: int = 4, eager: bool = False,
-                 check: bool = False):
-        if scheduler not in SCHEDULERS:
-            raise ValueError(f"scheduler must be one of {SCHEDULERS}, got "
-                             f"{scheduler!r}")
+                 check: bool = False, admission=None, cost_model=None):
+        # lazy so repro.serve stays importable without the slo layer
+        # loaded (and the layering acyclic: slo never imports the engine)
+        from repro.slo.admission import LoadEstimator, ServiceCostModel
+        from repro.slo.policy import resolve_policy
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         if adaptive_chunk < 1:
@@ -120,15 +139,26 @@ class ServeEngine:
         self.batcher = MicroBatcher(self.queue, store, max_batch=max_batch,
                                     max_wait=max_wait)
         self.metrics = ServerMetrics()
-        self.scheduler = scheduler
+        #: the scheduling policy object; ``scheduler`` may be a built-in
+        #: name ("interleave"/"fcfs"/"edf") or any
+        #: repro.slo.SchedulingPolicy (e.g. ElasticPolicy(controller))
+        self.policy = resolve_policy(scheduler)
+        self.scheduler = self.policy.name
+        self.admission = admission            # repro.slo.AdmissionController
+        self.cost_model = (cost_model if cost_model is not None
+                           else ServiceCostModel())
+        self.load = LoadEstimator(self.cost_model,
+                                  batch_factor=max_batch)
         self.max_inflight = max_inflight
         self.adaptive_chunk = adaptive_chunk
         self.eager = eager
         self.check = check
         self.results: Dict[int, np.ndarray] = {}
         self.records: List[BatchRecord] = []
+        self.shed: Dict[int, Tuple[str, float]] = {}   # rid → (reason, t)
         self._inflight: List[_Inflight] = []
         self._rids: set = set()               # every rid ever submitted
+        self._sweep_needed = admission is not None
 
     # -- submission ----------------------------------------------------------
 
@@ -146,8 +176,70 @@ class ServeEngine:
             if r.rid in self._rids or r.rid in seen:
                 raise ValueError(f"duplicate request id {r.rid}")
             seen.add(r.rid)
+            if getattr(r, "max_tau", None) is not None:
+                self._sweep_needed = True
         self._rids |= seen
         self.queue.submit_many(list(reqs))
+
+    def outcome(self, rid: int):
+        """Explicit fate of a submitted request — requests are never
+        silently dropped: ``("done", latent)``, ``("shed", reason)``, or
+        ``("pending", None)``."""
+        if rid not in self._rids:
+            raise KeyError(f"rid {rid} was never submitted")
+        if rid in self.results:
+            return ("done", self.results[rid])
+        if rid in self.shed:
+            return ("shed", self.shed[rid][0])
+        return ("pending", None)
+
+    # -- SLO sweep (quality floors + admission) -------------------------------
+
+    def _backlog_seconds(self, now: float) -> float:
+        """Load estimate: queued steps (batch-amortized) + in-flight
+        remaining steps, priced at the calibrated per-step cost."""
+        from repro.slo.slo import remaining_steps
+        queued = []
+        for g in self.queue.ready_groups(now):
+            for r in self.queue.peek(g, now):
+                e = self.store.resolve_entry_for(g, r)
+                queued.append(e.plan.num_steps if e is not None else 0)
+        inflight = [remaining_steps(fl.rs) for fl in self._inflight]
+        return self.load.backlog_seconds(queued, inflight)
+
+    def _shed(self, req: Request, reason: str, now: float) -> None:
+        self.queue.take_rids(req.policy, [req.rid], now)
+        self.shed[req.rid] = (reason, now)
+        self.metrics.observe_shed(req, reason, now)
+
+    def _slo_sweep(self, now: float) -> None:
+        """Walk the ready queue: shed requests whose quality floor no
+        registered rung satisfies, then let the admission controller
+        shed/defer against the backlog estimate.  The backlog is
+        snapshotted once per sweep so decisions are order-independent."""
+        if not self._sweep_needed:
+            return
+        backlog = None
+        for g in list(self.queue.ready_groups(now)):
+            for r in self.queue.peek(g, now):
+                entry = self.store.resolve_entry_for(g, r)
+                if entry is None:
+                    self._shed(r, "quality_floor", now)
+                    continue
+                if self.admission is None:
+                    continue
+                if backlog is None:
+                    backlog = self._backlog_seconds(now)
+                est = self.cost_model.estimate(entry.plan.num_steps,
+                                               group=entry.name)
+                d = self.admission.decide(r, now, backlog_s=backlog,
+                                          est_service_s=est)
+                if d.action == "shed":
+                    self._shed(r, d.reason, now)
+                elif d.action == "defer":
+                    self.queue.take_rids(g, [r.rid], now)
+                    self.metrics.observe_defer(r, now)
+                    self.queue.resubmit(r, d.retry_at)
 
     # -- scheduling ----------------------------------------------------------
 
@@ -239,42 +331,56 @@ class ServeEngine:
             frac = entry.compute_fraction()
         self.metrics.observe_batch(mb.group, mb.bucket, frac,
                                    entry.plan.num_steps, num_types)
-        self.records.append(BatchRecord(
+        # feed the calibrated per-step cost model (service time of the
+        # whole batch — includes interleaving contention, which is the
+        # pessimism an admission wait estimate wants)
+        service = done - mb.requests[0].started
+        self.cost_model.observe(mb.group, service, entry.plan.num_steps)
+        qcost = entry.predicted_quality_cost(decisions)
+        self.metrics.observe_quality(entry.tau, qcost, n=mb.bucket)
+        record = BatchRecord(
             group=mb.group, version=entry.version, bucket=mb.bucket,
             rids=mb.rids, seeds=mb.seeds, labels=mb.labels,
             num_steps=entry.plan.num_steps, compute_fraction=frac,
-            formed_at=mb.formed_at, finished_at=done, decisions=decisions))
+            formed_at=mb.formed_at, finished_at=done, decisions=decisions,
+            tau=entry.tau, quality_cost=qcost)
+        self.records.append(record)
+        self.policy.on_finish(self, record, mb.requests, done)
 
     def step(self) -> bool:
-        """One scheduling tick: admit what fits, then advance one in-flight
-        run by one unit (a plan segment / an adaptive step-chunk / a whole
-        eager batch).  Returns False when nothing is runnable *right now*
-        (requests may still be in flight toward their arrival time)."""
+        """One scheduling tick: sweep SLOs (quality-floor sheds, admission
+        shed/defer), admit what fits, then advance the in-flight run the
+        scheduling policy selects by one unit (a plan segment / an
+        adaptive step-chunk / a whole eager batch).  Returns False when
+        nothing is runnable *right now* (requests may still be in flight
+        toward their arrival time)."""
         now = self.clock.now()
+        self._slo_sweep(now)
         self._admit(now)
         if not self._inflight:
             return False
-        if self.scheduler == "interleave":
-            fl = self._inflight.pop(0)         # rotate: head runs one unit
-            self._advance(fl)
-            if fl.rs.done:
-                self._finish(fl)
-            else:
-                self._inflight.append(fl)
-        else:                                  # fcfs: run head to done
-            fl = self._inflight[0]
-            self._advance(fl)
-            if fl.rs.done:
-                self._inflight.pop(0)
-                self._finish(fl)
+        i = self.policy.select(self, now)
+        fl = self._inflight[i]
+        self._advance(fl)
+        if fl.rs.done:
+            self._inflight.pop(i)
+            self._finish(fl)
+        elif self.policy.rotate():
+            self._inflight.pop(i)
+            self._inflight.append(fl)
         return True
 
     def run_until_drained(self) -> Dict[int, np.ndarray]:
-        """Serve until every submitted request has a result, sleeping the
-        clock across arrival gaps / batching windows.  Returns
-        {rid: latent row}."""
+        """Serve until every submitted request has an *outcome* — a
+        result, or an explicit shed (reason in ``self.shed``/metrics) —
+        sleeping the clock across arrival gaps / batching windows /
+        deferral retries.  Returns {rid: latent row} for the served
+        ones; use :meth:`outcome` to resolve any rid's fate."""
+        stalled = 0
+        last_now = None
         while True:
             if self.step():
+                stalled = 0
                 continue
             if len(self.queue) == 0:
                 break
@@ -287,9 +393,17 @@ class ServeEngine:
             if t <= now:
                 # wall clock crossed an arrival / batching window between
                 # step()'s reading and this one — the work is formable now,
-                # re-tick.  (Under a frozen VirtualClock t > now always:
-                # an expired window would have formed a batch in step().)
+                # re-tick.  Under a frozen VirtualClock a repeat of this
+                # branch with no progress means a livelock (an event that
+                # never fires) — fail loudly instead of spinning forever.
+                stalled = stalled + 1 if now == last_now else 0
+                last_now = now
+                if stalled > 64:
+                    raise RuntimeError(
+                        f"serve engine livelocked at t={now}: "
+                        f"next_event={t} never becomes schedulable")
                 continue
+            last_now = now
             self.clock.sleep_until(t)
         return self.results
 

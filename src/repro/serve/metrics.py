@@ -10,6 +10,13 @@ injected by the engine from the executor's variant table
 (``compiled_variant_count`` per kind, plus shape-specialized
 ``xla_program_count``) and reported against the program budget
 ``|buckets used| × |signature pool|``.
+
+SLO accounting (the ``repro.slo`` layer feeds it): deadline **attainment**
+over deadline-carrying requests, **goodput** (deadline-met work) vs
+throughput over all *offered* traffic — shed and deferred requests are
+explicit outcomes with reasons, counted in the denominator, never
+silently dropped — plus the realized-τ histogram and predicted quality
+cost under the elastic τ controller.
 """
 from __future__ import annotations
 
@@ -32,12 +39,19 @@ def percentile(xs: Sequence[float], p: float) -> float:
     return float(s[lo] + (s[hi] - s[lo]) * (rank - lo))
 
 
-def _dist(xs: List[float]) -> Dict[str, float]:
+def _dist(xs: List[float]) -> Dict[str, Optional[float]]:
+    # empty-safe: shed-heavy scenarios legitimately produce zero-sample
+    # distributions (e.g. every request of a group rejected) — report
+    # them as null fields, never ZeroDivisionError/IndexError
+    if not xs:
+        return {"mean": None, "p50": None, "p95": None, "max": None,
+                "n": 0}
     return {
         "mean": sum(xs) / len(xs),
         "p50": percentile(xs, 50),
         "p95": percentile(xs, 95),
         "max": max(xs),
+        "n": len(xs),
     }
 
 
@@ -55,6 +69,16 @@ class ServerMetrics:
         self.group_requests: Dict[str, int] = {}
         self._evals_done = 0.0                # request-weighted layer evals
         self._evals_total = 0.0
+        # SLO accounting: shed/deferred requests are first-class outcomes,
+        # never silently dropped — they widen goodput's denominator
+        self.shed_total = 0
+        self.shed_reasons: Dict[str, int] = {}
+        self.deferrals = 0
+        self.slo_total = 0                    # requests carrying a deadline
+        self.slo_attained = 0                 # ... that finished in time
+        self.good = 0                         # finished ∧ deadline attained
+        self.tau_counts: Dict[float, int] = {}    # realized-τ histogram
+        self.quality_costs: List[float] = []  # predicted per-request cost
 
     # -- observation ---------------------------------------------------------
 
@@ -67,6 +91,36 @@ class ServerMetrics:
             self.first_arrival = req.arrival
         if self.last_finish is None or req.finished > self.last_finish:
             self.last_finish = req.finished
+        deadline = getattr(req, "deadline", None)
+        attained = deadline is None or req.finished <= deadline
+        if deadline is not None:
+            self.slo_total += 1
+            self.slo_attained += int(attained)
+        self.good += int(attained)
+
+    def observe_shed(self, req: Request, reason: str, now: float) -> None:
+        """A rejected request: counted against attainment and goodput
+        (its deadline — if any — is definitionally missed)."""
+        self.shed_total += 1
+        self.shed_reasons[reason] = self.shed_reasons.get(reason, 0) + 1
+        if getattr(req, "deadline", None) is not None:
+            self.slo_total += 1
+        if req.arrival is not None and (
+                self.first_arrival is None
+                or req.arrival < self.first_arrival):
+            self.first_arrival = req.arrival
+
+    def observe_defer(self, req: Request, now: float) -> None:
+        self.deferrals += 1
+
+    def observe_quality(self, tau: float, quality_cost: Optional[float],
+                        n: int = 1) -> None:
+        """Realized τ (and predicted quality cost, when the entry carries
+        a proxy→error map) of ``n`` requests served by one batch."""
+        t = round(float(tau), 6)
+        self.tau_counts[t] = self.tau_counts.get(t, 0) + n
+        if quality_cost is not None:
+            self.quality_costs.extend([float(quality_cost)] * n)
 
     def observe_batch(self, group: str, bucket: int,
                       compute_fraction: float, num_steps: int,
@@ -95,6 +149,7 @@ class ServerMetrics:
         """One JSON-safe snapshot.  Throughput is measured over the
         first-arrival → last-finish makespan (open-loop serving: arrival
         gaps count against the server, idle pre-warm time does not)."""
+        offered = self.requests + self.shed_total
         out: Dict = {
             "requests": self.requests,
             "batches": self.batches,
@@ -102,12 +157,33 @@ class ServerMetrics:
                         for b, c in sorted(self.bucket_counts.items())},
             "per_group_requests": dict(sorted(self.group_requests.items())),
             "compute_fraction": self.realized_compute_fraction(),
+            "shed": {"total": self.shed_total,
+                     "reasons": dict(sorted(self.shed_reasons.items()))},
+            "deferrals": self.deferrals,
         }
+        # SLO attainment over deadline-carrying requests (shed ones count
+        # as missed); goodput over *offered* traffic — throughput counts
+        # everything finished, goodput only deadline-met work, so shedding
+        # can never dress up as service
+        out["slo"] = {
+            "with_deadline": self.slo_total,
+            "attained": self.slo_attained,
+            "attainment": (self.slo_attained / self.slo_total
+                           if self.slo_total else None),
+            "good_requests": self.good,
+            "offered": offered,
+            "goodput_fraction": (self.good / offered if offered else None),
+        }
+        out["realized_tau"] = {f"{t:g}": c for t, c in
+                               sorted(self.tau_counts.items())}
+        out["predicted_quality_cost"] = _dist(self.quality_costs)
         if self.requests:
             makespan = self.last_finish - self.first_arrival
             out["makespan_s"] = makespan
             out["throughput_rps"] = (self.requests / makespan
                                      if makespan > 0 else float("inf"))
+            out["slo"]["goodput_rps"] = (self.good / makespan
+                                         if makespan > 0 else float("inf"))
             out["queue_wait_s"] = _dist(self.queue_waits)
             out["service_s"] = _dist(self.service_times)
         if compile_counts is not None:

@@ -57,19 +57,31 @@ class VirtualClock:
         return self._now
 
 
-def poisson_arrivals(rate: float, n: int, rng, start: float = 0.0
-                     ) -> List[float]:
+def poisson_arrivals(rate: float, n: int, rng, start: float = 0.0,
+                     deadline_budget=None) -> List:
     """``n`` arrival timestamps of a Poisson process with ``rate`` req/s
     (i.i.d. exponential gaps) — the synthetic open-loop arrival trace the
     serving example and benchmark share.  ``rng`` is a seeded
-    ``np.random.RandomState``/``Generator`` so traces are reproducible."""
+    ``np.random.RandomState``/``Generator`` so traces are reproducible.
+
+    With ``deadline_budget`` (a fixed relative budget in seconds, or a
+    ``(lo, hi)`` uniform draw — the per-class deadline model of the SLO
+    traces) each element becomes an ``(arrival, deadline)`` pair with the
+    absolute deadline ``arrival + budget``; without it the return stays a
+    plain arrival list, so existing callers are untouched."""
     if rate <= 0:
         raise ValueError(f"arrival rate must be > 0, got {rate}")
     t = float(start)
     out = []
     for _ in range(n):
         t += float(rng.exponential(1.0 / rate))
-        out.append(t)
+        if deadline_budget is None:
+            out.append(t)
+        else:
+            b = deadline_budget
+            if isinstance(b, (tuple, list)):
+                b = float(rng.uniform(b[0], b[1]))
+            out.append((t, t + float(b)))
     return out
 
 
@@ -86,12 +98,15 @@ class Request:
     (artifact / calibration-free policy) that serves it; ``priority`` breaks
     ties ahead of arrival order (higher first).  ``arrival`` is stamped by
     the queue at submit time unless given explicitly (virtual-clock tests
-    and replayed traces pass it)."""
+    and replayed traces pass it).  ``slo`` optionally attaches a
+    :class:`repro.slo.SLO` (deadline / quality floor / class label) —
+    requests without one serve exactly as before."""
     rid: int
     seed: int
     policy: str
     label: Optional[int] = None
     priority: int = 0
+    slo: Optional[object] = None              # repro.slo.SLO, if any
     arrival: Optional[float] = None
     started: Optional[float] = None           # micro-batch launch time
     finished: Optional[float] = None          # result materialized
@@ -107,6 +122,23 @@ class Request:
         if self.finished is None or self.started is None:
             return None
         return self.finished - self.started
+
+    @property
+    def deadline(self) -> Optional[float]:
+        return self.slo.deadline if self.slo is not None else None
+
+    @property
+    def max_tau(self) -> Optional[float]:
+        """Quality floor: the largest SmoothCache τ this request accepts
+        (None ⇒ any registered rung)."""
+        return self.slo.max_tau if self.slo is not None else None
+
+    def attained(self) -> bool:
+        """Deadline attainment: a finished request without a deadline
+        always attains; an unfinished (shed / in-flight) one never does."""
+        if self.finished is None:
+            return False
+        return self.deadline is None or self.finished <= self.deadline
 
 
 class RequestQueue:
@@ -156,6 +188,27 @@ class RequestQueue:
         rs = self._ready.get(group, [])
         taken, self._ready[group] = rs[:n], rs[n:]
         return taken
+
+    def take_rids(self, group: str, rids: Sequence[int],
+                  now: Optional[float] = None) -> List[Request]:
+        """Remove and return specific ready requests of ``group`` by rid,
+        preserving ready order — how the batcher lifts a rung-compatible
+        subset, and how the engine sheds/defer-removes one request
+        without disturbing its neighbors.  Unknown rids are ignored."""
+        self._absorb(self.clock.now() if now is None else now)
+        want = set(rids)
+        rs = self._ready.get(group, [])
+        taken = [r for r in rs if r.rid in want]
+        self._ready[group] = [r for r in rs if r.rid not in want]
+        return taken
+
+    def resubmit(self, req: Request, not_before: float) -> None:
+        """Defer: re-enqueue an already-removed request so it becomes
+        ready again at ``not_before``.  The original ``arrival`` stamp is
+        deliberately untouched — queue-wait accounting keeps charging the
+        full time since first arrival, so deferral cannot launder latency."""
+        heapq.heappush(self._future,
+                       (float(not_before), next(self._tie), req))
 
     def next_arrival(self, now: Optional[float] = None) -> Optional[float]:
         """Earliest not-yet-ready arrival timestamp (None when everything

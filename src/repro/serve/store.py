@@ -20,7 +20,7 @@ serving side of that contract:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Union
+from typing import Dict, List, Optional, Tuple, Union
 
 from repro.cache import registry
 from repro.cache.artifact import CacheArtifact
@@ -107,6 +107,51 @@ class ServableEntry:
         return float(np.mean([1.0 - np.mean(v)
                               for v in self.schedule.skip.values()]))
 
+    def predicted_quality_cost(self, decisions=None) -> Optional[float]:
+        """Predicted cumulative relative output error of one run served
+        by this entry, from the artifact's fitted proxy→error map: the
+        sum of ``est(type, proxy)`` over every (step, type) reuse —
+        ``decisions`` when the run's realized per-step skip sets are
+        known (adaptive runs), the static schedule's skips otherwise.
+        The proxy is evaluated at the calibration-mean signal (0 when the
+        artifact predates ``mean_proxy``).  None without a proxy map —
+        entries that never calibrated one make no quality claim."""
+        if self.proxy_map is None:
+            return None
+        import numpy as np
+        p = self.proxy_map.mean_proxy
+        if not np.isfinite(p):
+            p = 0.0
+        if decisions is None:
+            decisions = [
+                tuple(t for t, v in sorted(self.schedule.skip.items())
+                      if v[s])
+                for s in range(self.schedule.num_steps)]
+        return float(sum(self.proxy_map.est(t, p)
+                         for skips in decisions for t in skips))
+
+
+@dataclasses.dataclass
+class TauLadder:
+    """Pre-registered τ rungs of one artifact: ``rung_names[i]`` is the
+    store entry serving ``taus[i]`` (strictly ascending).  ``active`` is
+    the rung the elastic controller currently routes uncapped traffic to;
+    requests with a ``max_tau`` quality floor are clamped to their highest
+    admissible rung regardless of the active one."""
+    name: str
+    rung_names: Tuple[str, ...]
+    taus: Tuple[float, ...]
+    active: int = 0
+
+    def rung_for_cap(self, max_tau: float) -> Optional[int]:
+        """Highest rung index with ``tau <= max_tau`` (None when even the
+        lowest rung exceeds the cap — the request must be shed)."""
+        best = None
+        for i, t in enumerate(self.taus):
+            if t <= max_tau + 1e-12:
+                best = i
+        return best
+
 
 class ArtifactStore:
     """Named servable entries validated against one deployment
@@ -117,6 +162,7 @@ class ArtifactStore:
         self.solver = solver
         self.cfg_scale = cfg_scale
         self._entries: Dict[str, ServableEntry] = {}
+        self._ladders: Dict[str, TauLadder] = {}
 
     # -- loading -------------------------------------------------------------
 
@@ -186,6 +232,85 @@ class ArtifactStore:
         self._entries[name] = entry
         return entry
 
+    def add_ladder(self, name: str, src: Union[str, CacheArtifact], *,
+                   spec: Optional[str] = None,
+                   taus: Optional[List[float]] = None,
+                   strict: bool = True) -> TauLadder:
+        """Register a τ **ladder**: several rungs of ONE adaptive artifact
+        differing only in the runtime threshold τ — the degradation lever
+        the elastic controller moves traffic across under load.
+
+        Rungs come either from a ladder spec
+        (``"adaptive:base=smoothcache(alpha=0.18),tau=[0.0,0.05,0.2]"``,
+        expanded by :func:`repro.cache.registry.expand_ladder`) or from
+        plain ``taus=[...]`` reusing the artifact's stored adaptive
+        policy.  Each rung becomes a real store entry
+        (``"<name>/tau=<v>"``) built from ``CacheArtifact.at_tau`` and
+        strict-validated like any artifact; registration additionally
+        validates that every rung shares the first rung's proxy→error map
+        and candidate pool — the invariant that makes rung changes free
+        (one fused program per bucket serves the whole ladder's τ range;
+        τ is a traced argument, so no rung adds XLA programs beyond the
+        per-rung budget the engine reports against).
+
+        ``name`` itself resolves (``get``/``submit``) to the *active*
+        rung; :meth:`set_rung` retargets it atomically.  Ladder rungs are
+        artifact copies, so :meth:`reload` applies to individual rung
+        entries, not the ladder name."""
+        if name in self._entries or name in self._ladders:
+            raise ValueError(f"entry {name!r} exists")
+        if (spec is None) == (taus is None):
+            raise ValueError("pass exactly one of spec= or taus=")
+        art = CacheArtifact.load(src) if isinstance(src, str) else src
+        if spec is not None:
+            policies = registry.expand_ladder(spec)
+        else:
+            if dict(art.policy).get("name") not in ("adaptive", "teacache"):
+                raise ValueError(
+                    f"ladder {name!r}: taus= needs an artifact calibrated "
+                    f"under an adaptive policy, got "
+                    f"{dict(art.policy).get('name')!r}")
+            tau_list = [float(t) for t in taus]
+            if sorted(tau_list) != tau_list \
+                    or len(set(tau_list)) != len(tau_list):
+                raise ValueError(f"ladder taus must be strictly "
+                                 f"ascending, got {tau_list}")
+            policies = [registry.from_config({**dict(art.policy),
+                                              "tau": t}) for t in tau_list]
+        staged: Dict[str, ServableEntry] = {}
+        rung_names: List[str] = []
+        ref: Optional[ServableEntry] = None
+        for pol in policies:
+            ename = f"{name}/tau={pol.tau:g}"
+            entry = self._build_entry(ename, art.at_tau(pol.tau), pol,
+                                      strict, version=1)
+            if ref is None:
+                ref = entry
+            else:
+                pm = (entry.proxy_map.to_jsonable()
+                      if entry.proxy_map else None)
+                pm_ref = (ref.proxy_map.to_jsonable()
+                          if ref.proxy_map else None)
+                if pm != pm_ref:
+                    raise ValueError(
+                        f"ladder {name!r}: rung tau={pol.tau:g} has a "
+                        "different proxy→error map than the first rung — "
+                        "all rungs must share one map")
+                if entry.pool() != ref.pool():
+                    raise ValueError(
+                        f"ladder {name!r}: rung tau={pol.tau:g} has a "
+                        "different candidate pool than the first rung — "
+                        "all rungs must share one pool")
+            staged[ename] = entry
+            rung_names.append(ename)
+        # all-or-nothing: entries become visible only after every rung
+        # validated, so a bad spec never leaves a partial ladder serving
+        self._entries.update(staged)
+        ladder = TauLadder(name=name, rung_names=tuple(rung_names),
+                           taus=tuple(p.tau for p in policies))
+        self._ladders[name] = ladder
+        return ladder
+
     def reload(self, name: str,
                src: Optional[Union[str, CacheArtifact]] = None, *,
                strict: bool = True) -> ServableEntry:
@@ -208,16 +333,62 @@ class ArtifactStore:
     # -- lookup --------------------------------------------------------------
 
     def get(self, name: str) -> ServableEntry:
+        """Resolve an entry; a ladder name resolves to its *active* rung."""
+        if name in self._ladders:
+            lad = self._ladders[name]
+            return self._entries[lad.rung_names[lad.active]]
         if name not in self._entries:
             raise KeyError(f"no servable entry {name!r}; have "
                            f"{sorted(self._entries)}")
         return self._entries[name]
 
+    def ladder(self, name: str) -> TauLadder:
+        if name not in self._ladders:
+            raise KeyError(f"no τ ladder {name!r}; have "
+                           f"{sorted(self._ladders)}")
+        return self._ladders[name]
+
+    def ladders(self) -> List[str]:
+        return sorted(self._ladders)
+
+    def set_rung(self, name: str, index: int) -> ServableEntry:
+        """Retarget a ladder's active rung (clamped to the ladder) — the
+        elastic controller's actuation.  Atomic from the batcher's view:
+        in-flight batches keep the rung entry they snapshotted; new
+        batches resolve the new rung.  Zero compiles, by construction."""
+        lad = self.ladder(name)
+        lad.active = max(0, min(int(index), len(lad.rung_names) - 1))
+        return self._entries[lad.rung_names[lad.active]]
+
+    def resolve_entry_for(self, group: str, req) -> Optional[ServableEntry]:
+        """The entry that should serve ``req`` under group ``group``,
+        honoring the request's quality floor: for a ladder, the active
+        rung clamped down to the request's ``max_tau`` cap; for a plain
+        entry, the entry itself.  None means no registered rung/entry
+        satisfies the floor — the engine sheds with ``quality_floor``."""
+        cap = getattr(req, "max_tau", None)
+        if group in self._ladders:
+            lad = self._ladders[group]
+            idx = lad.active
+            if cap is not None:
+                c = lad.rung_for_cap(cap)
+                if c is None:
+                    return None
+                idx = min(idx, c)
+            return self._entries[lad.rung_names[idx]]
+        entry = self.get(group)
+        if cap is not None and entry.tau > cap + 1e-12:
+            return None
+        return entry
+
     def names(self) -> List[str]:
+        """Real entry names (ladder rungs included, ladder aliases not —
+        the program-budget sum iterates this, and the alias resolves to a
+        rung that is already counted)."""
         return sorted(self._entries)
 
     def __contains__(self, name: str) -> bool:
-        return name in self._entries
+        return name in self._entries or name in self._ladders
 
     def __len__(self) -> int:
         return len(self._entries)

@@ -1,0 +1,43 @@
+"""repro.slo — SLO-aware, quality-elastic admission control & scheduling.
+
+The production QoS layer over :mod:`repro.serve`: per-request service
+objectives (deadline, priority class, quality floor as max τ), EDF
+scheduling over in-flight micro-batches, admission control with explicit
+defer/shed decisions, and the τ-elastic degradation controller that turns
+SmoothCache's error budget into a *load* control — under overload traffic
+moves to a higher τ rung of the same artifact (more layer-output reuse,
+cheaper steps, zero new compiles) instead of queueing into deadline
+misses::
+
+    from repro import serve, slo
+
+    store = serve.ArtifactStore(cfg, solver, cfg_scale=1.5)
+    ladder = store.add_ladder(
+        "gen", "dit.cache.json",
+        spec="adaptive:base=smoothcache(alpha=0.18),tau=[0.0,0.05,0.2]")
+
+    ctrl = slo.ElasticTauController(len(ladder.taus), target_p95_wait_s=2.0)
+    eng = serve.ServeEngine(
+        ex, params, store,
+        scheduler=slo.ElasticPolicy(ctrl),
+        admission=slo.AdmissionController(max_backlog_s=30.0,
+                                          aging_rate=0.5))
+    eng.submit(serve.Request(rid=0, seed=7, policy="gen",
+                             slo=slo.SLO(deadline=eng.clock.now() + 10.0,
+                                         max_tau=0.05)))
+
+Layering: this package never imports the engine — it talks to it through
+the policy interface — so ``repro.serve`` stays usable without SLOs and
+the engine resolves string schedulers through :func:`resolve_policy`
+lazily.
+"""
+from repro.slo.admission import (  # noqa: F401
+    ADMIT, AdmissionController, AdmissionDecision, LoadEstimator,
+    ServiceCostModel)
+from repro.slo.controller import ElasticTauController  # noqa: F401
+from repro.slo.policy import (  # noqa: F401
+    EDFPolicy, ElasticPolicy, FairnessPolicy, FcfsPolicy, SchedulingPolicy,
+    resolve_policy)
+from repro.slo.slo import (  # noqa: F401
+    SLO, batch_deadline, remaining_steps, slack)
+from repro.slo.trace import RequestClass, overload_trace  # noqa: F401

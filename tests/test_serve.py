@@ -206,6 +206,22 @@ def test_batching_window_holds_partial_buckets():
     assert reqs0 == (0, 1)
 
 
+def test_batching_window_expiry_is_roundoff_safe():
+    # regression: the engine sleeps the virtual clock to exactly
+    # ``arrival + max_wait`` (next_event), but the old expiry test
+    # ``now - arrival >= max_wait`` can round the other way
+    # ((a+w)-a < w), so the window never expired and the engine
+    # livelocked with a frozen clock.  Formation must use the same
+    # float expression the event time was computed with.
+    a, w = 9.3665445913662, 0.2
+    assert (a + w) - a < w          # the roundoff premise of the bug
+    eng, _ = make_engine(max_batch=4, max_wait=w)
+    eng.submit(req(0, "static2", arrival=a))
+    eng.run_until_drained()
+    assert sorted(eng.results) == [0]
+    assert eng.records[0].formed_at == pytest.approx(a + w)
+
+
 def test_full_bucket_forms_immediately_despite_window():
     eng, _ = make_engine(max_batch=4, max_wait=100.0)
     eng.submit(*[req(i, "static2", arrival=0.0) for i in range(4)])

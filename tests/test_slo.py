@@ -1,0 +1,685 @@
+"""repro.slo — SLO / quality-elastic serving tests on a virtual clock.
+
+Fake-executor coverage: EDF vs fairness ordering invariants, quality-floor
+and admission shedding under a step load, deferral + aging (no
+starvation), τ-ladder registration/resolution in the store, controller
+hysteresis (no rung flapping on a steady trace), elastic end-to-end rung
+movement with zero extra fused programs, and shed-safe metrics.  Plus one
+slow end-to-end test on the smoke DiT proving ladder-served latents at a
+fixed rung are bit-identical to ``DiffusionPipeline.generate`` at that τ.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro import serve, slo
+from repro.cache import registry
+from repro.cache.artifact import CacheArtifact
+from repro.core import plan as plan_lib
+from repro.core import schedule as S
+
+
+# ---------------------------------------------------------------------------
+# Fakes (mirroring tests/test_serve.py): virtual-clock executor where
+# adaptive cost shrinks with τ, so the elastic lever is measurable
+# ---------------------------------------------------------------------------
+
+class FakeCfg:
+    name = "fake-arch"
+
+    def layer_types(self):
+        return ("attn", "ffn")
+
+
+class FakeSolver:
+    name = "ddim"
+
+    def __init__(self, num_steps=8):
+        self.num_steps = num_steps
+
+
+@dataclasses.dataclass
+class FakeRunState:
+    plan: plan_lib.ExecutionPlan
+    batch: int
+    run_index: int = 0
+    x: object = None
+    decisions = None
+
+    @property
+    def done(self):
+        return self.run_index >= len(self.plan.runs)
+
+
+@dataclasses.dataclass
+class FakeFusedState:
+    schedule: object
+    tau: float
+    batch: int
+    step: int = 0
+    x: object = None
+
+    @property
+    def done(self):
+        return self.step >= self.schedule.num_steps
+
+    @property
+    def num_steps(self):
+        return self.schedule.num_steps
+
+    @property
+    def decisions(self):
+        return tuple(_tau_skips(self.schedule, self.tau, s)
+                     for s in range(self.step))
+
+
+def _tau_skips(schedule, tau, s):
+    """The fake's runtime rule: τ=0 realizes the static schedule; τ>0
+    reuses *all* types except every ``period``-th step, with the period
+    growing with τ — so higher rungs are strictly cheaper."""
+    if tau <= 0:
+        return tuple(sorted(t for t, v in schedule.skip.items() if v[s]))
+    period = 1 + math.ceil(tau * 20)          # 0.05→2, 0.1→3, 0.3→7
+    if s % period == 0:
+        return ()
+    return tuple(sorted(schedule.skip))
+
+
+class FakeExecutor:
+    """Resumable-run surface charging virtual seconds per *computed*
+    layer evaluation (see tests/test_serve.py)."""
+
+    supports_fused_adaptive = True
+
+    def __init__(self, clock, step_cost=1.0):
+        self.clock = clock
+        self.step_cost = step_cost
+        self._programs = set()
+
+    def _charge(self, skip, length):
+        computed = sum(1 for sk in skip.values() if not sk)
+        self.clock.advance(self.step_cost * length
+                           * computed / max(len(skip), 1))
+
+    def start_run(self, params, key, batch, *, plan, schedule=None,
+                  label=None, memory=None):
+        return FakeRunState(plan=plan, batch=batch)
+
+    def advance_run(self, params, rs, *, check=False):
+        run = rs.plan.runs[rs.run_index]
+        self._programs.add(("seg", run.sig, rs.batch))
+        self._charge(run.sig.skip, run.length)
+        rs = dataclasses.replace(rs, run_index=rs.run_index + 1)
+        if rs.done:
+            rs.x = np.arange(rs.batch, dtype=np.float64)[:, None]
+        return rs
+
+    def start_adaptive_fused_run(self, params, key, batch, *, schedule,
+                                 tau, proxy_map=None, pool=None, k_max=3,
+                                 label=None, memory=None):
+        # one fused program per (pool, runtime-vs-skip-table, batch) —
+        # τ is a traced argument, so every τ>0 rung shares one program
+        pool_key = tuple(sorted(tuple(s.live_in) for s in pool))
+        self._programs.add(("fused", pool_key, tau > 0, batch))
+        return FakeFusedState(schedule=schedule, tau=tau, batch=batch)
+
+    def advance_adaptive_fused(self, params, rs, n_steps=None):
+        remaining = rs.schedule.num_steps - rs.step
+        length = remaining if n_steps is None else min(n_steps, remaining)
+        for s in range(rs.step, rs.step + length):
+            skips = set(_tau_skips(rs.schedule, rs.tau, s))
+            self._charge({t: t in skips for t in rs.schedule.skip}, 1)
+        rs = dataclasses.replace(rs, step=rs.step + length)
+        if rs.done:
+            rs.x = np.arange(rs.batch, dtype=np.float64)[:, None]
+        return rs
+
+    def compiled_variant_count(self, kind=None):
+        if kind is None:
+            return len(self._programs)
+        return len({p for p in self._programs if p[0] == kind})
+
+    def xla_program_count(self, kind=None):
+        return self.compiled_variant_count(kind)
+
+
+def _adaptive_artifact(num_steps=8, tau=0.1, k_max=1):
+    types = ("attn", "ffn")
+    sch = S.fora(types, num_steps, 2)
+    pool = [list(sig.live_in) for sig in plan_lib.mask_lattice(sch)]
+    return CacheArtifact(
+        arch="fake-arch", solver="ddim", num_steps=num_steps,
+        policy={"name": "adaptive", "base": {"name": "static", "n": 2},
+                "tau": tau},
+        curves={}, schedule=sch,
+        plan=plan_lib.analyze(sch).to_jsonable(),
+        adaptive={"tau": tau, "k_max": k_max,
+                  "proxy_map": {"coeffs": {"attn": [0.0, 0.01],
+                                           "ffn": [0.0, 0.01]},
+                                "mean_proxy": None},
+                  "pool": pool},
+        meta={})
+
+
+def make_engine(num_steps=8, entries=None, ladder_spec=None, **kw):
+    clock = serve.VirtualClock()
+    store = serve.ArtifactStore(FakeCfg(), FakeSolver(num_steps))
+    for name, spec in (entries or {}).items():
+        store.add_policy(name, spec)
+    if ladder_spec is not None:
+        store.add_ladder("gen", _adaptive_artifact(num_steps),
+                         spec=ladder_spec)
+    ex = FakeExecutor(clock)
+    kw.setdefault("max_batch", 4)
+    eng = serve.ServeEngine(ex, params=None, store=store, clock=clock, **kw)
+    return eng, clock, ex
+
+
+def req(rid, policy, arrival=0.0, priority=0, deadline=None, max_tau=None):
+    s = None
+    if deadline is not None or max_tau is not None:
+        s = slo.SLO(deadline=deadline, max_tau=max_tau)
+    return serve.Request(rid=rid, seed=rid, policy=policy,
+                         priority=priority, arrival=arrival, slo=s)
+
+
+LADDER3 = "adaptive:base=static(n=2),tau=[0.0,0.05,0.2],k_max=1"
+
+
+# ---------------------------------------------------------------------------
+# SLO dataclass + Request plumbing
+# ---------------------------------------------------------------------------
+
+def test_slo_and_request_properties():
+    r = req(1, "p", arrival=0.0, deadline=5.0, max_tau=0.1)
+    assert r.deadline == 5.0 and r.max_tau == 0.1
+    assert not r.attained()                   # unfinished / shed
+    r.finished = 4.0
+    assert r.attained()
+    r.finished = 6.0
+    assert not r.attained()
+    bare = req(2, "p")
+    assert bare.deadline is None and bare.max_tau is None
+    bare.finished = 100.0
+    assert bare.attained()                    # no deadline: any finish
+    with pytest.raises(ValueError):
+        slo.SLO(max_tau=-0.1)
+    assert slo.slack(None, 0.0, 1.0) == math.inf
+    assert slo.slack(10.0, 4.0, 2.0) == pytest.approx(4.0)
+
+
+def test_remaining_steps_across_state_shapes():
+    sch = S.fora(("attn", "ffn"), 8, 2)
+    plan = plan_lib.analyze(sch)
+    rs = FakeRunState(plan=plan, batch=1)
+    assert slo.remaining_steps(rs) == 8
+    fused = FakeFusedState(schedule=sch, tau=0.0, batch=1, step=3)
+    assert slo.remaining_steps(fused) == 5
+
+
+# ---------------------------------------------------------------------------
+# Trace helpers: deadline-bearing arrivals, overload ramp
+# ---------------------------------------------------------------------------
+
+def test_poisson_arrivals_deadline_budget():
+    rng = np.random.RandomState(0)
+    plain = serve.poisson_arrivals(2.0, 10, np.random.RandomState(0))
+    assert all(isinstance(a, float) for a in plain)   # back-compat shape
+    pairs = serve.poisson_arrivals(2.0, 10, np.random.RandomState(0),
+                                   deadline_budget=(1.0, 2.0))
+    arrivals = [a for a, _ in pairs]
+    assert arrivals == sorted(arrivals) and len(pairs) == 10
+    assert arrivals[0] == plain[0]            # same underlying process
+    assert all(1.0 <= d - a <= 2.0 for a, d in pairs)
+    fixed = serve.poisson_arrivals(2.0, 5, rng, deadline_budget=3.0)
+    assert all(d - a == pytest.approx(3.0) for a, d in fixed)
+
+
+def test_overload_trace_deterministic_and_classed():
+    classes = [
+        slo.RequestClass("bulk", "gen", weight=3.0,
+                         deadline_budget=(5.0, 8.0)),
+        slo.RequestClass("strict", "gen", weight=1.0, priority=1,
+                         deadline_budget=4.0, max_tau=0.05),
+    ]
+    t1 = slo.overload_trace(classes, [(1.0, 20), (4.0, 20)],
+                            np.random.RandomState(7))
+    t2 = slo.overload_trace(classes, [(1.0, 20), (4.0, 20)],
+                            np.random.RandomState(7))
+    assert [(r.rid, r.arrival, r.deadline, r.max_tau) for r in t1] \
+        == [(r.rid, r.arrival, r.deadline, r.max_tau) for r in t2]
+    assert len(t1) == 40
+    assert all(r.deadline is not None and r.deadline > r.arrival
+               for r in t1)
+    names = {r.slo.cls for r in t1}
+    assert names == {"bulk", "strict"}
+    # the 4 rps phase is denser than the 1 rps phase
+    assert (t1[39].arrival - t1[20].arrival) \
+        < (t1[19].arrival - t1[0].arrival)
+    for r in t1:
+        if r.slo.cls == "strict":
+            assert r.max_tau == 0.05 and r.priority == 1
+
+
+# ---------------------------------------------------------------------------
+# Registry τ-ladder grammar
+# ---------------------------------------------------------------------------
+
+def test_registry_bracket_list_grammar():
+    name, kw = registry.parse(
+        "adaptive:base=smoothcache(alpha=0.18),tau=[0.0,0.05,0.2]")
+    assert name == "adaptive" and kw["tau"] == [0.0, 0.05, 0.2]
+    # nested paren values still split correctly next to bracket lists
+    assert kw["base"].spec().startswith("smoothcache")
+    assert registry.parse("adaptive:tau=[]")[1]["tau"] == []
+
+
+def test_registry_ladder_expansion_and_validation():
+    pols = registry.expand_ladder(LADDER3)
+    assert [p.tau for p in pols] == [0.0, 0.05, 0.2]
+    assert len({p.base.spec() for p in pols}) == 1
+    with pytest.raises(ValueError, match="ascending"):
+        registry.expand_ladder("adaptive:tau=[0.2,0.05]")
+    with pytest.raises(ValueError, match="ascending"):
+        registry.expand_ladder("adaptive:tau=[0.1,0.1]")
+    with pytest.raises(ValueError, match="adaptive"):
+        registry.expand_ladder("static:n=2")
+    with pytest.raises(ValueError, match="tau"):
+        registry.expand_ladder("adaptive:base=static(n=2)")
+    # a ladder spec is NOT a single policy — get() refuses with a pointer
+    with pytest.raises(ValueError, match="expand_ladder"):
+        registry.get("adaptive:tau=[0.0,0.1]")
+
+
+def test_artifact_at_tau():
+    art = _adaptive_artifact(tau=0.1)
+    re = art.at_tau(0.3)
+    assert re.adaptive["tau"] == 0.3 and re.policy["tau"] == 0.3
+    assert art.adaptive["tau"] == 0.1         # original untouched
+    assert re.schedule is art.schedule and re.curves is art.curves
+    with pytest.raises(ValueError):
+        art.at_tau(-1.0)
+    static = CacheArtifact(arch="a", solver="s", num_steps=4,
+                           policy={"name": "static", "n": 2}, curves={})
+    with pytest.raises(ValueError, match="adaptive"):
+        static.at_tau(0.1)
+
+
+# ---------------------------------------------------------------------------
+# Store: ladder registration, rung resolution, quality floors
+# ---------------------------------------------------------------------------
+
+def test_store_ladder_registration_and_rungs():
+    store = serve.ArtifactStore(FakeCfg(), FakeSolver(8))
+    lad = store.add_ladder("gen", _adaptive_artifact(8), spec=LADDER3)
+    assert lad.taus == (0.0, 0.05, 0.2)
+    assert store.ladders() == ["gen"]
+    assert "gen" in store and "gen/tau=0.05" in store
+    assert set(store.names()) == {"gen/tau=0", "gen/tau=0.05",
+                                  "gen/tau=0.2"}
+    assert store.get("gen").tau == 0.0        # active rung 0
+    store.set_rung("gen", 2)
+    assert store.get("gen").tau == 0.2
+    store.set_rung("gen", 99)                 # clamped
+    assert store.ladder("gen").active == 2
+    # per-request caps clamp below the active rung
+    capped = req(0, "gen", max_tau=0.05)
+    assert store.resolve_entry_for("gen", capped).tau == 0.05
+    uncapped = req(1, "gen")
+    assert store.resolve_entry_for("gen", uncapped).tau == 0.2
+    # all rungs share proxy map + pool; τ is the only difference
+    e0, e2 = store.get("gen/tau=0"), store.get("gen/tau=0.2")
+    assert e0.proxy_map.to_jsonable() == e2.proxy_map.to_jsonable()
+    assert e0.pool() == e2.pool()
+    # duplicate name and malformed arg combos are rejected
+    with pytest.raises(ValueError, match="exists"):
+        store.add_ladder("gen", _adaptive_artifact(8), spec=LADDER3)
+    with pytest.raises(ValueError, match="exactly one"):
+        store.add_ladder("g2", _adaptive_artifact(8))
+
+
+def test_store_ladder_from_taus_uses_stored_policy():
+    store = serve.ArtifactStore(FakeCfg(), FakeSolver(8))
+    lad = store.add_ladder("gen", _adaptive_artifact(8, tau=0.1),
+                           taus=[0.0, 0.1, 0.3])
+    assert lad.taus == (0.0, 0.1, 0.3)
+    with pytest.raises(ValueError, match="ascending"):
+        store.add_ladder("g2", _adaptive_artifact(8), taus=[0.3, 0.1])
+    static = CacheArtifact(arch="fake-arch", solver="ddim", num_steps=8,
+                           policy={"name": "static", "n": 2}, curves={},
+                           schedule=S.fora(("attn", "ffn"), 8, 2))
+    with pytest.raises(ValueError, match="adaptive"):
+        store.add_ladder("g3", static, taus=[0.0, 0.1])
+
+
+def test_rung_for_cap():
+    lad = serve.TauLadder("x", ("a", "b", "c"), (0.05, 0.1, 0.2))
+    assert lad.rung_for_cap(0.01) is None     # floor below every rung
+    assert lad.rung_for_cap(0.05) == 0
+    assert lad.rung_for_cap(0.15) == 1
+    assert lad.rung_for_cap(1.0) == 2
+
+
+# ---------------------------------------------------------------------------
+# EDF vs fairness ordering invariants
+# ---------------------------------------------------------------------------
+
+def _drain_two(scheduler):
+    eng, clock, _ = make_engine(
+        num_steps=16, entries={"full": "static:n=2"},
+        max_batch=1, max_inflight=2, scheduler=scheduler)
+    eng.submit(req(0, "full", arrival=0.0),                # no deadline
+               req(1, "full", arrival=0.0, deadline=10.0))  # urgent
+    eng.run_until_drained()
+    return {rec.rids[0]: rec.finished_at for rec in eng.records}
+
+
+def test_edf_prioritizes_deadline_batch_over_round_robin():
+    edf = _drain_two("edf")
+    fair = _drain_two("interleave")
+    # same total work either way...
+    assert max(edf.values()) == pytest.approx(max(fair.values()))
+    # ...but EDF runs the deadline batch to completion first, while
+    # fairness interleaves both to a near-simultaneous finish
+    assert edf[1] < fair[1]
+    assert edf[1] < edf[0]
+    assert edf[1] <= fair[1] - 1.0
+
+
+def test_edf_falls_back_to_round_robin_without_deadlines():
+    eng, _, _ = make_engine(
+        num_steps=16, entries={"full": "static:n=2"},
+        max_batch=1, max_inflight=2, scheduler="edf")
+    eng.submit(req(0, "full"), req(1, "full"))
+    eng.run_until_drained()
+    done = sorted(rec.finished_at for rec in eng.records)
+    assert done[1] - done[0] <= 1.0           # interleaved, not convoyed
+
+
+def test_unknown_scheduler_rejected():
+    with pytest.raises(ValueError, match="scheduler"):
+        make_engine(entries={"p": "none"}, scheduler="bogus")
+    with pytest.raises(ValueError, match="controller"):
+        make_engine(entries={"p": "none"}, scheduler="elastic")
+
+
+# ---------------------------------------------------------------------------
+# Quality floors + admission control
+# ---------------------------------------------------------------------------
+
+def test_quality_floor_shed_and_rung_clamp():
+    eng, _, _ = make_engine(ladder_spec=LADDER3, max_batch=1)
+    eng.store.set_rung("gen", 2)              # active: τ=0.2
+    eng.submit(req(0, "gen"),                 # uncapped → τ=0.2
+               req(1, "gen", max_tau=0.05),   # capped → τ=0.05 rung
+               req(2, "gen", max_tau=-0.0))   # floor met by τ=0 rung
+    eng.run_until_drained()
+    taus = {rec.rids[0]: rec.tau for rec in eng.records}
+    assert taus == {0: 0.2, 1: 0.05, 2: 0.0}
+    # a floor below every rung is shed with an explicit reason
+    eng2, _, _ = make_engine(ladder_spec=LADDER3.replace("0.0,", ""),
+                             max_batch=1)
+    eng2.submit(req(0, "gen", max_tau=0.01), req(1, "gen"))
+    res = eng2.run_until_drained()
+    assert sorted(res) == [1]
+    assert eng2.outcome(0) == ("shed", "quality_floor")
+    assert eng2.outcome(1)[0] == "done"
+    rep = eng2.report()
+    assert rep["shed"] == {"total": 1, "reasons": {"quality_floor": 1}}
+    assert rep["slo"]["offered"] == 2
+    assert rep["slo"]["goodput_fraction"] == pytest.approx(0.5)
+
+
+def test_admission_decisions_unit():
+    ctl = slo.AdmissionController(max_backlog_s=2.0, admit_priority=1.0,
+                                  aging_rate=0.0, defer_interval=1.0)
+    calm = ctl.decide(req(0, "p"), 0.0, backlog_s=1.0)
+    assert calm.action == "admit"
+    over = ctl.decide(req(1, "p"), 0.0, backlog_s=5.0)
+    assert (over.action, over.reason, over.retry_at) \
+        == ("defer", "overloaded", 1.0)
+    vip = ctl.decide(req(2, "p", priority=1), 0.0, backlog_s=5.0)
+    assert vip.action == "admit"
+    # infeasible deadline → immediate shed, regardless of load
+    late = ctl.decide(req(3, "p", deadline=3.0), 0.0, backlog_s=5.0,
+                      est_service_s=1.0)
+    assert (late.action, late.reason) == ("shed", "deadline_infeasible")
+    # overloaded AND a deferral would come back past the deadline → shed
+    doomed = ctl.decide(req(4, "p", deadline=0.8), 0.0, backlog_s=5.0)
+    assert doomed.action == "shed" or doomed.reason == "deadline_infeasible"
+
+
+def test_aging_lifts_effective_priority():
+    ctl = slo.AdmissionController(max_backlog_s=1.0, admit_priority=1.0,
+                                  aging_rate=0.5, defer_interval=1.0)
+    r = req(0, "p", arrival=0.0)
+    assert ctl.decide(r, 0.0, backlog_s=9.0).action == "defer"
+    assert ctl.decide(r, 1.0, backlog_s=9.0).action == "defer"
+    assert ctl.effective_priority(r, 2.0) == pytest.approx(1.0)
+    assert ctl.decide(r, 2.0, backlog_s=9.0).action == "admit"
+    # without aging the same request would starve forever
+    frozen = slo.AdmissionController(max_backlog_s=1.0,
+                                     admit_priority=1.0, aging_rate=0.0)
+    assert frozen.decide(r, 1000.0, backlog_s=9.0).action == "defer"
+
+
+def test_aging_prevents_starvation_end_to_end():
+    eng, _, _ = make_engine(
+        num_steps=8, entries={"full": "none"}, max_batch=1,
+        max_inflight=1,
+        admission=slo.AdmissionController(max_backlog_s=2.0,
+                                          admit_priority=1.0,
+                                          aging_rate=1.0,
+                                          defer_interval=0.5))
+    eng.submit(*[req(i, "full", priority=1) for i in range(6)],
+               req(99, "full", priority=0))
+    res = eng.run_until_drained()
+    assert 99 in res                          # aged in, not starved
+    assert len(res) == 7
+    assert eng.metrics.deferrals >= 1
+    # the low-priority request was served last
+    order = [rec.rids[0] for rec in eng.records]
+    assert order[-1] == 99
+
+
+def test_admission_sheds_infeasible_deadlines_under_step_load():
+    eng, _, _ = make_engine(
+        num_steps=8, entries={"full": "none"}, max_batch=1,
+        max_inflight=1,
+        admission=slo.AdmissionController(max_backlog_s=1e9))
+    # prime the cost model pessimistically high via one observed run
+    eng.submit(req(0, "full"))
+    eng.run_until_drained()                   # 8 virtual s → 1 s/step
+    eng.submit(req(1, "full", deadline=eng.clock.now() + 2.0),
+               req(2, "full", deadline=eng.clock.now() + 100.0))
+    res = eng.run_until_drained()
+    assert 2 in res and 1 not in res
+    assert eng.outcome(1) == ("shed", "deadline_infeasible")
+    rep = eng.report()
+    assert rep["slo"]["with_deadline"] == 2
+    assert rep["slo"]["attained"] == 1
+    assert rep["slo"]["attainment"] == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# Controller hysteresis
+# ---------------------------------------------------------------------------
+
+def test_controller_hysteresis_no_flapping_on_steady_trace():
+    c = slo.ElasticTauController(3, target_p95_wait_s=1.0, window=16,
+                                 min_samples=2, interval_s=1.0, band=0.3,
+                                 cooldown_s=2.0, settle=2)
+    t = 0.0
+    for _ in range(50):                       # steady: waits ≈ target
+        c.observe_wait(1.0, t)
+        c.update(t)
+        t += 0.5
+    assert c.history == [] and c.rung == 0
+
+
+def test_controller_ramps_up_and_settles_down():
+    c = slo.ElasticTauController(3, target_p95_wait_s=1.0, window=8,
+                                 min_samples=2, interval_s=1.0, band=0.3,
+                                 cooldown_s=2.0, settle=2)
+    t = 0.0
+    while c.rung < 2:                         # overload → ramp to top
+        c.observe_wait(5.0, t)
+        c.update(t)
+        t += 0.5
+        assert t < 30.0
+    ups = list(c.history)
+    assert [r for _, r, _ in ups] == [1, 2]   # monotone, no oscillation
+    # changes respect the cooldown
+    assert ups[1][0] - ups[0][0] >= 2.0
+    # calm traffic: needs `settle` consecutive calm windows to step down
+    down_start = t
+    while c.rung > 0:
+        c.observe_wait(0.1, t)
+        c.update(t)
+        t += 0.5
+        assert t < down_start + 60.0
+    rungs = [r for _, r, _ in c.history]
+    assert rungs == [1, 2, 1, 0]              # up, up, down, down — no flap
+
+
+# ---------------------------------------------------------------------------
+# Elastic end-to-end on the fake executor
+# ---------------------------------------------------------------------------
+
+def test_elastic_controller_moves_rungs_under_overload():
+    ctrl = slo.ElasticTauController(3, target_p95_wait_s=2.0, window=16,
+                                    min_samples=2, interval_s=0.5,
+                                    band=0.25, cooldown_s=1.0, settle=2)
+    eng, _, ex = make_engine(
+        ladder_spec=LADDER3, num_steps=8, max_batch=2, max_inflight=2,
+        scheduler=slo.ElasticPolicy(ctrl))
+    eng.submit(*[req(i, "gen", arrival=0.0, deadline=200.0)
+                 for i in range(24)])
+    res = eng.run_until_drained()
+    assert len(res) == 24
+    assert ctrl.history, "overload must trigger rung changes"
+    assert eng.store.ladder("gen").active > 0
+    rep = eng.report()
+    assert len(rep["realized_tau"]) >= 2      # served at multiple rungs
+    # τ is a traced argument of the fused program: all τ>0 rungs share
+    # one program per batch shape, τ=0 compiles its own skip-table
+    # variant — so ≤ 2 fused programs per bucket, and within budget
+    buckets = {p[3] for p in ex._programs if p[0] == "fused"}
+    assert ex.compiled_variant_count("fused") <= 2 * len(buckets)
+    assert rep["compiles"]["xla_programs"] <= rep["program_budget"]
+    # quality cost is predicted from the shared proxy map
+    assert rep["predicted_quality_cost"]["n"] == 24
+
+
+def test_metrics_empty_and_shed_only_report():
+    m = serve.ServerMetrics()
+    rep = m.report()                          # nothing observed at all
+    assert rep["requests"] == 0
+    assert rep["slo"]["attainment"] is None
+    assert rep["predicted_quality_cost"]["n"] == 0
+    m.observe_shed(req(0, "p", deadline=1.0), "overloaded", 2.0)
+    rep = m.report()                          # sheds only, zero finishes
+    assert rep["shed"]["total"] == 1
+    assert rep["slo"] == {
+        "with_deadline": 1, "attained": 0, "attainment": 0.0,
+        "good_requests": 0, "offered": 1, "goodput_fraction": 0.0}
+
+
+def test_queue_take_rids_and_resubmit():
+    clock = serve.VirtualClock()
+    q = serve.RequestQueue(clock)
+    rs = [req(i, "p", arrival=0.0) for i in range(4)]
+    for r in rs:
+        q.submit(r)
+    taken = q.take_rids("p", [2, 0], now=0.0)
+    assert [r.rid for r in taken] == [0, 2]   # ready order preserved
+    assert [r.rid for r in q.peek("p", 0.0)] == [1, 3]
+    q.resubmit(taken[0], not_before=5.0)
+    assert [r.rid for r in q.peek("p", 4.9)] == [1, 3]
+    # back at 5.0; ready order re-sorts on (-priority, arrival, rid) and
+    # the deferred request kept its original arrival stamp
+    assert [r.rid for r in q.peek("p", 5.0)] == [0, 1, 3]
+    assert taken[0].arrival == 0.0            # wait accounting untouched
+
+
+# ---------------------------------------------------------------------------
+# End-to-end (slow): ladder rung ≡ DiffusionPipeline.generate at that τ
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_dit():
+    import jax
+    from repro import configs
+    from repro.core import diffusion
+    cfg = configs.get("dit-xl-256", "smoke")
+    params = diffusion.init_params(jax.random.PRNGKey(0), cfg)
+    params = jax.tree.map(
+        lambda a: a + 0.05 * jax.random.normal(jax.random.PRNGKey(7),
+                                               a.shape),
+        params)
+    return cfg, params
+
+
+def test_ladder_rung_bit_identical_to_generate(small_dit, tmp_path):
+    """Elastic serving pinned at a fixed rung is *bit-identical* to
+    ``DiffusionPipeline.generate`` at that τ — degradation changes which
+    rung serves, never what a rung computes."""
+    import jax
+    import jax.numpy as jnp
+    from repro import cache
+    from repro.core import solvers
+    from repro.core.executor import SmoothCacheExecutor
+
+    cfg, params = small_dit
+    steps = 6
+    calib = cache.DiffusionPipeline(
+        cfg, solvers.ddim(steps),
+        "adaptive:base=smoothcache(alpha=0.5),tau=0.3", cfg_scale=1.5)
+    calib.calibrate(params, jax.random.PRNGKey(1), 2,
+                    cond_args={"label": jnp.zeros((2,), jnp.int32)})
+    path = str(tmp_path / "adaptive.cache.json")
+    calib.save_artifact(path)
+
+    solver = solvers.ddim(steps)
+    ex = SmoothCacheExecutor(cfg, solver, cfg_scale=1.5)
+    store = serve.ArtifactStore(cfg, solver, cfg_scale=1.5)
+    ladder = store.add_ladder("gen", path, taus=[0.0, 0.3])
+    assert ladder.taus == (0.0, 0.3)
+
+    # a pinned controller (huge target + unreachable sample count) keeps
+    # the active rung fixed for the whole run
+    ctrl = slo.ElasticTauController(2, target_p95_wait_s=1e9,
+                                    min_samples=10**6, start_rung=1)
+    store.set_rung("gen", 1)                  # τ=0.3
+    eng = serve.ServeEngine(ex, params, store, max_batch=2,
+                            max_inflight=2, clock=serve.VirtualClock(),
+                            scheduler=slo.ElasticPolicy(ctrl), check=True)
+    eng.submit(*[serve.Request(rid=i, seed=100 + i, policy="gen",
+                               label=i % cfg.num_classes, arrival=0.0,
+                               slo=slo.SLO(deadline=1e9))
+                 for i in range(3)])
+    res = eng.run_until_drained()
+    assert sorted(res) == [0, 1, 2]
+    assert all(rec.group == "gen/tau=0.3" and rec.tau == 0.3
+               for rec in eng.records)
+
+    rep = eng.report()
+    assert rep["compiles"]["xla_programs"] <= rep["program_budget"]
+    assert rep["slo"]["attainment"] == 1.0
+    assert set(rep["realized_tau"]) == {"0.3"}
+
+    # replay every batch through the pipeline facade at the rung's τ
+    pipe = cache.DiffusionPipeline(
+        cfg, solvers.ddim(steps),
+        "adaptive:base=smoothcache(alpha=0.5),tau=0.3", cfg_scale=1.5)
+    pipe.load_artifact(CacheArtifact.load(path).at_tau(0.3))
+    for rec in eng.records:
+        key = serve.batch_key(rec.seeds)
+        lab = jnp.asarray(rec.labels, jnp.int32)
+        x, dec = pipe.generate(params, key, rec.bucket, label=lab,
+                               return_decisions=True)
+        assert dec == rec.decisions
+        for j, rid in enumerate(rec.rids):
+            np.testing.assert_array_equal(np.asarray(x[j]), res[rid])
