@@ -19,6 +19,7 @@ MODULES = [
     ("adaptive", "benchmarks.adaptive_bench"),
     ("serve", "benchmarks.serve_bench"),
     ("slo", "benchmarks.slo_bench"),
+    ("resilience", "benchmarks.resilience_bench"),
     ("table2", "benchmarks.table2_video"),
     ("table3", "benchmarks.table3_audio"),
     ("kernels", "benchmarks.kernel_bench"),

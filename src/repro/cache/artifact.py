@@ -22,10 +22,15 @@ from repro.cache import registry
 from repro.cache.policy import CachePolicy
 from repro.core import plan as plan_lib
 from repro.core.schedule import Schedule
+from repro.resilience.integrity import (CHECKSUM_KEY, payload_checksum,
+                                        verify_payload)
 
 # v2: adds the optional ``adaptive`` payload (tau + fitted proxy→error map
-# + candidate pool provenance); v1 artifacts load unchanged
-FORMAT_VERSION = 2
+# + candidate pool provenance); v3: embeds a content checksum (verified on
+# load — on-disk corruption fails loudly instead of serving a mangled
+# schedule) and encodes ±Inf curve values explicitly ("Infinity" /
+# "-Infinity" strings; NaN stays null).  v1/v2 artifacts load unchanged.
+FORMAT_VERSION = 3
 
 _UNSET = object()
 
@@ -88,6 +93,15 @@ class CacheArtifact:
         Pass only the facts you want checked; ``cfg_scale`` is compared
         only when the artifact recorded one (legacy artifacts without the
         key are tolerated)."""
+        # diverged calibration: an ±Inf mean-error entry means the curve
+        # fit blew up — such a schedule must never serve (NaN entries are
+        # legitimate: lag k > step s is structurally unmeasurable)
+        for t, c in sorted(self.curves.items()):
+            if np.isinf(np.asarray(c)).any():
+                raise ValueError(
+                    f"artifact curve for layer type {t!r} contains "
+                    "non-finite (±Inf) mean-error values — the "
+                    "calibration diverged; recalibrate before serving")
         if arch is not None and self.arch != arch:
             raise ValueError(f"artifact was calibrated on {self.arch!r}, "
                              f"pipeline runs {arch!r}")
@@ -151,13 +165,22 @@ class CacheArtifact:
     # -- (de)serialization ---------------------------------------------------
 
     def to_json(self) -> str:
+        def enc(v):
+            # NaN (lag k > step s entries) → null; ±Inf → explicit string
+            # tags (strict JSON has no Infinity literal, and
+            # ``allow_nan=False`` would otherwise die with an opaque
+            # ValueError); finite floats round-trip exactly via
+            # shortest-roundtrip repr
+            if np.isnan(v):
+                return None
+            if np.isinf(v):
+                return "Infinity" if v > 0 else "-Infinity"
+            return v
+
         def rows(c):
-            # NaN (lag k > step s entries) → null, keeping the file strict
-            # JSON for non-Python consumers; finite floats round-trip
-            # exactly via shortest-roundtrip repr
-            return [[None if np.isnan(v) else v for v in row]
+            return [[enc(v) for v in row]
                     for row in np.asarray(c, np.float64).tolist()]
-        return json.dumps({
+        payload = {
             "format_version": FORMAT_VERSION,
             "arch": self.arch,
             "solver": self.solver,
@@ -169,7 +192,11 @@ class CacheArtifact:
             "plan": self.plan,
             "adaptive": self.adaptive,
             "meta": self.meta,
-        }, sort_keys=True, allow_nan=False)
+        }
+        # content checksum over the canonical payload — from_json verifies
+        # it, so every load/reload path detects on-disk corruption
+        payload[CHECKSUM_KEY] = payload_checksum(payload)
+        return json.dumps(payload, sort_keys=True, allow_nan=False)
 
     @staticmethod
     def from_json(s: str) -> "CacheArtifact":
@@ -178,14 +205,33 @@ class CacheArtifact:
         if ver > FORMAT_VERSION:
             raise ValueError(f"artifact format v{ver} is newer than this "
                              f"code (v{FORMAT_VERSION})")
+        # integrity first: a checksum-carrying payload that does not hash
+        # to its own checksum is corrupt — refuse before interpreting any
+        # field (pre-v3 payloads without a checksum pass through)
+        verify_payload(d)
         sch = d.get("schedule")
-        def arr(c):
-            return np.asarray([[np.nan if v is None else float(v)
-                                for v in row] for row in c], np.float64)
+
+        def val(v, t):
+            if v is None:
+                return np.nan
+            if isinstance(v, str):
+                if v == "Infinity":
+                    return np.inf
+                if v == "-Infinity":
+                    return -np.inf
+                raise ValueError(
+                    f"artifact curve for layer type {t!r} contains "
+                    f"unrecognized value {v!r} — expected a float, null "
+                    "(NaN), or \"Infinity\"/\"-Infinity\"")
+            return float(v)
+
+        def arr(c, t):
+            return np.asarray([[val(v, t) for v in row] for row in c],
+                              np.float64)
         return CacheArtifact(
             arch=d["arch"], solver=d["solver"], num_steps=d["num_steps"],
             policy=d["policy"],
-            curves={t: arr(c) for t, c in d.get("curves", {}).items()},
+            curves={t: arr(c, t) for t, c in d.get("curves", {}).items()},
             schedule=(Schedule.from_json(json.dumps(sch))
                       if sch is not None else None),
             plan=d.get("plan"),

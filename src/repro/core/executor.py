@@ -45,6 +45,15 @@ from repro.core import diffusion, plan as plan_lib, schedule as schedule_lib
 from repro.core.solvers import Solver
 
 
+def _rows_finite(x):
+    """Per-sample ``isfinite`` reduction of a latent batch: ``(B,)`` bool,
+    True where row ``i`` contains no NaN/Inf.  Rows of a batch never mix
+    (attention is within-sample, CFG splits per sample), so this is the
+    exact poisoned-sample mask — the numerical-health sentinel folded into
+    the sampling carries."""
+    return jnp.all(jnp.isfinite(x).reshape(x.shape[0], -1), axis=1)
+
+
 def merge_branch_caches(cfg: ModelConfig, computed, old):
     """Fill skipped branches from the previous cache → full-structure cache
     (the eager path's collect-everything merge)."""
@@ -142,6 +151,10 @@ class RunState:
     label: Any = None
     memory: Any = None
     structs: Any = None                      # branch ShapeDtypeStructs
+    #: (B,) bool device array — per-sample numerical health, carried
+    #: through the segment programs (never synced per step; read it at
+    #: advance boundaries)
+    healthy: Any = None
 
     @property
     def done(self) -> bool:
@@ -192,6 +205,9 @@ class AdaptiveRunState:
     k_max: int
     label: Any = None
     memory: Any = None
+    #: (B,) bool device array — per-sample numerical health (also folds
+    #: in the decision accumulator's finiteness)
+    healthy: Any = None
 
     @property
     def done(self) -> bool:
@@ -231,6 +247,10 @@ class FusedAdaptiveRunState:
     coeff_b: Any                             # (T,) float32
     label: Any = None
     memory: Any = None
+    #: (B,) bool device array — per-sample numerical health, part of the
+    #: fused loop carry (acc finiteness folded in), so divergence
+    #: detection costs zero extra host syncs
+    healthy: Any = None
 
     @property
     def done(self) -> bool:
@@ -436,9 +456,10 @@ class SmoothCacheExecutor:
         solver = self.solver
         skip, collect, live = sig.skip, sig.collect, sig.structure
 
-        def fn(params, x, state, cache, start, length, kloop, label, memory):
+        def fn(params, x, state, cache, healthy, start, length, kloop,
+               label, memory):
             def body(i, carry):
-                x, state, cache = carry
+                x, state, cache, healthy = carry
                 t = jnp.full((x.shape[0],), solver.model_times[i])
                 pred, cache = self._sig_step(params, x, t, label, memory,
                                              cache, skip=skip,
@@ -446,13 +467,15 @@ class SmoothCacheExecutor:
                 kstep = (jax.random.fold_in(kloop, i)
                          if solver.stochastic else None)
                 x, state = solver.step(x, pred, i, state, kstep)
-                return (x, state, cache)
+                # health sentinel rides the carry — no host traffic
+                healthy = healthy & _rows_finite(x)
+                return (x, state, cache, healthy)
 
             return jax.lax.fori_loop(start, start + length, body,
-                                     (x, state, cache))
+                                     (x, state, cache, healthy))
 
         if self._jit:
-            donate = (1, 2, 3) if self._donate else ()
+            donate = (1, 2, 3, 4) if self._donate else ()
             fn = jax.jit(fn, donate_argnums=donate)
         self._fns[key] = fn
         return fn
@@ -570,6 +593,24 @@ class SmoothCacheExecutor:
         self._fns["decide"] = fn
         return fn
 
+    def _get_health_fn(self):
+        """Boundary health update for the paths whose loop body is not one
+        fused program (non-scannable segments, host-dispatched adaptive
+        steps): fold the latent's per-row finiteness — and the decision
+        accumulator's, when there is one — into the carried flags.  Stays
+        on device; nothing syncs here.  (Not a model program: excluded
+        from ``MODEL_PROGRAM_KINDS`` and the compile budget.)"""
+        if "health" in self._fns:
+            return self._fns["health"]
+
+        def fn(healthy, x, acc):
+            return healthy & _rows_finite(x) & jnp.all(jnp.isfinite(acc))
+
+        if self._jit:
+            fn = jax.jit(fn)
+        self._fns["health"] = fn
+        return fn
+
     # -- fused adaptive program ---------------------------------------------
 
     def _get_fused_fn(self, table: plan_lib.SwitchTable, runtime: bool):
@@ -601,7 +642,7 @@ class SmoothCacheExecutor:
         n_types = len(types)
         weights = jnp.asarray([1 << i for i in range(n_types)], jnp.int32)
 
-        def fn(params, x, x_prev, state, cache, acc, lag, trace,
+        def fn(params, x, x_prev, state, cache, acc, lag, trace, healthy,
                start, length, kloop, label, memory, a, b, tau, k_max,
                skip_table):
             def make_branch(sig):
@@ -614,7 +655,7 @@ class SmoothCacheExecutor:
             branches = [make_branch(sig) for sig in table.branches]
 
             def body(s, carry):
-                x, x_prev, state, cache, acc, lag, trace = carry
+                x, x_prev, state, cache, acc, lag, trace, healthy = carry
                 if runtime:
                     proxy = calibration.rel_l1_change(x, x_prev)
                     bits, acc, lag = calibration.runtime_rule(
@@ -630,16 +671,21 @@ class SmoothCacheExecutor:
                          if solver.stochastic else None)
                 x_next, state = solver.step(x, pred, s, state, kstep)
                 trace = trace.at[s].set(bits)
-                return (x_next, x, state, cache, acc, lag, trace)
+                # health sentinel in the carry: poisoned latents and a
+                # runaway/NaN accumulator both flip the flags — still
+                # zero host syncs inside the loop
+                healthy = (healthy & _rows_finite(x_next)
+                           & jnp.all(jnp.isfinite(acc)))
+                return (x_next, x, state, cache, acc, lag, trace, healthy)
 
             return jax.lax.fori_loop(
                 start, start + length, body,
-                (x, x_prev, state, cache, acc, lag, trace))
+                (x, x_prev, state, cache, acc, lag, trace, healthy))
 
         if self._jit:
             # donate everything the successor state replaces; kloop /
             # label / memory / coefficients are reused across chunks
-            donate = (1, 2, 3, 4, 5, 6, 7) if self._donate else ()
+            donate = (1, 2, 3, 4, 5, 6, 7, 8) if self._donate else ()
             fn = jax.jit(fn, donate_argnums=donate)
         self._fns[key] = fn
         return fn
@@ -718,7 +764,8 @@ class SmoothCacheExecutor:
             x=x, state=self.solver.init_state(),
             cache=empty_branch_cache(self.cfg), kloop=kloop, plan=plan,
             run_index=0, label=label, memory=memory,
-            structs=self._branch_structs(params, x, label, memory))
+            structs=self._branch_structs(params, x, label, memory),
+            healthy=jnp.ones((batch,), jnp.bool_))
 
     def advance_run(self, params, rs: RunState, *,
                     check: bool = False) -> RunState:
@@ -733,11 +780,15 @@ class SmoothCacheExecutor:
         run = rs.plan.runs[rs.run_index]
         x, state, kloop = rs.x, rs.state, rs.kloop
         label, memory = rs.label, rs.memory
+        healthy = rs.healthy
+        if healthy is None:                  # pre-sentinel state: assume ok
+            healthy = jnp.ones((x.shape[0],), jnp.bool_)
         cache = self._enter_run_cache(rs.cache, run.sig, rs.structs)
         if self.solver.scannable:
             fn = self._get_sig_loop_fn(run.sig)
-            x, state, cache = fn(params, x, state, cache, run.start,
-                                 run.length, kloop, label, memory)
+            x, state, cache, healthy = fn(params, x, state, cache, healthy,
+                                          run.start, run.length, kloop,
+                                          label, memory)
         else:
             solver_step = self._get_solver_step()
             fn = self._get_sig_model_fn(run.sig)
@@ -746,6 +797,11 @@ class SmoothCacheExecutor:
                 pred, cache = fn(params, x, t, label, memory, cache)
                 x, state = solver_step(x, pred, s, state,
                                        jax.random.fold_in(kloop, s))
+            # NaN/Inf persists in the latent through solver steps, so one
+            # boundary check catches any step of the segment (on device,
+            # no sync)
+            healthy = self._get_health_fn()(healthy, x,
+                                            jnp.zeros((0,), jnp.float32))
         # exact liveness at the boundary: entries the next segment does
         # not read are dead — drop them (free: a Python restructure;
         # donation already recycled their buffers)
@@ -761,7 +817,8 @@ class SmoothCacheExecutor:
                 f"[{run.start}, {run.start + run.length}): resident "
                 f"{sorted(got)} != live {sorted(expect)}")
         return dataclasses.replace(rs, x=x, state=state, cache=cache,
-                                   run_index=rs.run_index + 1)
+                                   run_index=rs.run_index + 1,
+                                   healthy=healthy)
 
     def sample_with_plan(self, params, key, batch: int, *,
                          plan: plan_lib.ExecutionPlan, schedule=None,
@@ -906,7 +963,8 @@ class SmoothCacheExecutor:
             decisions=(), schedule=schedule, tau=tau, proxy_map=proxy_map,
             by_skipset=by_skipset, pool_types=pool_types,
             coeff_a=coeff_a, coeff_b=coeff_b, k_max=int(k_max),
-            label=label, memory=memory)
+            label=label, memory=memory,
+            healthy=jnp.ones((batch,), jnp.bool_))
 
     def advance_adaptive_run(self, params,
                              rs: AdaptiveRunState) -> AdaptiveRunState:
@@ -947,9 +1005,14 @@ class SmoothCacheExecutor:
         pred, cache = fn(params, x, t_arr, rs.label, rs.memory, rs.cache)
         x_next, state = self._get_solver_step()(
             x, pred, s, rs.state, jax.random.fold_in(rs.kloop, s))
+        healthy = rs.healthy
+        if healthy is None:                  # pre-sentinel state: assume ok
+            healthy = jnp.ones((x.shape[0],), jnp.bool_)
+        # on-device fold — does NOT join the per-step decision sync above
+        healthy = self._get_health_fn()(healthy, x_next, acc)
         return dataclasses.replace(
             rs, x=x_next, state=state, cache=cache, step=s + 1, x_prev=x,
-            acc=acc, lag=lag,
+            acc=acc, lag=lag, healthy=healthy,
             decisions=rs.decisions + (tuple(sorted(skipset)),))
 
     # -- fused adaptive sampling (decision + dispatch on device) -------------
@@ -1033,7 +1096,8 @@ class SmoothCacheExecutor:
             kloop=kloop, step=0, schedule=schedule, tau=tau,
             k_max=int(k_max), table=table, runtime=runtime,
             skip_table=skip_table, coeff_a=coeff_a, coeff_b=coeff_b,
-            label=label, memory=memory)
+            label=label, memory=memory,
+            healthy=jnp.ones((batch,), jnp.bool_))
 
     def advance_adaptive_fused(self, params, rs: FusedAdaptiveRunState,
                                n_steps: Optional[int] = None
@@ -1052,13 +1116,17 @@ class SmoothCacheExecutor:
         if length < 1:
             raise ValueError(f"n_steps must be >= 1, got {n_steps}")
         fn = self._get_fused_fn(rs.table, rs.runtime)
-        x, x_prev, state, cache, acc, lag, trace = fn(
+        healthy = rs.healthy
+        if healthy is None:                  # pre-sentinel state: assume ok
+            healthy = jnp.ones((rs.x.shape[0],), jnp.bool_)
+        x, x_prev, state, cache, acc, lag, trace, healthy = fn(
             params, rs.x, rs.x_prev, rs.state, rs.cache, rs.acc, rs.lag,
-            rs.trace, rs.step, length, rs.kloop, rs.label, rs.memory,
-            rs.coeff_a, rs.coeff_b, rs.tau, rs.k_max, rs.skip_table)
+            rs.trace, healthy, rs.step, length, rs.kloop, rs.label,
+            rs.memory, rs.coeff_a, rs.coeff_b, rs.tau, rs.k_max,
+            rs.skip_table)
         return dataclasses.replace(
             rs, x=x, x_prev=x_prev, state=state, cache=cache, acc=acc,
-            lag=lag, trace=trace, step=rs.step + length)
+            lag=lag, trace=trace, step=rs.step + length, healthy=healthy)
 
     # -- whole-sampler lowering (for FLOP / roofline accounting) ------------
 

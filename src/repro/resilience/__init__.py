@@ -1,0 +1,24 @@
+"""repro.resilience — fault taxonomy, recovery policy, artifact
+integrity, and deterministic fault injection for the serving stack.
+
+Layering: this package sits *below* ``repro.serve`` — nothing here
+imports the engine, store, batcher, or slo layer.  The serving stack
+imports from here (``serve.store`` uses :mod:`~repro.resilience.integrity`,
+``serve.engine`` consumes :class:`BatchFault` and
+:class:`ResiliencePolicy`); the chaos harness wraps executors and clocks
+from the outside.
+"""
+from repro.resilience.faults import (ARTIFACT, INJECTED, KINDS, NAN_LATENT,
+                                     STUCK_BATCH, BatchFault)
+from repro.resilience.recovery import ResiliencePolicy, RetryPolicy
+from repro.resilience.integrity import (HealthRegistry, payload_checksum,
+                                        verify_payload)
+from repro.resilience.chaos import (ChaosClock, ChaosExecutor, ChaosRun,
+                                    FaultPlan, FaultSpec, corrupt_artifact)
+
+__all__ = [
+    "ARTIFACT", "INJECTED", "KINDS", "NAN_LATENT", "STUCK_BATCH",
+    "BatchFault", "ResiliencePolicy", "RetryPolicy", "HealthRegistry",
+    "payload_checksum", "verify_payload", "ChaosClock", "ChaosExecutor",
+    "ChaosRun", "FaultPlan", "FaultSpec", "corrupt_artifact",
+]

@@ -51,6 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.resilience.faults import NAN_LATENT, STUCK_BATCH, BatchFault
 from repro.serve.batcher import MicroBatch, MicroBatcher, bucket_sizes
 from repro.serve.metrics import ServerMetrics
 from repro.serve.request import Request, RequestQueue, WallClock
@@ -112,6 +113,12 @@ class _Inflight:
     kind: str                                 # "plan" | "adaptive" | "eager"
     rs: object
     label: object
+    #: per-row health known so far (np bool, True = healthy); None = all
+    #: healthy.  Monotone: a poisoned row never recovers mid-run.
+    taint: object = None
+    #: exclude this batch's service time from the cost-model EWMA (it
+    #: faulted / stalled — retries must not poison admission estimates)
+    cost_excluded: bool = False
 
 
 class ServeEngine:
@@ -121,7 +128,8 @@ class ServeEngine:
                  clock=None, max_batch: int = 8, max_wait: float = 0.0,
                  max_inflight: int = 2, scheduler="interleave",
                  adaptive_chunk: int = 4, eager: bool = False,
-                 check: bool = False, admission=None, cost_model=None):
+                 check: bool = False, admission=None, cost_model=None,
+                 resilience=None):
         # lazy so repro.serve stays importable without the slo layer
         # loaded (and the layering acyclic: slo never imports the engine)
         from repro.slo.admission import LoadEstimator, ServiceCostModel
@@ -153,33 +161,54 @@ class ServeEngine:
         self.adaptive_chunk = adaptive_chunk
         self.eager = eager
         self.check = check
+        #: repro.resilience.ResiliencePolicy, or None — None keeps the
+        #: exact pre-resilience behavior: no health reads, no watchdog,
+        #: BatchFaults propagate, the stall guard raises
+        self.resilience = resilience
+        if resilience is not None and resilience.entry_fault_threshold \
+                is not None:
+            store.health.fault_threshold = resilience.entry_fault_threshold
         self.results: Dict[int, np.ndarray] = {}
         self.records: List[BatchRecord] = []
         self.shed: Dict[int, Tuple[str, float]] = {}   # rid → (reason, t)
         self._inflight: List[_Inflight] = []
         self._rids: set = set()               # every rid ever submitted
-        self._sweep_needed = admission is not None
+        self._attempts: Dict[int, int] = {}   # rid → fault retry count
+        self._requeues: Dict[int, int] = {}   # rid → survivor re-queues
+        self._level: Dict[int, int] = {}      # rid → degradation level
+        self._origin: Dict[int, str] = {}     # rid → group first submitted
+        self._sweep_needed = (admission is not None
+                              or resilience is not None)
 
     # -- submission ----------------------------------------------------------
 
     def submit(self, *reqs: Request) -> None:
-        """Enqueue requests (arrival stamped now unless preset).  Unknown
-        policy names are rejected at the door, not at batch formation."""
-        seen = set()
+        """Enqueue requests (arrival stamped now unless preset).
+
+        Invalid submissions become *reasoned outcomes*, never exceptions
+        that would kill a serving loop mid-stream: an unknown policy name
+        is recorded as a ``no_entry`` shed (``outcome(rid)`` reports it),
+        and a duplicate rid — against *every* rid ever submitted (queued,
+        in flight, done, or earlier in this very call), since a duplicate
+        would silently overwrite its sibling's result — is dropped and
+        counted, leaving the original request's outcome untouched."""
+        now = self.clock.now()
+        accepted = []
         for r in reqs:
+            if r.rid in self._rids:
+                self.metrics.observe_reject("duplicate_rid")
+                continue
             if r.policy not in self.store:
-                raise KeyError(f"request {r.rid}: no servable entry "
-                               f"{r.policy!r}; have {self.store.names()}")
-            # against *every* rid ever submitted (queued, in flight, done,
-            # or earlier in this very call), not just completed ones — a
-            # duplicate would silently overwrite its sibling's result
-            if r.rid in self._rids or r.rid in seen:
-                raise ValueError(f"duplicate request id {r.rid}")
-            seen.add(r.rid)
+                self._rids.add(r.rid)
+                self.shed[r.rid] = ("no_entry", now)
+                self.metrics.observe_shed(r, "no_entry", now)
+                self.metrics.observe_reject("no_entry")
+                continue
+            self._rids.add(r.rid)
+            accepted.append(r)
             if getattr(r, "max_tau", None) is not None:
                 self._sweep_needed = True
-        self._rids |= seen
-        self.queue.submit_many(list(reqs))
+        self.queue.submit_many(accepted)
 
     def outcome(self, rid: int):
         """Explicit fate of a submitted request — requests are never
@@ -224,7 +253,12 @@ class ServeEngine:
             for r in self.queue.peek(g, now):
                 entry = self.store.resolve_entry_for(g, r)
                 if entry is None:
-                    self._shed(r, "quality_floor", now)
+                    # distinguish "this entry was marked unhealthy by the
+                    # fault registry" from "no rung satisfies the floor"
+                    reason = ("unhealthy_entry"
+                              if not self.store.health.is_servable(g)
+                              else "quality_floor")
+                    self._shed(r, reason, now)
                     continue
                 if self.admission is None:
                     continue
@@ -312,15 +346,176 @@ class ServeEngine:
                 self.params, key, fl.mb.bucket, schedule=entry.schedule,
                 label=fl.label)
 
+    # -- fault handling (degrade, don't die) ---------------------------------
+
+    def _read_health(self, fl: _Inflight):
+        """Merge the run state's sentinel flags into the in-flight taint
+        record.  Returns the merged (B,) bool array, or None when neither
+        the sentinels nor the chaos harness flagged anything.  Newly
+        poisoned rows are counted as one fault event against the group."""
+        flags = getattr(fl.rs, "healthy", None)
+        if flags is None:
+            return fl.taint
+        cur = np.asarray(jax.device_get(flags)).astype(bool)
+        if fl.taint is not None:
+            cur = cur & fl.taint
+        prev = fl.taint
+        newly = (~cur) if prev is None else (prev & ~cur)
+        if newly.any():
+            self.metrics.observe_fault(fl.mb.group, NAN_LATENT)
+            self.store.report_fault(fl.mb.group, NAN_LATENT)
+        fl.taint = cur
+        return cur
+
+    def _fault_abort(self, fl: _Inflight, kind: str, sample_flags,
+                     now: float, *, count: bool = True) -> None:
+        """Abandon an in-flight batch after a fault.  Rows flagged healthy
+        (per-sample resolution) or all rows (no resolution) *survive*:
+        they re-queue at their original arrival time (``resubmit`` never
+        touches ``arrival``, so queue-wait accounting keeps charging from
+        first arrival).  Poisoned rows go down the degradation ladder via
+        :meth:`_retry_or_fail`.  Survivors that keep landing in aborted
+        batches are bounded too — past the retry budget they join the
+        fault path instead of looping forever."""
+        mb = fl.mb
+        if count:
+            self.metrics.observe_fault(mb.group, kind)
+            self.store.report_fault(mb.group, kind)
+        flags = sample_flags if sample_flags is not None else fl.taint
+        budget = self.resilience.retry.max_retries
+        for j, r in enumerate(mb.requests):
+            ok = True if flags is None else bool(flags[j])
+            if not ok:
+                self._retry_or_fail(r, kind, now)
+                continue
+            n = self._requeues.get(r.rid, 0) + 1
+            self._requeues[r.rid] = n
+            if n > budget + 1:
+                # repeatedly a bystander of dying batches — stop looping
+                self._retry_or_fail(r, kind, now)
+            else:
+                r.started = None
+                self.queue.resubmit(r, now)
+                self.metrics.observe_requeue(1)
+
+    def _retry_or_fail(self, r: Request, kind: str, now: float) -> None:
+        """Bounded retry of one faulted request, stepping down the
+        degradation ladder (current rung → τ=0 → no_cache) with
+        deterministic backoff; past the budget the request ends as a
+        reasoned terminal outcome (``fault:<kind>``), counted like any
+        shed — never a crash, never a silent drop."""
+        pol = self.resilience
+        att = self._attempts.get(r.rid, 0) + 1
+        self._attempts[r.rid] = att
+        if att > pol.retry.max_retries:
+            self.shed[r.rid] = (f"fault:{kind}", now)
+            self.metrics.observe_shed(r, f"fault:{kind}", now)
+            return
+        origin = self._origin.setdefault(r.rid, r.policy)
+        if pol.degrade:
+            level = self._level.get(r.rid, 0) + 1
+            target = self.store.degraded_entry_name(origin, level)
+            if target is None:    # no τ=0 form for this group: skip a rung
+                level = 2
+                target = self.store.degraded_entry_name(origin, level)
+            self._level[r.rid] = level
+            if target != r.policy:
+                r.policy = target
+                self.metrics.observe_degrade(r)
+        r.started = None
+        self.metrics.observe_retry(r)
+        self.queue.resubmit(r, now + pol.retry.delay(att, r.rid))
+
+    def _stall_shed(self, reason: str, now: float) -> None:
+        """Degrade-don't-die replacement for the stall guard: every queued
+        request gets an explicit shed outcome instead of the engine
+        raising out of its serving loop."""
+        for r in self.queue.drain_all():
+            self.shed[r.rid] = (reason, now)
+            self.metrics.observe_shed(r, reason, now)
+
+    def _watchdog_deadline(self, steps: int, group: str) -> float:
+        pol = self.resilience
+        est = self.cost_model.estimate(max(int(steps), 1), group=group)
+        return est * pol.watchdog_factor + pol.watchdog_floor_s
+
+    def _advance_guarded(self, i: int, fl: _Inflight) -> bool:
+        """Advance under the fault net: a ``BatchFault`` raised
+        mid-advance, a blown watchdog deadline, or sentinel-flagged rows
+        all route into the recovery path instead of propagating.  Returns
+        True when the batch was aborted (``fl`` removed from flight)."""
+        from repro.slo.slo import remaining_steps
+        pol = self.resilience
+        before = self.clock.now()
+        steps_before = remaining_steps(fl.rs)
+        try:
+            self._advance(fl)
+        except BatchFault as bf:
+            self._inflight.pop(i)
+            self._fault_abort(fl, bf.kind, bf.sample_flags,
+                              self.clock.now())
+            return True
+        after = self.clock.now()
+        if pol.watchdog_factor is not None:
+            steps_adv = steps_before - remaining_steps(fl.rs)
+            if after - before > self._watchdog_deadline(steps_adv,
+                                                        fl.mb.group):
+                if fl.rs.done:
+                    # too late to re-queue — deliver, but keep the stall
+                    # out of the cost model and on the books
+                    fl.cost_excluded = True
+                    self.metrics.observe_fault(fl.mb.group, STUCK_BATCH)
+                    self.store.report_fault(fl.mb.group, STUCK_BATCH)
+                else:
+                    self._inflight.pop(i)
+                    self._fault_abort(fl, STUCK_BATCH, None, after)
+                    return True
+        flags = self._read_health(fl)
+        if flags is not None and not flags.any() and not fl.rs.done:
+            # every row is poisoned — nothing left worth carrying to the
+            # finish line (already counted by _read_health)
+            self._inflight.pop(i)
+            self._fault_abort(fl, NAN_LATENT, flags, after, count=False)
+            return True
+        return False
+
     def _finish(self, fl: _Inflight) -> None:
         mb, rs = fl.mb, fl.rs
         x = jax.block_until_ready(rs.x)
         done = self.clock.now()
         x = np.asarray(x)
+        # service time of the whole batch, snapshotted before any faulted
+        # row's re-queue resets its start stamp
+        service = done - mb.requests[0].started
+        flags = None
+        if self.resilience is not None:
+            # rows are computationally independent (attention is within-
+            # sample, CFG splits per sample), so a poisoned row never
+            # contaminates its neighbors: deliver the healthy rows —
+            # bit-identical to an uninjected run — and send only the
+            # poisoned ones down the ladder
+            finite = np.isfinite(x.reshape(x.shape[0], -1)).all(axis=1)
+            flags = finite if fl.taint is None else (fl.taint & finite)
+            if flags.all():
+                flags = None
+            else:
+                newly = ((~flags) if fl.taint is None
+                         else (fl.taint & ~flags))
+                if newly.any():
+                    # final-latent check found poison the sentinels had
+                    # not already counted (eager/fake paths without
+                    # carry flags)
+                    self.metrics.observe_fault(mb.group, NAN_LATENT)
+                    self.store.report_fault(mb.group, NAN_LATENT)
+        delivered = []
         for j, r in enumerate(mb.requests):
+            if flags is not None and not flags[j]:
+                self._retry_or_fail(r, NAN_LATENT, done)
+                continue
             r.finished = done
             self.results[r.rid] = x[j]
             self.metrics.observe_request(r)
+            delivered.append(r)
         entry = mb.entry
         num_types = len(entry.schedule.skip)
         decisions = getattr(rs, "decisions", None)
@@ -333,9 +528,11 @@ class ServeEngine:
                                    entry.plan.num_steps, num_types)
         # feed the calibrated per-step cost model (service time of the
         # whole batch — includes interleaving contention, which is the
-        # pessimism an admission wait estimate wants)
-        service = done - mb.requests[0].started
-        self.cost_model.observe(mb.group, service, entry.plan.num_steps)
+        # pessimism an admission wait estimate wants); faulted/stalled
+        # batches are excluded so retries don't poison admission estimates
+        if flags is None and not fl.cost_excluded:
+            self.cost_model.observe(mb.group, service,
+                                    entry.plan.num_steps)
         qcost = entry.predicted_quality_cost(decisions)
         self.metrics.observe_quality(entry.tau, qcost, n=mb.bucket)
         record = BatchRecord(
@@ -345,7 +542,9 @@ class ServeEngine:
             formed_at=mb.formed_at, finished_at=done, decisions=decisions,
             tau=entry.tau, quality_cost=qcost)
         self.records.append(record)
-        self.policy.on_finish(self, record, mb.requests, done)
+        self.policy.on_finish(self, record,
+                              delivered if flags is not None
+                              else mb.requests, done)
 
     def step(self) -> bool:
         """One scheduling tick: sweep SLOs (quality-floor sheds, admission
@@ -361,7 +560,10 @@ class ServeEngine:
             return False
         i = self.policy.select(self, now)
         fl = self._inflight[i]
-        self._advance(fl)
+        if self.resilience is None:
+            self._advance(fl)
+        elif self._advance_guarded(i, fl):
+            return True                       # batch aborted into recovery
         if fl.rs.done:
             self._inflight.pop(i)
             self._finish(fl)
@@ -387,6 +589,12 @@ class ServeEngine:
             now = self.clock.now()
             t = self.batcher.next_event(now)
             if t is None:
+                # with a resilience policy the stall guard degrades
+                # instead of dying: every stuck request becomes an
+                # explicit "stalled" shed and the drain completes
+                if self.resilience is not None:
+                    self._stall_shed("stalled", now)
+                    continue
                 raise RuntimeError(
                     "serve engine stalled: queued requests but no "
                     "schedulable event")
@@ -399,6 +607,10 @@ class ServeEngine:
                 stalled = stalled + 1 if now == last_now else 0
                 last_now = now
                 if stalled > 64:
+                    if self.resilience is not None:
+                        self._stall_shed("stalled", now)
+                        stalled = 0
+                        continue
                     raise RuntimeError(
                         f"serve engine livelocked at t={now}: "
                         f"next_event={t} never becomes schedulable")

@@ -79,6 +79,15 @@ class ServerMetrics:
         self.good = 0                         # finished ∧ deadline attained
         self.tau_counts: Dict[float, int] = {}    # realized-τ histogram
         self.quality_costs: List[float] = []  # predicted per-request cost
+        # resilience accounting: every fault, retry, survivor re-queue,
+        # ladder degradation, and rejected submission is a counted event
+        self.faults_total = 0
+        self.fault_kinds: Dict[str, int] = {}
+        self.fault_groups: Dict[str, int] = {}
+        self.retries = 0
+        self.requeued = 0                     # healthy survivors re-queued
+        self.degraded = 0                     # requests stepped down-ladder
+        self.rejects: Dict[str, int] = {}     # submit-time rejections
 
     # -- observation ---------------------------------------------------------
 
@@ -112,6 +121,34 @@ class ServerMetrics:
 
     def observe_defer(self, req: Request, now: float) -> None:
         self.deferrals += 1
+
+    # -- resilience ----------------------------------------------------------
+
+    def observe_fault(self, group: str, kind: str) -> None:
+        """One micro-batch fault (NaN latent, stuck advance, injected
+        error, …) — counted per kind and per serving group."""
+        self.faults_total += 1
+        self.fault_kinds[kind] = self.fault_kinds.get(kind, 0) + 1
+        self.fault_groups[group] = self.fault_groups.get(group, 0) + 1
+
+    def observe_retry(self, req: Request) -> None:
+        self.retries += 1
+
+    def observe_requeue(self, n: int = 1) -> None:
+        """Healthy survivors of an aborted batch put back in the queue at
+        their original arrival."""
+        self.requeued += int(n)
+
+    def observe_degrade(self, req: Request) -> None:
+        """A faulted request stepped down the degradation ladder for its
+        retry (rung → τ=0 → no_cache)."""
+        self.degraded += 1
+
+    def observe_reject(self, reason: str) -> None:
+        """A submission rejected at the door with a reasoned outcome
+        (``no_entry``, ``duplicate_rid``) instead of an engine-killing
+        exception."""
+        self.rejects[reason] = self.rejects.get(reason, 0) + 1
 
     def observe_quality(self, tau: float, quality_cost: Optional[float],
                         n: int = 1) -> None:
@@ -173,6 +210,15 @@ class ServerMetrics:
             "good_requests": self.good,
             "offered": offered,
             "goodput_fraction": (self.good / offered if offered else None),
+        }
+        out["faults"] = {
+            "total": self.faults_total,
+            "kinds": dict(sorted(self.fault_kinds.items())),
+            "groups": dict(sorted(self.fault_groups.items())),
+            "retries": self.retries,
+            "requeued": self.requeued,
+            "degraded": self.degraded,
+            "rejected_submissions": dict(sorted(self.rejects.items())),
         }
         out["realized_tau"] = {f"{t:g}": c for t, c in
                                sorted(self.tau_counts.items())}

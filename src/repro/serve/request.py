@@ -210,6 +210,18 @@ class RequestQueue:
         heapq.heappush(self._future,
                        (float(not_before), next(self._tie), req))
 
+    def drain_all(self) -> List[Request]:
+        """Remove and return every queued request (ready and future) —
+        the engine's stall-shed path: when nothing queued can ever become
+        schedulable, each drained request gets an explicit shed outcome
+        instead of an engine-killing exception."""
+        out = [req for _, _, req in sorted(self._future)]
+        self._future = []
+        for rs in self._ready.values():
+            out.extend(rs)
+        self._ready = {}
+        return out
+
     def next_arrival(self, now: Optional[float] = None) -> Optional[float]:
         """Earliest not-yet-ready arrival timestamp (None when everything
         submitted has already arrived)."""

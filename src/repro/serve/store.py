@@ -28,6 +28,12 @@ from repro.cache.policy import AdaptivePolicy, CachePolicy
 from repro.core import calibration as calibration_lib
 from repro.core import plan as plan_lib
 from repro.core.schedule import Schedule
+from repro.resilience.integrity import HealthRegistry
+
+#: reserved entry-name prefix for store-materialized degradation targets
+#: (fault-retry rungs) — not client-addressable policies
+DEGRADED_PREFIX = "!degraded/"
+FALLBACK_ENTRY = "!fallback/no_cache"
 
 
 @dataclasses.dataclass
@@ -157,12 +163,18 @@ class ArtifactStore:
     """Named servable entries validated against one deployment
     (architecture + solver + guidance scale)."""
 
-    def __init__(self, cfg, solver, *, cfg_scale: Optional[float] = None):
+    def __init__(self, cfg, solver, *, cfg_scale: Optional[float] = None,
+                 health: Optional[HealthRegistry] = None):
         self.cfg = cfg
         self.solver = solver
         self.cfg_scale = cfg_scale
         self._entries: Dict[str, ServableEntry] = {}
         self._ladders: Dict[str, TauLadder] = {}
+        #: per-entry serving-health ledger: failed hot-reloads are
+        #: quarantined here (old entry keeps serving); engine-reported
+        #: faults can mark a group unhealthy, which resolve_entry_for
+        #: honors — the registry the engine consults before formation
+        self.health = health if health is not None else HealthRegistry()
 
     # -- loading -------------------------------------------------------------
 
@@ -325,9 +337,21 @@ class ArtifactStore:
                 raise ValueError(f"entry {name!r} was not loaded from a "
                                  "path; pass the replacement explicitly")
             src = old.path
-        entry = self._build_entry(name, src, old.policy_override, strict,
-                                  version=old.version + 1)
+        try:
+            entry = self._build_entry(name, src, old.policy_override,
+                                      strict, version=old.version + 1)
+        except Exception as e:
+            # atomic failure: the old entry is still serving — record the
+            # rejected replacement (with its reason) in the quarantine
+            # ledger and re-raise for the operator
+            self.health.quarantine(
+                name, f"hot-reload rejected: {type(e).__name__}: {e}")
+            raise
         self._entries[name] = entry
+        # a good swap is a fresh start: clear any quarantine record and
+        # reset the entry's fault count / unhealthy flag
+        self.health.clear_quarantine(name)
+        self.health.mark_healthy(name)
         return entry
 
     # -- lookup --------------------------------------------------------------
@@ -366,6 +390,8 @@ class ArtifactStore:
         rung clamped down to the request's ``max_tau`` cap; for a plain
         entry, the entry itself.  None means no registered rung/entry
         satisfies the floor — the engine sheds with ``quality_floor``."""
+        if not self.health.is_servable(group):
+            return None
         cap = getattr(req, "max_tau", None)
         if group in self._ladders:
             lad = self._ladders[group]
@@ -375,11 +401,74 @@ class ArtifactStore:
                 if c is None:
                     return None
                 idx = min(idx, c)
-            return self._entries[lad.rung_names[idx]]
+            name = lad.rung_names[idx]
+            if not self.health.is_servable(name):
+                return None
+            return self._entries[name]
         entry = self.get(group)
         if cap is not None and entry.tau > cap + 1e-12:
             return None
         return entry
+
+    # -- fault handling ------------------------------------------------------
+
+    def report_fault(self, group: str, kind: str = "fault") -> bool:
+        """Engine hook: count a serving fault against ``group`` in the
+        health registry.  Returns True when this report tripped the
+        registry's threshold and the group is now unservable (the engine
+        sheds its traffic with reason ``unhealthy_entry`` until a
+        successful :meth:`reload` or ``health.mark_healthy``)."""
+        return self.health.report_fault(group, kind)
+
+    def degraded_entry_name(self, group: str,
+                            level: int) -> Optional[str]:
+        """The entry a faulted ``group`` request should retry on, one
+        ``level`` down the degradation ladder:
+
+        * level 0 — ``group`` itself (retry in place),
+        * level 1 — the τ=0 form: a ladder's τ=0 rung, or (plain adaptive
+          entries) a store-materialized ``!degraded/<group>/tau0`` entry
+          built from the artifact's ``at_tau(0.0)``; None when the group
+          has no distinct τ=0 form (static entries — skip to level 2),
+        * level ≥ 2 — the universal :data:`FALLBACK_ENTRY` (``no_cache``:
+          full compute, no reuse — the rung that cannot be poisoned by a
+          mis-calibrated schedule).
+        """
+        if level <= 0:
+            return group
+        if level == 1:
+            if group in self._ladders:
+                lad = self._ladders[group]
+                i = lad.rung_for_cap(0.0)
+                if i is not None and lad.taus[i] == 0.0:
+                    return lad.rung_names[i]
+                return None
+            entry = self.get(group)
+            if (entry.adaptive and entry.tau > 0
+                    and entry.artifact is not None):
+                dname = f"{DEGRADED_PREFIX}{group}/tau0"
+                if dname not in self._entries:
+                    pol = registry.from_config(
+                        {**dict(entry.artifact.policy), "tau": 0.0})
+                    self._entries[dname] = self._build_entry(
+                        dname, entry.artifact.at_tau(0.0), pol,
+                        strict=True, version=1)
+                return dname
+            return None
+        return self.ensure_fallback_entry()
+
+    def ensure_fallback_entry(self) -> str:
+        """Materialize (once) and name the terminal degradation rung: a
+        calibration-free ``no_cache`` entry — every layer computed every
+        step, nothing reused, nothing a bad artifact can corrupt."""
+        if FALLBACK_ENTRY not in self._entries:
+            pol = registry.get("none")
+            schedule = pol.build(self.cfg.layer_types(),
+                                 self.solver.num_steps)
+            self._entries[FALLBACK_ENTRY] = ServableEntry(
+                name=FALLBACK_ENTRY, policy=pol, schedule=schedule,
+                plan=plan_lib.analyze(schedule))
+        return FALLBACK_ENTRY
 
     def names(self) -> List[str]:
         """Real entry names (ladder rungs included, ladder aliases not —

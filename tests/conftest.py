@@ -30,6 +30,9 @@ def pytest_addoption(parser):
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: end-to-end model tests skipped under --fast")
+    config.addinivalue_line(
+        "markers", "chaos: seeded fault-injection tests (the CI chaos "
+        "lane runs `-m chaos` over the fixed seed matrix)")
 
 
 def pytest_collection_modifyitems(config, items):

@@ -1,0 +1,640 @@
+"""repro.resilience — fault injection, numerical-health sentinels, and
+degrade-don't-die recovery.
+
+Virtual-clock tests on the test_serve fakes exercise the engine's
+recovery mechanics (row isolation, survivor re-queue at original
+arrival, the degradation ladder, watchdog aborts, terminal outcomes,
+entry health), pure tests cover the policy/plan determinism and the
+artifact integrity layer, and two smoke-DiT tests prove the *real*
+executor sentinels catch an injected NaN — with the healthy co-batched
+row bit-identical to an uninjected run, and zero decision host syncs on
+the fused path."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro import serve
+from repro.cache.artifact import CacheArtifact
+from repro.resilience import (BatchFault, ChaosClock, ChaosExecutor,
+                              FaultPlan, FaultSpec, HealthRegistry,
+                              ResiliencePolicy, RetryPolicy,
+                              corrupt_artifact, payload_checksum,
+                              verify_payload)
+from repro.resilience import faults
+from repro.serve.store import DEGRADED_PREFIX, FALLBACK_ENTRY, TauLadder
+
+from test_serve import (FakeExecutor, FakeFusedExecutor, _adaptive_artifact,
+                        _static_artifact, make_store, req)
+
+
+# ---------------------------------------------------------------------------
+# Harness helpers
+# ---------------------------------------------------------------------------
+
+def chaos_engine(plan, *, store=None, num_steps=8, resilience=None,
+                 fused=False, **kw):
+    """Engine over a ChaosExecutor-wrapped fake on a virtual clock."""
+    clock = serve.VirtualClock()
+    store = store if store is not None else make_store(
+        num_steps, no_cache="none", static2="static:n=2")
+    inner = (FakeFusedExecutor if fused else FakeExecutor)(clock)
+    ex = ChaosExecutor(inner, plan, clock)
+    kw.setdefault("max_batch", 4)
+    eng = serve.ServeEngine(
+        ex, params=None, store=store, clock=clock,
+        resilience=resilience if resilience is not None
+        else ResiliencePolicy(), **kw)
+    return eng, clock
+
+
+def plain_engine(*, store=None, num_steps=8, **kw):
+    clock = serve.VirtualClock()
+    store = store if store is not None else make_store(
+        num_steps, no_cache="none", static2="static:n=2")
+    kw.setdefault("max_batch", 4)
+    eng = serve.ServeEngine(FakeExecutor(clock), params=None, store=store,
+                            clock=clock, **kw)
+    return eng, clock
+
+
+def adaptive_store(num_steps=8):
+    store = make_store(num_steps, static2="static:n=2")
+    store.add_artifact("adaptive", _adaptive_artifact(num_steps=num_steps))
+    return store
+
+
+# ---------------------------------------------------------------------------
+# NaN isolation: poisoned rows go down the ladder, survivors deliver
+# ---------------------------------------------------------------------------
+
+def test_nan_row_isolated_survivors_bit_identical_faulted_degrades():
+    """Acceptance (fake path): one poisoned row in a 4-batch — the engine
+    finishes with zero crashes, the three healthy co-batched rows are
+    bit-identical to an uninjected run, and the faulted request completes
+    via the degradation ladder (τ=0 form of its adaptive entry)."""
+    plan = FaultPlan(faults={0: FaultSpec(faults.NAN_LATENT, row=1,
+                                          chunk=1)})
+    eng, _ = chaos_engine(plan, store=adaptive_store())
+    eng.submit(*[req(i, "adaptive") for i in range(4)])
+    res = eng.run_until_drained()
+    assert sorted(res) == [0, 1, 2, 3]        # nobody crashed, nobody lost
+
+    # healthy rows delivered from the original batch, bit-identical to the
+    # same submissions served with no chaos and no resilience layer at all
+    ref, _ = plain_engine(store=adaptive_store())
+    ref.submit(*[req(i, "adaptive") for i in range(4)])
+    ref_res = ref.run_until_drained()
+    for rid in (0, 2, 3):
+        assert np.array_equal(res[rid], ref_res[rid])
+
+    # the poisoned request re-ran one rung down: τ=0 form of its entry
+    groups = [r.group for r in eng.records]
+    assert groups[0] == "adaptive"
+    assert f"{DEGRADED_PREFIX}adaptive/tau0" in groups
+    assert eng.metrics.fault_kinds == {faults.NAN_LATENT: 1}
+    assert eng.metrics.retries == 1
+    assert eng.metrics.degraded == 1
+    assert eng.metrics.requeued == 0          # survivors delivered in place
+    assert eng.outcome(1)[0] == "done"
+
+
+def test_fused_path_nan_row_isolated():
+    """Same isolation contract through the fused adaptive path (chunked
+    on-device advances, ChaosRun proxying the fused run state)."""
+    plan = FaultPlan(faults={0: FaultSpec(faults.NAN_LATENT, row=0,
+                                          chunk=1)})
+    eng, _ = chaos_engine(plan, store=adaptive_store(), fused=True,
+                          adaptive_chunk=3)
+    eng.submit(req(0, "adaptive"), req(1, "adaptive"))
+    res = eng.run_until_drained()
+    assert sorted(res) == [0, 1]
+    assert eng.metrics.fault_kinds == {faults.NAN_LATENT: 1}
+    assert eng.metrics.retries == 1
+    # the healthy row rode the original fused batch to completion
+    assert eng.records[0].group == "adaptive"
+    assert 1 in eng.records[0].rids
+
+
+def test_all_rows_poisoned_aborts_once_and_falls_back_to_no_cache():
+    """A fully poisoned batch aborts mid-run (counted exactly once, not
+    re-counted by the abort) and — static entries having no τ=0 form —
+    retries land directly on the materialized no_cache fallback."""
+    plan = FaultPlan(faults={0: FaultSpec(faults.NAN_LATENT, row=0,
+                                          chunk=1)})
+    eng, _ = chaos_engine(plan)
+    eng.submit(req(0, "static2"))
+    res = eng.run_until_drained()
+    assert sorted(res) == [0]
+    assert eng.metrics.faults_total == 1      # detect + abort = ONE event
+    assert eng.metrics.degraded == 1
+    assert eng.records[-1].group == FALLBACK_ENTRY
+    assert FALLBACK_ENTRY in eng.store
+
+
+def test_persistent_faults_end_as_reasoned_terminal_outcome():
+    """Every retry faults too → past the budget the request ends as an
+    explicit ``fault:<kind>`` shed — never an exception, never silence."""
+    plan = FaultPlan(seed=5, nan_rate=1.0, max_chunk=1)
+    pol = ResiliencePolicy(retry=RetryPolicy(max_retries=1,
+                                             backoff_base=0.01))
+    eng, _ = chaos_engine(plan, resilience=pol)
+    eng.submit(req(0, "static2"))
+    eng.run_until_drained()
+    assert eng.outcome(0) == ("shed", f"fault:{faults.NAN_LATENT}")
+    assert eng.metrics.shed_reasons == {f"fault:{faults.NAN_LATENT}": 1}
+    assert len(eng.results) == 0
+
+
+# ---------------------------------------------------------------------------
+# Whole-batch faults: injected exceptions + the stuck-batch watchdog
+# ---------------------------------------------------------------------------
+
+def test_injected_fault_requeues_all_rows_at_original_arrival():
+    plan = FaultPlan(faults={0: FaultSpec(faults.INJECTED, chunk=1)})
+    eng, _ = chaos_engine(plan)
+    r0, r1 = req(0, "static2"), req(1, "static2")
+    eng.submit(r0, r1)
+    res = eng.run_until_drained()
+    assert sorted(res) == [0, 1]
+    assert eng.metrics.fault_kinds == {faults.INJECTED: 1}
+    assert eng.metrics.requeued == 2          # no per-row resolution: all
+    assert eng.metrics.retries == 0           # ... survive, none degrade
+    # the aborted attempt produced no record; the clean re-run did
+    assert len(eng.records) == 1
+    assert eng.records[0].rids == (0, 1)
+    # arrival stamp survives the re-queue: queue wait keeps charging from
+    # first arrival, not from the retry
+    assert r0.arrival == 0.0
+    assert r0.queue_wait == pytest.approx(r0.started)
+    assert r0.started > 0.0
+
+
+def test_watchdog_aborts_stuck_batch_and_excludes_it_from_cost_model():
+    from repro.slo.admission import ServiceCostModel
+    plan = FaultPlan(faults={0: FaultSpec(faults.STUCK_BATCH, chunk=1,
+                                          stall_s=50.0)})
+    pol = ResiliencePolicy(watchdog_factor=3.0, watchdog_floor_s=0.5)
+    # prior matched to the fake's ~1 virtual-second step cost, so only
+    # the injected stall (not a normal segment) blows the deadline
+    eng, _ = chaos_engine(plan, resilience=pol,
+                          cost_model=ServiceCostModel(default_step_cost=1.0))
+    eng.submit(req(0, "static2"), req(1, "static2"))
+    res = eng.run_until_drained()
+    assert sorted(res) == [0, 1]
+    assert eng.metrics.fault_kinds == {faults.STUCK_BATCH: 1}
+    assert eng.metrics.requeued == 2
+    # EWMA hygiene: only the clean re-run's service time was observed —
+    # the 50 s stall would have pushed the per-step estimate past 6 s
+    assert eng.cost_model.per_step("static2") < 2.0
+
+
+def test_watchdog_disabled_by_default_stall_just_serves_late():
+    plan = FaultPlan(faults={0: FaultSpec(faults.STUCK_BATCH, chunk=1,
+                                          stall_s=50.0)})
+    eng, _ = chaos_engine(plan)                # watchdog_factor=None
+    eng.submit(req(0, "static2"))
+    res = eng.run_until_drained()
+    assert sorted(res) == [0]
+    assert eng.metrics.faults_total == 0       # slow ≠ fault without a net
+
+
+def test_fault_threshold_marks_entry_unhealthy_and_sheds_its_traffic():
+    plan = FaultPlan(faults={0: FaultSpec(faults.NAN_LATENT, row=0,
+                                          chunk=1)})
+    pol = ResiliencePolicy(entry_fault_threshold=1)
+    eng, _ = chaos_engine(plan, resilience=pol)
+    eng.submit(req(0, "static2", arrival=0.0),
+               req(1, "static2", arrival=100.0))
+    eng.run_until_drained()
+    # the faulted request recovered via the ladder ...
+    assert eng.outcome(0)[0] == "done"
+    # ... but its group tripped the threshold: later traffic is shed with
+    # an explicit reason instead of forming doomed batches
+    assert eng.outcome(1) == ("shed", "unhealthy_entry")
+    assert not eng.store.health.is_servable("static2")
+    assert "threshold" in eng.store.health.status("static2")[
+        "unhealthy_reason"]
+    # an operator reset restores serving
+    eng.store.health.mark_healthy("static2")
+    eng.submit(req(2, "static2"))
+    eng.run_until_drained()
+    assert eng.outcome(2)[0] == "done"
+
+
+# ---------------------------------------------------------------------------
+# Policy knobs: determinism + validation
+# ---------------------------------------------------------------------------
+
+def test_retry_policy_backoff_deterministic_and_bounded():
+    p = RetryPolicy(max_retries=3, backoff_base=0.1, backoff_factor=2.0,
+                    jitter=0.2, seed=42)
+    for attempt in (1, 2, 3):
+        for rid in (0, 7):
+            d = p.delay(attempt, rid)
+            assert d == p.delay(attempt, rid)          # pure function
+            nominal = 0.1 * 2.0 ** (attempt - 1)
+            assert nominal * 0.8 <= d <= nominal * 1.2
+    # jitter decorrelates rids; zero jitter is exactly exponential
+    assert p.delay(1, 0) != p.delay(1, 1)
+    q = RetryPolicy(backoff_base=0.5, jitter=0.0)
+    assert q.delay(3) == pytest.approx(2.0)
+
+
+def test_retry_and_resilience_policy_validation():
+    with pytest.raises(ValueError, match="max_retries"):
+        RetryPolicy(max_retries=-1)
+    with pytest.raises(ValueError, match="jitter"):
+        RetryPolicy(jitter=1.0)
+    with pytest.raises(ValueError, match="factor"):
+        RetryPolicy(backoff_factor=0.5)
+    with pytest.raises(ValueError, match="attempt"):
+        RetryPolicy().delay(0)
+    with pytest.raises(ValueError, match="watchdog_factor"):
+        ResiliencePolicy(watchdog_factor=0.0)
+    with pytest.raises(ValueError, match="entry_fault_threshold"):
+        ResiliencePolicy(entry_fault_threshold=0)
+
+
+def test_fault_plan_deterministic_memoized_and_overridable():
+    mk = lambda: FaultPlan(seed=3, nan_rate=0.5, stuck_rate=0.2,
+                           error_rate=0.1, max_chunk=2)
+    a, b = mk(), mk()
+    for serial in range(50):
+        sa, sb = a.for_batch(serial, 4), b.for_batch(serial, 4)
+        assert sa == sb                        # same seed → same schedule
+        assert a.for_batch(serial, 4) is sa    # memoized
+        if sa is not None:
+            assert sa.kind in faults.KINDS
+            assert 1 <= sa.chunk <= 2
+    # the realized fault fraction tracks the configured rates
+    n = sum(1 for s in range(1000) if a.for_batch(s, 4) is not None)
+    assert 0.75 <= n / 1000 <= 0.85
+    # explicit entries override the draw — how a test aims at one batch
+    spec = FaultSpec(faults.INJECTED, chunk=2)
+    c = FaultPlan(faults={3: spec})
+    assert c.for_batch(3, 4) is spec
+    assert c.for_batch(2, 4) is None
+
+
+def test_fault_plan_and_spec_validation():
+    with pytest.raises(ValueError, match="sum"):
+        FaultPlan(nan_rate=0.7, stuck_rate=0.7)
+    with pytest.raises(ValueError, match="nan_rate"):
+        FaultPlan(nan_rate=1.5)
+    with pytest.raises(ValueError, match="chunk"):
+        FaultSpec(faults.NAN_LATENT, chunk=0)
+
+
+def test_chaos_clock_taxes_a_seeded_fraction_of_advances():
+    mk = lambda: ChaosClock(serve.VirtualClock(), seed=11, slow_rate=0.5,
+                            slow_s=10.0)
+    c1, c2 = mk(), mk()
+    for _ in range(200):
+        c1.advance(1.0)
+        c2.advance(1.0)
+    assert c1.slowed == c2.slowed              # deterministic weather
+    assert 60 <= c1.slowed <= 140
+    assert c1.now() == pytest.approx(200 + 10.0 * c1.slowed)
+    with pytest.raises(ValueError, match="slow_rate"):
+        ChaosClock(serve.VirtualClock(), slow_rate=2.0)
+
+
+def test_batch_fault_carries_typed_rows():
+    bf = BatchFault(faults.NAN_LATENT, sample_flags=[True, False, True],
+                    detail="why")
+    assert bf.poisoned_rows == (1,)
+    assert "poisoned_rows=[1]" in str(bf) and "why" in str(bf)
+    assert BatchFault(faults.STUCK_BATCH).poisoned_rows == ()
+
+
+# ---------------------------------------------------------------------------
+# τ-ladder boundaries (degradation routing depends on rung_for_cap)
+# ---------------------------------------------------------------------------
+
+def test_rung_for_cap_boundaries():
+    lad = TauLadder(name="l", rung_names=("a", "b", "c"),
+                    taus=(0.05, 0.1, 0.2))
+    assert lad.rung_for_cap(0.01) is None      # below the lowest rung
+    assert lad.rung_for_cap(0.05) == 0         # exactly equal admits
+    assert lad.rung_for_cap(0.05 - 1e-13) == 0  # float-tolerant equality
+    assert lad.rung_for_cap(0.1) == 1
+    assert lad.rung_for_cap(0.15) == 1         # between rungs → lower
+    assert lad.rung_for_cap(1.0) == 2
+    assert lad.rung_for_cap(0.0) is None
+
+
+def test_add_ladder_rejects_non_monotone_taus_both_paths():
+    art = _adaptive_artifact()
+    store = make_store()
+    with pytest.raises(ValueError, match="ascending"):
+        store.add_ladder("lad", art, taus=[0.2, 0.1])
+    with pytest.raises(ValueError, match="ascending"):
+        store.add_ladder("lad", art, taus=[0.1, 0.1])
+    with pytest.raises(ValueError, match="ascending"):
+        store.add_ladder("lad", art,
+                         spec="adaptive:base=static(n=2),tau=[0.2,0.1]")
+    # rejection is all-or-nothing: no partial rungs became visible
+    assert "lad" not in store
+    assert len(store) == 0
+
+
+# ---------------------------------------------------------------------------
+# Artifact integrity: checksums, ±Inf encoding, atomic reload
+# ---------------------------------------------------------------------------
+
+def _curvy_artifact(**vals):
+    curves = {"attn": np.asarray([[1.0, np.nan], [0.5, 2.0]], np.float64)}
+    curves.update({t: np.asarray(c, np.float64) for t, c in vals.items()})
+    return dataclasses.replace(_static_artifact(), curves=curves)
+
+
+def test_checksum_roundtrip_and_tamper_detection(tmp_path):
+    art = _curvy_artifact()
+    s = art.to_json()
+    payload = json.loads(s)
+    assert payload["checksum"].startswith("sha256:")
+    assert payload["checksum"] == payload_checksum(payload)
+    back = CacheArtifact.from_json(s)
+    assert np.array_equal(back.curves["attn"], art.curves["attn"],
+                          equal_nan=True)
+    # seeded bit-rot (one numeric leaf, checksum untouched) fails loudly
+    path = str(tmp_path / "a.cache.json")
+    art.save(path)
+    corrupt_artifact(path, seed=0)
+    with pytest.raises(ValueError, match="checksum mismatch"):
+        CacheArtifact.load(path)
+
+
+def test_corrupt_artifact_rejected_at_store_load(tmp_path):
+    path = str(tmp_path / "a.cache.json")
+    _static_artifact().save(path)
+    corrupt_artifact(path, seed=1)
+    with pytest.raises(ValueError, match="checksum"):
+        make_store().add_artifact("entry", path)
+
+
+def test_pre_checksum_artifacts_load_unchanged():
+    payload = json.loads(_curvy_artifact().to_json())
+    del payload["checksum"]
+    payload["format_version"] = 2
+    art = CacheArtifact.from_json(json.dumps(payload))
+    assert art.arch == "fake-arch"
+    verify_payload(payload)                    # no checksum key → passes
+
+
+def test_inf_curves_roundtrip_but_never_serve():
+    art = _curvy_artifact(ffn=[[np.inf, 1.0], [-np.inf, np.nan]])
+    back = CacheArtifact.from_json(art.to_json())   # explicit ±Inf tags
+    assert np.array_equal(back.curves["ffn"], art.curves["ffn"],
+                          equal_nan=True)
+    with pytest.raises(ValueError, match="calibration diverged"):
+        back.validate_for(arch="fake-arch")
+    # and the store's strict load refuses it up front
+    with pytest.raises(ValueError, match="calibration diverged"):
+        make_store().add_artifact("bad", back)
+
+
+def test_unrecognized_curve_string_raises_clear_error():
+    payload = json.loads(_curvy_artifact().to_json())
+    del payload["checksum"]                    # isolate the value error
+    payload["curves"]["attn"][0][0] = "bogus"
+    with pytest.raises(ValueError, match="unrecognized value 'bogus'"):
+        CacheArtifact.from_json(json.dumps(payload))
+
+
+def test_reload_failure_is_atomic_and_quarantined(tmp_path):
+    path = str(tmp_path / "entry.cache.json")
+    _static_artifact().save(path)
+    store = make_store()
+    old = store.add_artifact("entry", path)
+    eng, _ = plain_engine(store=store, max_batch=2)
+    eng.submit(req(0, "entry"), req(1, "entry"))
+    eng.run_until_drained()
+    programs_before = eng.executor.compiled_variant_count()
+
+    corrupt_artifact(path, seed=2)
+    with pytest.raises(ValueError, match="checksum"):
+        store.reload("entry")
+    # atomic: the exact old entry object keeps serving, same version, and
+    # serving it again compiles nothing new
+    assert store.get("entry") is old
+    assert store.get("entry").version == 1
+    reason = store.health.quarantine_reason("entry")
+    assert "hot-reload rejected" in reason and "checksum" in reason
+    assert store.health.is_servable("entry")   # quarantine ≠ unserving
+    eng.submit(req(2, "entry"), req(3, "entry"))
+    eng.run_until_drained()
+    assert eng.executor.compiled_variant_count() == programs_before
+    assert sorted(eng.results) == [0, 1, 2, 3]
+
+    # a good replacement swaps in, bumps the version, clears the ledger
+    _static_artifact(n=4).save(path)
+    new = store.reload("entry")
+    assert new.version == 2
+    assert store.health.quarantine_reason("entry") is None
+
+
+# ---------------------------------------------------------------------------
+# Chaos lane: seeded fault ramps — every request resolves, zero crashes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("seed", [0, 7, 1234])
+def test_chaos_ramp_every_request_resolves(seed):
+    """The CI chaos lane: a mixed static/adaptive trace under a seeded
+    fault ramp (NaN rows, stalls, injected exceptions, slow-device
+    weather) drains with an explicit outcome for every rid and internally
+    consistent fault accounting — and the whole trace is replayable:
+    a second engine under the same seed resolves every rid identically."""
+
+    def run():
+        from repro.slo.admission import ServiceCostModel
+        clock = serve.VirtualClock()
+        weather = ChaosClock(clock, seed=seed, slow_rate=0.2, slow_s=0.5)
+        store = make_store(8, static2="static:n=2")
+        store.add_artifact("adaptive", _adaptive_artifact())
+        plan = FaultPlan(seed=seed, nan_rate=0.15, stuck_rate=0.1,
+                         error_rate=0.05, stall_s=30.0, max_chunk=2)
+        ex = ChaosExecutor(FakeExecutor(weather), plan, clock)
+        pol = ResiliencePolicy(
+            retry=RetryPolicy(max_retries=2, backoff_base=0.05, seed=seed),
+            watchdog_factor=4.0, watchdog_floor_s=1.0)
+        eng = serve.ServeEngine(
+            ex, params=None, store=store, clock=clock, max_batch=4,
+            resilience=pol,
+            cost_model=ServiceCostModel(default_step_cost=1.0))
+        eng.submit(*[req(i, "adaptive" if i % 2 else "static2",
+                         arrival=0.3 * i) for i in range(24)])
+        eng.run_until_drained()
+        return eng
+
+    eng = run()
+    outcomes = {rid: eng.outcome(rid) for rid in range(24)}
+    assert all(kind in ("done", "shed") for kind, _ in outcomes.values())
+    assert len(eng.results) + len(eng.shed) == 24
+    assert len(eng.results) > 0                # the ramp never starves out
+    m = eng.metrics
+    assert m.faults_total == sum(m.fault_kinds.values())
+    assert set(m.fault_kinds) <= set(faults.KINDS)
+    for reason in m.shed_reasons:
+        assert reason == "stalled" or reason.startswith("fault:")
+
+    again = run()
+    assert {rid: again.outcome(rid)[0] for rid in range(24)} \
+        == {rid: kind for rid, (kind, _) in outcomes.items()}
+
+
+@pytest.mark.chaos
+def test_chaos_clean_plan_changes_nothing():
+    """Rate-0 plan + resilience on ≡ the plain engine: same results, same
+    records, zero faults — the healthy path is untouched."""
+    eng, _ = chaos_engine(FaultPlan())
+    eng.submit(*[req(i, "static2", arrival=0.1 * i) for i in range(6)])
+    res = eng.run_until_drained()
+    ref, _ = plain_engine()
+    ref.submit(*[req(i, "static2", arrival=0.1 * i) for i in range(6)])
+    ref_res = ref.run_until_drained()
+    assert sorted(res) == sorted(ref_res) == list(range(6))
+    assert all(np.array_equal(res[i], ref_res[i]) for i in range(6))
+    assert [r.rids for r in eng.records] == [r.rids for r in ref.records]
+    assert eng.metrics.faults_total == 0
+    assert eng.records[-1].finished_at \
+        == pytest.approx(ref.records[-1].finished_at)
+
+
+# ---------------------------------------------------------------------------
+# Real executor: the sentinels themselves (smoke DiT)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_dit():
+    import jax
+    from repro import configs
+    from repro.core import diffusion
+    cfg = configs.get("dit-xl-256", "smoke")
+    params = diffusion.init_params(jax.random.PRNGKey(0), cfg)
+    params = jax.tree.map(
+        lambda a: a + 0.05 * jax.random.normal(jax.random.PRNGKey(7),
+                                               a.shape),
+        params)
+    return cfg, params
+
+
+def test_executor_sentinels_flag_poisoned_row(small_dit):
+    """Direct sentinel check on the segmented plan path: poison one row's
+    latent between advances — the carry flags must mark exactly that row
+    at the next segment boundary and stay monotone to completion."""
+    import jax
+    import jax.numpy as jnp
+    from repro.cache import registry
+    from repro.core import plan as plan_lib
+    from repro.core import solvers
+    from repro.core.executor import SmoothCacheExecutor
+
+    cfg, params = small_dit
+    solver = solvers.ddim(6)
+    ex = SmoothCacheExecutor(cfg, solver, cfg_scale=1.5)
+    sch = registry.get("static:n=2").build(cfg.layer_types(), 6)
+    plan = plan_lib.analyze(sch)
+    label = jnp.zeros((2,), jnp.int32)
+    rs = ex.start_run(params, jax.random.PRNGKey(0), 2, plan=plan,
+                      schedule=sch, label=label)
+    rs = ex.advance_run(params, rs)
+    assert np.asarray(rs.healthy).all()
+    rs = dataclasses.replace(rs, x=rs.x.at[1].set(jnp.nan))
+    while not rs.done:
+        rs = ex.advance_run(params, rs)
+    assert np.asarray(rs.healthy).tolist() == [True, False]
+    # row independence: the healthy row's latent is untouched by its
+    # poisoned neighbor
+    assert np.isfinite(np.asarray(rs.x)[0]).all()
+
+
+def test_real_nan_row_served_healthy_row_bit_identical(small_dit):
+    """Acceptance (real path): a NaN injected into one row of a served
+    smoke-DiT batch — the engine finishes with zero crashes, the real
+    sentinels (not the chaos flags: ``mark_flags=False``) catch it, the
+    healthy co-batched request's latent is bit-identical to an uninjected
+    run, and the faulted request completes on the no_cache fallback."""
+    import jax.numpy as jnp                                     # noqa: F401
+    from repro.core import solvers
+    from repro.core.executor import SmoothCacheExecutor
+
+    cfg, params = small_dit
+    steps = 6
+
+    def build(chaos):
+        solver = solvers.ddim(steps)
+        inner = SmoothCacheExecutor(cfg, solver, cfg_scale=1.5)
+        store = serve.ArtifactStore(cfg, solver, cfg_scale=1.5)
+        store.add_policy("static2", "static:n=2")
+        if chaos:
+            plan = FaultPlan(faults={0: FaultSpec(faults.NAN_LATENT,
+                                                  row=1, chunk=1)})
+            ex = ChaosExecutor(inner, plan, mutate_latent=True,
+                               mark_flags=False)
+        else:
+            ex = inner
+        eng = serve.ServeEngine(
+            ex, params, store, max_batch=2, clock=serve.VirtualClock(),
+            resilience=ResiliencePolicy() if chaos else None)
+        eng.submit(req(0, "static2", seed=100, label=0),
+                   req(1, "static2", seed=101, label=1))
+        eng.run_until_drained()
+        return eng
+
+    eng, ref = build(chaos=True), build(chaos=False)
+    assert eng.outcome(0)[0] == "done"
+    assert eng.outcome(1)[0] == "done"
+    # detection came from the executor's carry sentinels alone
+    assert eng.metrics.fault_kinds == {faults.NAN_LATENT: 1}
+    assert np.array_equal(eng.results[0], ref.results[0])       # bitwise
+    assert eng.records[-1].group == FALLBACK_ENTRY
+    assert np.isfinite(eng.results[1]).all()
+
+
+def test_real_fused_sentinels_detect_with_zero_host_syncs(small_dit,
+                                                          tmp_path):
+    """Fused adaptive path: sentinel detection of an injected NaN costs
+    zero decision host syncs — ``host_sync_count`` stays 0, exactly as on
+    the healthy path — and the faulted request recovers via the ladder's
+    τ=0 form."""
+    import jax
+    import jax.numpy as jnp
+    from repro import cache
+    from repro.core import solvers
+    from repro.core.executor import SmoothCacheExecutor
+
+    cfg, params = small_dit
+    steps = 6
+    calib = cache.DiffusionPipeline(
+        cfg, solvers.ddim(steps),
+        "adaptive:base=smoothcache(alpha=0.5),tau=0.3", cfg_scale=1.5)
+    calib.calibrate(params, jax.random.PRNGKey(1), 2,
+                    cond_args={"label": jnp.zeros((2,), jnp.int32)})
+    path = str(tmp_path / "adaptive.cache.json")
+    calib.save_artifact(path)
+
+    solver = solvers.ddim(steps)
+    inner = SmoothCacheExecutor(cfg, solver, cfg_scale=1.5)
+    store = serve.ArtifactStore(cfg, solver, cfg_scale=1.5)
+    store.add_artifact("adaptive", path)
+    plan = FaultPlan(faults={0: FaultSpec(faults.NAN_LATENT, row=0,
+                                          chunk=1)})
+    ex = ChaosExecutor(inner, plan, mutate_latent=True, mark_flags=False)
+    eng = serve.ServeEngine(ex, params, store, max_batch=2,
+                            adaptive_chunk=2, clock=serve.VirtualClock(),
+                            resilience=ResiliencePolicy())
+    eng.submit(req(0, "adaptive", seed=100, label=0))
+    eng.run_until_drained()
+    assert eng.outcome(0)[0] == "done"
+    assert eng.metrics.fault_kinds.get(faults.NAN_LATENT, 0) >= 1
+    assert eng.metrics.degraded == 1
+    assert eng.records[-1].group == f"{DEGRADED_PREFIX}adaptive/tau0"
+    # the load-bearing assertion: sentinels + recovery added no decision
+    # syncs to the fused path
+    assert inner.host_sync_count == 0
+    assert inner.compiled_variant_count("fused") >= 1
+    assert inner.compiled_variant_count("sigstep") == 0

@@ -424,18 +424,29 @@ def test_eager_escape_hatch():
 
 
 def test_unknown_policy_rejected_at_submit():
+    # a reasoned outcome, not an engine-killing KeyError mid-stream
     eng, _ = make_engine()
-    with pytest.raises(KeyError, match="typo"):
-        eng.submit(req(0, "typo"))
+    eng.submit(req(0, "typo"))
+    assert eng.outcome(0) == ("shed", "no_entry")
+    assert eng.metrics.rejects == {"no_entry": 1}
+    assert eng.metrics.shed_reasons.get("no_entry") == 1
+    # the queue never saw it; the engine drains cleanly
+    assert len(eng.queue) == 0
+    eng.run_until_drained()
 
 
 def test_duplicate_rid_rejected_even_while_pending():
+    # duplicates are dropped and counted — the original's outcome is
+    # untouched, and the serving loop survives
     eng, _ = make_engine()
     eng.submit(req(0, "static2", arrival=100.0))     # queued, not served
-    with pytest.raises(ValueError, match="duplicate"):
-        eng.submit(req(0, "static2"))
-    with pytest.raises(ValueError, match="duplicate"):
-        eng.submit(req(1, "static2"), req(1, "static2"))  # same call
+    eng.submit(req(0, "static2"))                    # cross-call dup
+    eng.submit(req(1, "static2"), req(1, "static2"))  # same-call dup
+    assert eng.metrics.rejects == {"duplicate_rid": 2}
+    assert eng.outcome(0) == ("pending", None)
+    assert len(eng.queue) == 2                       # one rid 0, one rid 1
+    eng.run_until_drained()
+    assert sorted(eng.results) == [0, 1]
 
 
 def test_batch_key_distinguishes_high_bit_seeds():
