@@ -1,0 +1,311 @@
+"""Continuous in-flight batching benchmark: boundary joins vs a
+join-disabled engine on one fixed arrival trace.
+
+Two sections, both hard-asserted in-run:
+
+* **virtual** — a deterministic virtual-clock scenario with a fake
+  split-capable executor charging per computed layer eval: the same
+  staggered arrival trace drains through a join-enabled and a
+  join-disabled ``ServeEngine``.  Asserts the join engine's p95 queue
+  wait strictly beats the baseline, that joins actually happened, that
+  every served row is bit-identical to that request's own-key reference
+  payload, and that every compiled shape stays on an admissible
+  power-of-two bucket within the program budget.
+* **real** — the smoke DiT under joining (static entry and a τ=0 fused
+  adaptive entry): late arrivals join an in-flight run at a segment
+  boundary, and every served latent must be **bit-identical** to a direct
+  ``DiffusionPipeline.generate`` of that request's own key.  Asserts the
+  fused path never syncs (``host_sync_count == 0``) and programs stay
+  within budget.
+
+Writes ``BENCH_continuous.json`` (results dir + repo-root mirror).
+
+    PYTHONPATH=src python -m benchmarks.run --only continuous
+    CONTINUOUS_BENCH_STEPS=8 PYTHONPATH=src python -m benchmarks.continuous_bench
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+
+from benchmarks import common
+from repro import serve
+from repro.serve.batcher import bucket_sizes
+
+STEPS = int(os.environ.get("CONTINUOUS_BENCH_STEPS", "6"))
+FAKE_STEPS = int(os.environ.get("CONTINUOUS_BENCH_FAKE_STEPS", "8"))
+PAIRS = int(os.environ.get("CONTINUOUS_BENCH_PAIRS", "8"))
+MAX_BATCH = 4
+CFG_SCALE = 1.5
+
+
+# ---------------------------------------------------------------------------
+# Virtual section: deterministic fake executor (mirrors the test fakes —
+# benchmarks are standalone modules, tests/ is not importable here)
+# ---------------------------------------------------------------------------
+
+class _FakeCfg:
+    name = "fake-arch"
+
+    def layer_types(self):
+        return ("attn", "ffn")
+
+
+class _FakeSolver:
+    name = "ddim"
+
+    def __init__(self, num_steps):
+        self.num_steps = num_steps
+
+
+@dataclasses.dataclass
+class _SplitRunState:
+    plan: object
+    batch: int
+    run_index: int = 0
+    x: object = None
+    keys: tuple = ()
+    decisions = None
+
+    @property
+    def done(self):
+        return self.run_index >= len(self.plan.runs)
+
+    @property
+    def step(self):
+        if self.done:
+            return self.plan.num_steps
+        return self.plan.runs[self.run_index].start
+
+    @property
+    def num_steps(self):
+        return self.plan.num_steps
+
+
+def _payload(keys, batch):
+    """Row j's 'latent' identifies its PRNG key — the same function of
+    the same key no matter which batch the row rode in (the per-row
+    determinism contract split/merge must preserve)."""
+    if keys:
+        return np.asarray([np.asarray(k, np.uint32).astype(np.float64)
+                           for k in keys])
+    return np.arange(batch, dtype=np.float64)[:, None]
+
+
+class _SplitFakeExecutor:
+    """Split-capable resumable-run fake charging the virtual clock per
+    *computed* layer evaluation, so scheduling quality becomes exact
+    virtual-latency numbers."""
+
+    supports_split = True
+
+    def __init__(self, clock, step_cost=1.0):
+        self.clock = clock
+        self.step_cost = step_cost
+        self._programs = set()               # (kind, sig-ish, batch shape)
+
+    def _charge(self, skip, length):
+        computed = sum(1 for sk in skip.values() if not sk)
+        self.clock.advance(self.step_cost * length
+                           * computed / max(len(skip), 1))
+
+    def start_run(self, params, key, batch, *, plan, schedule=None,
+                  label=None, memory=None, row_keys=None):
+        return _SplitRunState(plan=plan, batch=batch,
+                              keys=tuple(row_keys or ()))
+
+    def advance_run(self, params, rs, *, check=False):
+        run = rs.plan.runs[rs.run_index]
+        self._programs.add(("seg", run.sig, rs.batch))
+        self._charge(run.sig.skip, run.length)
+        rs = dataclasses.replace(rs, run_index=rs.run_index + 1)
+        if rs.done:
+            rs.x = _payload(rs.keys, rs.batch)
+        return rs
+
+    def split_run(self, rs, groups):
+        return [dataclasses.replace(
+            rs, batch=len(g), keys=tuple(rs.keys[j] for j in g))
+            for g in groups]
+
+    def merge_runs(self, runs):
+        r0 = runs[0]
+        return dataclasses.replace(
+            r0, batch=sum(r.batch for r in runs),
+            keys=tuple(k for r in runs for k in r.keys))
+
+    def compiled_variant_count(self, kind=None):
+        if kind is None:
+            return len(self._programs)
+        return len({p for p in self._programs if p[0] == kind})
+
+    def xla_program_count(self, kind=None):
+        return self.compiled_variant_count(kind)
+
+
+def _virtual_trace():
+    """Fixed trace: request pairs arriving one virtual second apart while
+    each batch takes several virtual seconds — late pairs land mid-flight,
+    which is exactly when a boundary join pays."""
+    return [serve.Request(rid=2 * i + j, seed=2 * i + j, policy="static2",
+                          arrival=float(i))
+            for i in range(PAIRS) for j in (0, 1)]
+
+
+def _virtual_drain(continuous: bool):
+    clock = serve.VirtualClock()
+    store = serve.ArtifactStore(_FakeCfg(), _FakeSolver(FAKE_STEPS))
+    store.add_policy("static2", "static:n=2")
+    ex = _SplitFakeExecutor(clock)
+    eng = serve.ServeEngine(ex, params=None, store=store, clock=clock,
+                            max_batch=MAX_BATCH, max_inflight=1,
+                            continuous=continuous)
+    eng.submit(*_virtual_trace())
+    res = eng.run_until_drained()
+    return eng, ex, res
+
+
+def _run_virtual():
+    eng_c, ex_c, res_c = _virtual_drain(True)
+    eng_b, ex_b, res_b = _virtual_drain(False)
+    p95 = lambda e: serve.percentile(e.metrics.queue_waits, 95)
+    p95_c, p95_b = p95(eng_c), p95(eng_b)
+    assert eng_c.metrics.joins > 0, "join engine never joined"
+    assert eng_b.metrics.joins == 0
+    assert p95_c < p95_b, (
+        f"joining did not improve p95 queue wait: {p95_c} vs {p95_b}")
+    # bit-equal outputs: every row the join engine served matches its
+    # own-key reference payload — joins moved requests between batches
+    # without touching any request's bits (the baseline engine runs
+    # un-keyed, so it only asserts routing)
+    assert sorted(res_c) == list(range(2 * PAIRS))
+    assert sorted(res_b) == list(range(2 * PAIRS))
+    for rid in res_c:
+        np.testing.assert_array_equal(
+            res_c[rid], _payload([serve.batch_key([rid])], 1)[0])
+    for eng, ex in ((eng_c, ex_c), (eng_b, ex_b)):
+        rep = eng.report()
+        assert rep["compiles"]["xla_programs"] <= rep["program_budget"]
+        assert {p[2] for p in ex._programs} <= set(bucket_sizes(MAX_BATCH))
+    rep_c, rep_b = eng_c.report(), eng_b.report()
+    common.emit("continuous/virtual/p95_wait", p95_c * 1e6,
+                f"baseline={p95_b:.3f}s;joins={eng_c.metrics.joins};"
+                f"joined={eng_c.metrics.joined_requests}")
+    return {"continuous": rep_c, "baseline": rep_b,
+            "p95_wait_s": {"continuous": p95_c, "baseline": p95_b}}
+
+
+# ---------------------------------------------------------------------------
+# Real section: smoke DiT, joins at real segment boundaries
+# ---------------------------------------------------------------------------
+
+def _real_drain(executor, params, store, cfg, policy):
+    """Force a deterministic mid-flight join: submit a pair, advance one
+    boundary, submit a second pair — with one in-flight slot the late
+    pair can only run by joining."""
+    eng = serve.ServeEngine(executor, params, store, max_batch=MAX_BATCH,
+                            max_inflight=1, clock=serve.VirtualClock(),
+                            continuous=True, adaptive_chunk=2)
+
+    def rq(i):
+        return serve.Request(rid=i, seed=100 + i, policy=policy,
+                             label=i % cfg.num_classes)
+
+    eng.submit(rq(0), rq(1))
+    assert eng.step()
+    eng.submit(rq(2), rq(3))
+    res = eng.run_until_drained()
+    assert sorted(res) == [0, 1, 2, 3]
+    assert eng.metrics.joins == 1 and eng.metrics.joined_requests == 2
+    rep = eng.report()
+    assert rep["compiles"]["xla_programs"] <= rep["program_budget"]
+    return eng, res, rep
+
+
+def _run_real():
+    import jax
+    import jax.numpy as jnp
+    import time
+    from repro import cache, configs
+    from repro.core import diffusion, solvers
+    from repro.core.executor import SmoothCacheExecutor
+
+    cfg = configs.get("dit-xl-256", "smoke")
+    solver = solvers.ddim(STEPS)
+    params = diffusion.init_params(jax.random.PRNGKey(0), cfg)
+    params = jax.tree.map(
+        lambda a: a + 0.05 * jax.random.normal(jax.random.PRNGKey(7),
+                                               a.shape),
+        params)
+
+    # τ=0 fused adaptive artifact: the fused on-device loop with a
+    # data-independent realized mask, so per-request bit-identity holds
+    t0 = time.perf_counter()
+    fused_pipe = cache.DiffusionPipeline(
+        cfg, solver, "adaptive:base=budget(target=0.5),tau=0",
+        cfg_scale=CFG_SCALE)
+    fused_pipe.calibrate(params, jax.random.PRNGKey(1), 2,
+                         cond_args={"label": jnp.zeros((2,), jnp.int32)})
+    calib_s = time.perf_counter() - t0
+
+    store = serve.ArtifactStore(cfg, solver, cfg_scale=CFG_SCALE)
+    store.add_policy("static2", "static:n=2")
+    store.add_artifact("fused0", fused_pipe.artifact)
+
+    static_pipe = cache.DiffusionPipeline(cfg, solver, "static:n=2",
+                                          cfg_scale=CFG_SCALE)
+    static_pipe.prepare()
+
+    results = {"meta": {"steps": STEPS, "arch": cfg.name,
+                        "max_batch": MAX_BATCH, "calibration_s": calib_s}}
+    for policy, pipe in (("static2", static_pipe), ("fused0", fused_pipe)):
+        ex = SmoothCacheExecutor(cfg, solver, cfg_scale=CFG_SCALE)
+        eng, res, rep = _real_drain(ex, params, store, cfg, policy)
+        # the fused path never syncs the host for decisions, joined or not
+        assert ex.host_sync_count == 0, (
+            f"{policy}: {ex.host_sync_count} host syncs")
+        # per-request replay contract: each served latent is bit-identical
+        # to a direct generate of that request's own key
+        for i in range(4):
+            x = pipe.generate(params, serve.batch_key([100 + i]), 1,
+                              label=jnp.asarray([i % cfg.num_classes],
+                                                jnp.int32))
+            np.testing.assert_array_equal(np.asarray(x[0]), res[i])
+        results[policy] = rep
+        common.emit(f"continuous/real/{policy}/throughput_rps",
+                    rep["throughput_rps"] * 1e6,
+                    f"joins={eng.metrics.joins};"
+                    f"programs={rep['compiles']['xla_programs']}/"
+                    f"{rep['program_budget']};bit_identical=1")
+    return results
+
+
+def _finite(obj):
+    """Strict-JSON sanitizer: the virtual clock charges the real executor
+    zero seconds, so its throughput is ∞ — which ``json.dumps`` would
+    emit as the non-standard ``Infinity`` literal."""
+    if isinstance(obj, dict):
+        return {k: _finite(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_finite(v) for v in obj]
+    if isinstance(obj, float) and not np.isfinite(obj):
+        return None
+    return obj
+
+
+def run() -> None:
+    virtual = _run_virtual()
+    real = _run_real()
+    path = common.write_bench_json("BENCH_continuous.json", _finite({
+        "meta": {"fake_steps": FAKE_STEPS, "pairs": PAIRS,
+                 "max_batch": MAX_BATCH},
+        "virtual": virtual,
+        "real": real,
+    }))
+    print(f"# wrote {path}")
+
+
+if __name__ == "__main__":
+    run()

@@ -20,6 +20,7 @@ MODULES = [
     ("serve", "benchmarks.serve_bench"),
     ("slo", "benchmarks.slo_bench"),
     ("resilience", "benchmarks.resilience_bench"),
+    ("continuous", "benchmarks.continuous_bench"),
     ("table2", "benchmarks.table2_video"),
     ("table3", "benchmarks.table3_audio"),
     ("kernels", "benchmarks.kernel_bench"),

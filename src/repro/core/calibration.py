@@ -103,6 +103,18 @@ def rel_l1_change(cur, prev):
     return abs(cur - prev).sum() / (abs(prev).sum() + 1e-12)
 
 
+def rel_l1_change_rows(cur, prev):
+    """Per-sample :func:`rel_l1_change`: reduce over every axis but the
+    leading batch axis, returning one proxy signal per row.  Same
+    arithmetic as the whole-tensor form restricted to each row, so a
+    batch-1 run and row i of a batch-B run see the same signal — the
+    per-sample decision analogue of the executor's per-row bitwise
+    latent stability."""
+    axes = tuple(range(1, cur.ndim))
+    return (abs(cur - prev).sum(axis=axes)
+            / (abs(prev).sum(axis=axes) + 1e-12))
+
+
 def runtime_rule(proxy, acc, lag, a, b, tau, k_max, force_compute=False):
     """One evaluation of the adaptive reuse rule, vectorized over layer
     types: estimate the per-type lag-1 error from the proxy signal
@@ -122,6 +134,30 @@ def runtime_rule(proxy, acc, lag, a, b, tau, k_max, force_compute=False):
     acc = jnp.where(skip, acc + delta, 0.0)
     lag = jnp.where(skip, lag + 1, 0)
     return skip, acc, lag
+
+
+def batch_rule(proxy_rows, acc, lag, a, b, tau, k_max, force_compute=False):
+    """Per-sample adaptive rule over a batch: each row evaluates
+    :func:`runtime_rule` arithmetic against its OWN ``(B, T)``
+    accumulator/lag state from its own proxy signal, yielding the
+    per-row *desired* skip bits ``want (B, T)``; the batch *realizes*
+    their AND (``realized (T,)`` — any row needing a type's compute
+    forces the whole batch to compute it, since one model call refreshes
+    that type's cache for every row).
+
+    acc/lag update against the REALIZED bits: a forced compute refreshes
+    the cache for all rows, so every row's accumulator for that type
+    resets — each row's state tracks the error actually accrued in its
+    cache entries, not a counterfactual solo trajectory.  A batch of one
+    therefore realizes exactly its solo trajectory, which is what makes
+    split/merge and boundary regroup deterministic per row."""
+    delta = jnp.maximum(a * proxy_rows[:, None] + b[None, :], 0.0)  # (B, T)
+    want = ((lag + 1 <= k_max) & (acc + delta < tau)
+            & jnp.logical_not(force_compute))
+    realized = jnp.all(want, axis=0)                                # (T,)
+    acc = jnp.where(realized[None, :], acc + delta, 0.0)
+    lag = jnp.where(realized[None, :], lag + 1, 0)
+    return want, realized, acc, lag
 
 
 def proxy_signal(cur, prev) -> float:

@@ -54,6 +54,72 @@ def _rows_finite(x):
     return jnp.all(jnp.isfinite(x).reshape(x.shape[0], -1), axis=1)
 
 
+def _take_rows(tree, idx, batch, axis: int = 0):
+    """Slice rows ``idx`` out of every batch-shaped leaf of ``tree``
+    along ``axis``: dim == ``batch`` → take those rows; == ``2*batch``
+    (a CFG-doubled branch cache, ``[cond; uncond]``) → take the rows
+    from both halves, keeping the halves contiguous; anything else
+    passes through untouched.  Pure gathers — no model compute.
+    (Branch-cache leaves carry each stage's scan-stacked repeat axis
+    first, so their batch axis is 1; every other carry is batch-first.)"""
+    sel = jnp.asarray(np.asarray(idx, np.int32))
+
+    def take(leaf):
+        shp = getattr(leaf, "shape", None)
+        if shp is not None and len(shp) > axis:
+            if shp[axis] == batch:
+                return jnp.take(leaf, sel, axis=axis)
+            if shp[axis] == 2 * batch:
+                return jnp.concatenate(
+                    [jnp.take(leaf, sel, axis=axis),
+                     jnp.take(leaf, sel + batch, axis=axis)], axis=axis)
+        return leaf
+
+    return jax.tree.map(take, tree)
+
+
+def _concat_rows(trees, batches, axis: int = 0):
+    """Concatenate the runs' leaves along the batch ``axis`` — the merge
+    dual of :func:`_take_rows`: batch-shaped leaves concat directly,
+    CFG-doubled leaves concat all cond halves then all uncond halves;
+    non-batch leaves are shared and the first run's value is kept."""
+    def dim(leaf):
+        shp = tuple(getattr(leaf, "shape", ()))
+        return shp[axis] if len(shp) > axis else None
+
+    def cat(*leaves):
+        if all(dim(lf) == b for lf, b in zip(leaves, batches)):
+            return jnp.concatenate(leaves, axis=axis)
+        if all(dim(lf) == 2 * b for lf, b in zip(leaves, batches)):
+            cond = [jnp.take(lf, jnp.arange(b), axis=axis)
+                    for lf, b in zip(leaves, batches)]
+            unc = [jnp.take(lf, jnp.arange(b, 2 * b), axis=axis)
+                   for lf, b in zip(leaves, batches)]
+            return jnp.concatenate(cond + unc, axis=axis)
+        return leaves[0]
+
+    return jax.tree.map(cat, *trees)
+
+
+def _rescale_structs(structs, old_b: int, new_b: int, axis: int = 1):
+    """Remap the batch (or CFG-doubled) dim of the memoized branch
+    ``ShapeDtypeStruct`` tree — split/merge rebuilds the donated-buffer
+    shapes without re-tracing the model.  Branch structs are stacked
+    ``(repeat, batch·{1,2}, ...)``, hence the default ``axis=1``."""
+    if structs is None or old_b == new_b:
+        return structs
+
+    def re(s):
+        shp = list(s.shape)
+        if len(shp) > axis and shp[axis] == old_b:
+            shp[axis] = new_b
+        elif len(shp) > axis and shp[axis] == 2 * old_b:
+            shp[axis] = 2 * new_b
+        return jax.ShapeDtypeStruct(tuple(shp), s.dtype)
+
+    return jax.tree.map(re, structs)
+
+
 def merge_branch_caches(cfg: ModelConfig, computed, old):
     """Fill skipped branches from the previous cache → full-structure cache
     (the eager path's collect-everything merge)."""
@@ -192,8 +258,8 @@ class AdaptiveRunState:
     kloop: Any
     step: int                                # next step to execute
     x_prev: Any                              # model input of previous step
-    acc: Any                                 # (T,) f32 est. error since compute
-    lag: Any                                 # (T,) i32 cache age per type
+    acc: Any                                 # (B, T) f32 per-row est. error
+    lag: Any                                 # (B, T) i32 per-row cache age
     decisions: Tuple[tuple, ...]             # realized per-step skip sets
     schedule: Any
     tau: float
@@ -206,8 +272,12 @@ class AdaptiveRunState:
     label: Any = None
     memory: Any = None
     #: (B,) bool device array — per-sample numerical health (also folds
-    #: in the decision accumulator's finiteness)
+    #: in the decision accumulator's per-row finiteness)
     healthy: Any = None
+    #: (B, T) bool device array — each row's DESIRED skip bits at the
+    #: last decided step (None before the first τ>0 decision); the
+    #: regroup signature source
+    want: Any = None
 
     @property
     def done(self) -> bool:
@@ -216,6 +286,17 @@ class AdaptiveRunState:
     @property
     def num_steps(self) -> int:
         return self.schedule.num_steps
+
+    def row_signatures(self) -> Optional[Tuple[tuple, ...]]:
+        """Per-row desired skip sets at the last decided step (tuple of
+        sorted type tuples, one per row) — the mask signature a serving
+        engine regroups by at boundaries.  One small device→host read;
+        None when no per-row decision has been taken yet."""
+        if self.want is None:
+            return None
+        bits = np.asarray(jax.device_get(self.want))
+        return tuple(plan_lib.mask_signature(self.pool_types, row)
+                     for row in bits)
 
 
 @dataclasses.dataclass
@@ -232,9 +313,9 @@ class FusedAdaptiveRunState:
     x_prev: Any                              # model input of previous step
     state: Any
     cache: Any                               # pool-shared structure
-    acc: Any                                 # (T,) float32
-    lag: Any                                 # (T,) int32
-    trace: Any                               # (S, T) bool realized skips
+    acc: Any                                 # (B, T) f32 per-row est. error
+    lag: Any                                 # (B, T) i32 per-row cache age
+    trace: Any                               # (S, B, T) bool per-row desires
     kloop: Any
     step: int                                # next step to execute
     schedule: Any
@@ -267,11 +348,26 @@ class FusedAdaptiveRunState:
     @property
     def decisions(self) -> Tuple[tuple, ...]:
         """Realized per-step skip sets of the executed steps (tuple of
-        sorted type tuples) — one device→host transfer of the packed
-        bool trace, *not* a per-step sync."""
+        sorted type tuples) — the AND over the trace's per-row desired
+        bits, i.e. the masks the batch actually executed.  One
+        device→host transfer of the packed bool trace, *not* a per-step
+        sync."""
         bits = np.asarray(jax.device_get(self.trace))[:self.step]
-        return tuple(tuple(t for t, hit in zip(self.table.types, row)
-                           if hit) for row in bits)
+        realized = bits.all(axis=1)                    # AND over rows
+        return tuple(plan_lib.mask_signature(self.table.types, row)
+                     for row in realized)
+
+    def row_signatures(self) -> Optional[Tuple[tuple, ...]]:
+        """Per-row desired skip sets at the last executed step (tuple of
+        sorted type tuples, one per row) — the mask signature a serving
+        engine regroups by at chunk boundaries.  One small device→host
+        read of a single trace row (a boundary read, never a per-step
+        sync); None before any step has executed."""
+        if self.step == 0:
+            return None
+        bits = np.asarray(jax.device_get(self.trace[self.step - 1]))
+        return tuple(plan_lib.mask_signature(self.table.types, row)
+                     for row in bits)
 
 
 class SmoothCacheExecutor:
@@ -574,19 +670,21 @@ class SmoothCacheExecutor:
 
     def _get_decide_fn(self):
         """One jitted evaluation of the adaptive reuse rule for the
-        host-dispatched loop: proxy reduction + ``calibration.runtime_rule``
-        — the *same* float32 arithmetic the fused program inlines into its
-        loop body, so host and fused decision sequences agree bit-for-bit.
-        Returns ``(skip_bits, acc', lag')``; only the bits are pulled to
-        the host (the per-step sync the fused path removes)."""
+        host-dispatched loop: per-row proxy reduction +
+        ``calibration.batch_rule`` — the *same* float32 arithmetic the
+        fused program inlines into its loop body, so host and fused
+        decision sequences agree bit-for-bit.  Returns ``(want, realized,
+        acc', lag')`` with per-sample ``(B, T)`` accumulator state; only
+        the realized bits are pulled to the host (the per-step sync the
+        fused path removes)."""
         if "decide" in self._fns:
             return self._fns["decide"]
         from repro.core import calibration
 
         def fn(x, x_prev, acc, lag, a, b, tau, k_max):
-            proxy = calibration.rel_l1_change(x, x_prev)
-            return calibration.runtime_rule(proxy, acc, lag, a, b, tau,
-                                            k_max)
+            proxy_rows = calibration.rel_l1_change_rows(x, x_prev)
+            return calibration.batch_rule(proxy_rows, acc, lag, a, b, tau,
+                                          k_max)
 
         if self._jit:
             fn = jax.jit(fn)
@@ -604,7 +702,10 @@ class SmoothCacheExecutor:
             return self._fns["health"]
 
         def fn(healthy, x, acc):
-            return healthy & _rows_finite(x) & jnp.all(jnp.isfinite(acc))
+            # acc is per-sample (B, T): a poisoned accumulator row flips
+            # only its own flag ((0,)-shaped dummy reduces to scalar True)
+            return (healthy & _rows_finite(x)
+                    & jnp.all(jnp.isfinite(acc), axis=-1))
 
         if self._jit:
             fn = jax.jit(fn)
@@ -657,12 +758,16 @@ class SmoothCacheExecutor:
             def body(s, carry):
                 x, x_prev, state, cache, acc, lag, trace, healthy = carry
                 if runtime:
-                    proxy = calibration.rel_l1_change(x, x_prev)
-                    bits, acc, lag = calibration.runtime_rule(
-                        proxy, acc, lag, a, b, tau, k_max,
+                    # per-sample rule: each row wants its own skip set from
+                    # its own (B, T) acc/lag state; the batch realizes the
+                    # AND (one compute refreshes every row's cache)
+                    proxy_rows = calibration.rel_l1_change_rows(x, x_prev)
+                    want, bits, acc, lag = calibration.batch_rule(
+                        proxy_rows, acc, lag, a, b, tau, k_max,
                         force_compute=(s == 0))
                 else:
                     bits = skip_table[s]
+                    want = jnp.broadcast_to(bits, acc.shape)
                 code = (jnp.sum(bits.astype(jnp.int32) * weights)
                         if n_types else jnp.int32(0))
                 t = jnp.full((x.shape[0],), solver.model_times[s])
@@ -670,12 +775,15 @@ class SmoothCacheExecutor:
                 kstep = (jax.random.fold_in(kloop, s)
                          if solver.stochastic else None)
                 x_next, state = solver.step(x, pred, s, state, kstep)
-                trace = trace.at[s].set(bits)
+                # the trace records per-row DESIRED bits (S, B, T): the
+                # executed mask is their AND, and the rows are the regroup
+                # signature a serving engine reads at chunk boundaries
+                trace = trace.at[s].set(want)
                 # health sentinel in the carry: poisoned latents and a
-                # runaway/NaN accumulator both flip the flags — still
-                # zero host syncs inside the loop
+                # runaway/NaN accumulator both flip (only) their row's
+                # flag — still zero host syncs inside the loop
                 healthy = (healthy & _rows_finite(x_next)
-                           & jnp.all(jnp.isfinite(acc)))
+                           & jnp.all(jnp.isfinite(acc), axis=-1))
                 return (x_next, x, state, cache, acc, lag, trace, healthy)
 
             return jax.lax.fori_loop(
@@ -701,6 +809,35 @@ class SmoothCacheExecutor:
         reconstruct the model-input trajectory for the proxy signal."""
         knoise, kloop = jax.random.split(key)
         return jax.random.normal(knoise, self.latent_batch_shape(batch)), kloop
+
+    def initial_latent_rows(self, keys, batch: Optional[int] = None):
+        """Per-row noise init: row ``i`` is exactly the batch-1
+        :meth:`initial_latent` draw of ``keys[i]``, so ANY grouping of the
+        rows — one big batch, singletons, or any split/merge in between —
+        samples each row bit-identically to its own solo run (XLA keeps
+        independent rows bitwise stable across batch shapes; the
+        continuous-batching determinism contract rests on this).  The loop
+        key is derived from ``keys[0]``; deterministic solvers never read
+        it, and stochastic solvers are rejected because their loop-key
+        noise IS batch-shape-dependent."""
+        keys = list(keys)
+        if batch is not None and int(batch) != len(keys):
+            raise ValueError(f"row_keys has {len(keys)} entries for "
+                             f"batch {batch}")
+        if not keys:
+            raise ValueError("row_keys must be non-empty")
+        if self.solver.stochastic:
+            raise ValueError(
+                f"solver {self.solver.name!r} is stochastic: its loop-key "
+                "noise depends on the batch shape, so per-row keys cannot "
+                "make rows batch-invariant — use a single batch key")
+        rows, kloop = [], None
+        for k in keys:
+            x1, kl = self.initial_latent(k, 1)
+            if kloop is None:
+                kloop = kl
+            rows.append(x1)
+        return jnp.concatenate(rows, axis=0), kloop
 
     def sample(self, params, key, batch: int, *, schedule=None, label=None,
                memory=None, collect_hook: Optional[Callable] = None,
@@ -745,12 +882,17 @@ class SmoothCacheExecutor:
 
     def start_run(self, params, key, batch: int, *,
                   plan: plan_lib.ExecutionPlan, schedule=None, label=None,
-                  memory=None) -> RunState:
+                  memory=None, row_keys=None) -> RunState:
         """Begin a resumable segmented run: validate the plan, draw the
         initial latent, and return a :class:`RunState` positioned before
         the first segment.  Drive it with :meth:`advance_run` — a serving
         engine interleaves several in-flight states this way, and
-        ``start + advance-until-done`` is exactly ``sample_with_plan``."""
+        ``start + advance-until-done`` is exactly ``sample_with_plan``.
+
+        ``row_keys`` (one PRNG key per row, replaces ``key``) draws each
+        row via :meth:`initial_latent_rows`, making the run divisible:
+        any :meth:`split_run` / :meth:`merge_runs` regrouping of its rows
+        stays bit-identical per row to the rows' solo runs."""
         if plan.num_steps != self.solver.num_steps:
             raise ValueError(f"plan has {plan.num_steps} steps, solver "
                              f"{self.solver.num_steps}")
@@ -759,7 +901,10 @@ class SmoothCacheExecutor:
                 != plan_lib.schedule_fingerprint(schedule)):
             raise ValueError("plan was analyzed from a different schedule "
                              "(fingerprint mismatch) — re-run plan_for()")
-        x, kloop = self.initial_latent(key, batch)
+        if row_keys is not None:
+            x, kloop = self.initial_latent_rows(row_keys, batch)
+        else:
+            x, kloop = self.initial_latent(key, batch)
         return RunState(
             x=x, state=self.solver.init_state(),
             cache=empty_branch_cache(self.cfg), kloop=kloop, plan=plan,
@@ -940,16 +1085,21 @@ class SmoothCacheExecutor:
     def start_adaptive_run(self, params, key, batch: int, *, schedule,
                            tau: float, proxy_map=None, pool=None,
                            k_max: int = 3, label=None,
-                           memory=None) -> AdaptiveRunState:
+                           memory=None, row_keys=None) -> AdaptiveRunState:
         """Begin a resumable host-dispatched adaptive run: validate the
         decision parameters, derive/index the candidate pool, and enter the
         pool's shared cache structure.  Drive it with
         :meth:`advance_adaptive_run` (one step per call);
-        ``start + advance-until-done`` is exactly :meth:`sample_adaptive`."""
+        ``start + advance-until-done`` is exactly :meth:`sample_adaptive`.
+        ``row_keys`` draws per-row initial latents (see :meth:`start_run`)
+        so the run can be split/merged bit-identically per row."""
         schedule, tau, pool, by_skipset, pool_types, coeff_a, coeff_b = \
             self._adaptive_setup(schedule, tau, proxy_map, pool, k_max)
         n_types = len(pool_types)
-        x, kloop = self.initial_latent(key, batch)
+        if row_keys is not None:
+            x, kloop = self.initial_latent_rows(row_keys, batch)
+        else:
+            x, kloop = self.initial_latent(key, batch)
         structs = self._branch_structs(params, x, label, memory)
         # every pool signature shares the same structure; enter once with
         # placeholder buffers for all ever-skipped types
@@ -958,8 +1108,8 @@ class SmoothCacheExecutor:
         return AdaptiveRunState(
             x=x, state=self.solver.init_state(), cache=cache, kloop=kloop,
             step=0, x_prev=None,
-            acc=jnp.zeros((n_types,), jnp.float32),
-            lag=jnp.zeros((n_types,), jnp.int32),
+            acc=jnp.zeros((batch, n_types), jnp.float32),
+            lag=jnp.zeros((batch, n_types), jnp.int32),
             decisions=(), schedule=schedule, tau=tau, proxy_map=proxy_map,
             by_skipset=by_skipset, pool_types=pool_types,
             coeff_a=coeff_a, coeff_b=coeff_b, k_max=int(k_max),
@@ -978,7 +1128,7 @@ class SmoothCacheExecutor:
             raise ValueError("run is already complete")
         s = rs.step
         x, schedule, tau = rs.x, rs.schedule, rs.tau
-        acc, lag = rs.acc, rs.lag
+        acc, lag, want = rs.acc, rs.lag, rs.want
         if s == 0:
             skipset = frozenset()           # cache is empty: compute all
         elif tau == 0.0:
@@ -987,10 +1137,10 @@ class SmoothCacheExecutor:
             skipset = frozenset(t for t, sk in schedule.mask_key_at(s)
                                 if sk)
         else:
-            bits_dev, acc, lag = self._get_decide_fn()(
+            want, realized_dev, acc, lag = self._get_decide_fn()(
                 x, rs.x_prev, rs.acc, rs.lag, rs.coeff_a, rs.coeff_b,
                 tau, rs.k_max)
-            bits = np.asarray(jax.device_get(bits_dev))
+            bits = np.asarray(jax.device_get(realized_dev))
             self.host_sync_count += 1       # the per-step device→host sync
             skipset = frozenset(t for t, hit in zip(rs.pool_types, bits)
                                 if hit)
@@ -1012,7 +1162,7 @@ class SmoothCacheExecutor:
         healthy = self._get_health_fn()(healthy, x_next, acc)
         return dataclasses.replace(
             rs, x=x_next, state=state, cache=cache, step=s + 1, x_prev=x,
-            acc=acc, lag=lag, healthy=healthy,
+            acc=acc, lag=lag, want=want, healthy=healthy,
             decisions=rs.decisions + (tuple(sorted(skipset)),))
 
     # -- fused adaptive sampling (decision + dispatch on device) -------------
@@ -1050,10 +1200,13 @@ class SmoothCacheExecutor:
     def start_adaptive_fused_run(self, params, key, batch: int, *,
                                  schedule, tau: float, proxy_map=None,
                                  pool=None, k_max: int = 3, label=None,
-                                 memory=None) -> FusedAdaptiveRunState:
+                                 memory=None,
+                                 row_keys=None) -> FusedAdaptiveRunState:
         """Begin a resumable fused adaptive run.  Drive it with
         :meth:`advance_adaptive_fused` — a serving engine timeslices with
-        ``n_steps`` chunks, each a single program dispatch."""
+        ``n_steps`` chunks, each a single program dispatch.  ``row_keys``
+        draws per-row initial latents (see :meth:`start_run`) so the run
+        can be split/merged bit-identically per row."""
         if not self.supports_fused_adaptive:
             raise ValueError(
                 f"solver {self.solver.name!r} is not scannable; the fused "
@@ -1083,16 +1236,19 @@ class SmoothCacheExecutor:
                         "pool — derive the pool from this schedule via "
                         "mask_lattice()")
             skip_table = jnp.asarray(skip_table)
-        x, kloop = self.initial_latent(key, batch)
+        if row_keys is not None:
+            x, kloop = self.initial_latent_rows(row_keys, batch)
+        else:
+            x, kloop = self.initial_latent(key, batch)
         structs = self._branch_structs(params, x, label, memory)
         cache = self._enter_run_cache(empty_branch_cache(self.cfg),
                                       table.branches[0], structs)
         return FusedAdaptiveRunState(
             x=x, x_prev=jnp.zeros_like(x), state=self.solver.init_state(),
             cache=cache,
-            acc=jnp.zeros((n_types,), jnp.float32),
-            lag=jnp.zeros((n_types,), jnp.int32),
-            trace=jnp.zeros((s_total, n_types), jnp.bool_),
+            acc=jnp.zeros((batch, n_types), jnp.float32),
+            lag=jnp.zeros((batch, n_types), jnp.int32),
+            trace=jnp.zeros((s_total, batch, n_types), jnp.bool_),
             kloop=kloop, step=0, schedule=schedule, tau=tau,
             k_max=int(k_max), table=table, runtime=runtime,
             skip_table=skip_table, coeff_a=coeff_a, coeff_b=coeff_b,
@@ -1127,6 +1283,149 @@ class SmoothCacheExecutor:
         return dataclasses.replace(
             rs, x=x, x_prev=x_prev, state=state, cache=cache, acc=acc,
             lag=lag, trace=trace, step=rs.step + length, healthy=healthy)
+
+    # -- run-state split / merge (continuous batching) ------------------------
+
+    #: per-kind fields holding per-row (or CFG-doubled) device carries,
+    #: with each field's batch axis — branch caches are scan-stacked
+    #: ``(repeat, batch·{1,2}, ...)`` so their batch axis is 1; everything
+    #: else in a run state is shared across rows
+    _ROW_FIELDS = {
+        RunState: (("x", 0), ("state", 0), ("cache", 1), ("label", 0),
+                   ("memory", 0), ("healthy", 0)),
+        AdaptiveRunState: (("x", 0), ("state", 0), ("cache", 1),
+                           ("label", 0), ("memory", 0), ("healthy", 0),
+                           ("x_prev", 0), ("acc", 0), ("lag", 0),
+                           ("want", 0)),
+        FusedAdaptiveRunState: (("x", 0), ("state", 0), ("cache", 1),
+                                ("label", 0), ("memory", 0),
+                                ("healthy", 0), ("x_prev", 0), ("acc", 0),
+                                ("lag", 0)),
+    }
+
+    @property
+    def supports_split(self) -> bool:
+        """Whether run states are divisible values (:meth:`split_run` /
+        :meth:`merge_runs`): requires a deterministic solver — a
+        stochastic solver's loop-key noise depends on the batch shape, so
+        its rows are not batch-invariant."""
+        return not self.solver.stochastic
+
+    def _check_split(self, rs):
+        if not self.supports_split:
+            raise ValueError(
+                f"solver {self.solver.name!r} is stochastic: run states "
+                "are not divisible (loop-key noise is batch-shape-"
+                "dependent, so split rows would diverge from their batch)")
+        fields = self._ROW_FIELDS.get(type(rs))
+        if fields is None:
+            raise ValueError(
+                f"not a divisible run state: {type(rs).__name__}")
+        return fields
+
+    def split_run(self, rs, groups) -> List[Any]:
+        """Split one in-flight run into independent sub-runs over disjoint
+        row groups — pure carry slicing along the batch axis (gathers
+        only, no model compute), bit-identical per row: XLA keeps
+        independent rows bitwise stable across batch shapes, so each
+        sub-run advances exactly as its rows would have in the original
+        batch.  τ>0 adaptive sub-runs carry their per-sample ``(B, T)``
+        acc/lag rows with them and realize their OWN mask AND from the
+        split point on — the per-sample-mask property boundary regroup
+        exploits.  Rows not covered by any group are dropped (how
+        per-row retry discards a poisoned sample).  Landing only on
+        existing bucket shapes is the caller's job — the serving engine
+        splits to power-of-two sizes so ``xla_program_count`` never
+        grows."""
+        fields = self._check_split(rs)
+        batch = int(rs.x.shape[0])
+        groups = [tuple(int(i) for i in g) for g in groups]
+        if not groups:
+            raise ValueError("split_run needs at least one row group")
+        seen = set()
+        for g in groups:
+            if not g:
+                raise ValueError("split groups must be non-empty")
+            for i in g:
+                if not 0 <= i < batch:
+                    raise ValueError(
+                        f"row index {i} out of range for batch {batch}")
+                if i in seen:
+                    raise ValueError(f"row index {i} appears in two groups")
+                seen.add(i)
+        out = []
+        for g in groups:
+            upd = {f: _take_rows(getattr(rs, f), g, batch, axis=ax)
+                   for f, ax in fields}
+            if isinstance(rs, RunState):
+                upd["structs"] = _rescale_structs(rs.structs, batch, len(g))
+            elif isinstance(rs, FusedAdaptiveRunState):
+                sel = jnp.asarray(np.asarray(g, np.int32))
+                upd["trace"] = jnp.take(rs.trace, sel, axis=1)
+            out.append(dataclasses.replace(rs, **upd))
+        return out
+
+    def merge_runs(self, runs) -> Any:
+        """Merge position-aligned sub-runs into one batch — the concat
+        dual of :meth:`split_run`, bit-identical per row.  Runs must be
+        of the same kind at the same position with the same execution
+        parameters (same plan + segment index, or same schedule/τ/k_max/
+        pool); per-row carries concatenate, shared parameters come from
+        the first run.  From the merge point on, τ>0 adaptive decisions
+        realize the AND over the union's rows — each row's acc/lag rows
+        merge untouched, so no accumulated-error history is lost."""
+        runs = list(runs)
+        if not runs:
+            raise ValueError("merge_runs needs at least one run")
+        r0 = runs[0]
+        fields = self._check_split(r0)
+        if len(runs) == 1:
+            return r0
+        if any(type(r) is not type(r0) for r in runs[1:]):
+            raise ValueError("cannot merge runs of different kinds")
+        batches = [int(r.x.shape[0]) for r in runs]
+        if isinstance(r0, RunState):
+            for r in runs[1:]:
+                if r.plan is not r0.plan and r.plan != r0.plan:
+                    raise ValueError(
+                        "cannot merge runs with different plans")
+                if r.run_index != r0.run_index:
+                    raise ValueError(
+                        "cannot merge runs at different segments")
+        else:
+            for r in runs[1:]:
+                if (r.schedule.content_key() != r0.schedule.content_key()
+                        or r.tau != r0.tau or r.k_max != r0.k_max):
+                    raise ValueError(
+                        "cannot merge adaptive runs with different "
+                        "schedule/tau/k_max")
+                if r.step != r0.step:
+                    raise ValueError(
+                        "cannot merge adaptive runs at different steps")
+            if isinstance(r0, AdaptiveRunState):
+                if any(r.pool_types != r0.pool_types for r in runs[1:]):
+                    raise ValueError(
+                        "cannot merge runs over different pools")
+            elif any(r.table is not r0.table and r.table != r0.table
+                     for r in runs[1:]):
+                raise ValueError("cannot merge runs over different pools")
+        upd = {f: _concat_rows([getattr(r, f) for r in runs], batches,
+                               axis=ax)
+               for f, ax in fields}
+        if isinstance(r0, RunState):
+            upd["structs"] = _rescale_structs(r0.structs, batches[0],
+                                              sum(batches))
+        elif isinstance(r0, AdaptiveRunState):
+            # split siblings share one realized history; a join brings a
+            # different one — drop to the honest "no per-step record"
+            # value rather than claim one side's history for all rows
+            if any(r.decisions != r0.decisions for r in runs[1:]):
+                upd["decisions"] = ()
+        else:
+            # per-row desired traces concat exactly; `decisions` (the AND
+            # over rows) becomes conservative for pre-merge steps
+            upd["trace"] = jnp.concatenate([r.trace for r in runs], axis=1)
+        return dataclasses.replace(r0, **upd)
 
     # -- whole-sampler lowering (for FLOP / roofline accounting) ------------
 

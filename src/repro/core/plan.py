@@ -149,6 +149,15 @@ class ExecutionPlan:
             out.update(r.sig.live_in)
         return tuple(sorted(out))
 
+    def boundaries(self) -> Tuple[int, ...]:
+        """Steps at which the host regains control between segments —
+        every segment start plus ``num_steps`` (the end).  These are the
+        join/split/merge points of continuous batching: a run advanced
+        segment-by-segment sits exactly at one of them, so two runs of
+        this plan are merge-compatible iff they sit on the same boundary
+        (same ``run_index``)."""
+        return tuple(r.start for r in self.runs) + (self.num_steps,)
+
     def summary(self) -> str:
         rows = [f"ExecutionPlan: {self.num_steps} steps, {len(self.runs)} "
                 f"segments, {self.num_unique_signatures} unique signatures"]
@@ -293,6 +302,14 @@ def mask_lattice(schedule) -> Tuple[ProgramSig, ...]:
 def pool_index(pool) -> Dict[frozenset, ProgramSig]:
     """Runtime dispatch table: frozenset of skipped types → signature."""
     return {frozenset(sig.live_in): sig for sig in pool}
+
+
+def mask_signature(types, bits) -> Tuple[str, ...]:
+    """Canonical hashable mask signature from per-type skip bits (bit
+    order follows ``types``) — the key continuous serving regroups rows
+    by at chunk boundaries: rows whose desired signatures agree can share
+    a batch without forcing each other's computes."""
+    return tuple(t for t, hit in zip(types, bits) if hit)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -253,6 +253,53 @@ class ChaosExecutor:
         self._strike(rs)
         return rs
 
+    # -- split / merge (continuous batching) ---------------------------------
+
+    def split_run(self, rs, groups):
+        """Forward a run-state split through the proxy: the wrapped
+        states are split for real, and each sub-run keeps the poisoned
+        rows that landed in its group (remapped to sub-run indices).
+        Sub-runs carry no pending :class:`FaultSpec` — an unstruck fault
+        dies with the split; chaos plans key on launch serials, and a
+        split is not a launch."""
+        if not isinstance(rs, ChaosRun):
+            return self._inner.split_run(rs, groups)
+        subs = self._inner.split_run(rs._inner, groups)
+        out = []
+        for g, sub in zip(groups, subs):
+            cr = ChaosRun(sub, None, len(g), rs._serial)
+            cr._advances = rs._advances
+            cr._struck = rs._struck
+            cr._poisoned = {i for i, j in enumerate(g)
+                            if j in rs._poisoned}
+            out.append(cr)
+        return out
+
+    def merge_runs(self, runs):
+        """Merge through the proxy; poisoned-row marks concatenate with
+        the rows."""
+        if not any(isinstance(r, ChaosRun) for r in runs):
+            return self._inner.merge_runs(runs)
+        inners = [r._inner if isinstance(r, ChaosRun) else r
+                  for r in runs]
+        merged = self._inner.merge_runs(inners)
+        batches = [(r._batch if isinstance(r, ChaosRun)
+                    else int(np.asarray(r.x).shape[0])) for r in runs]
+        cr = ChaosRun(merged, None, sum(batches),
+                      next(r._serial for r in runs
+                           if isinstance(r, ChaosRun)))
+        cr._advances = max(r._advances for r in runs
+                           if isinstance(r, ChaosRun))
+        cr._struck = True                     # never re-strike a merge
+        off = 0
+        pois = set()
+        for r, b in zip(runs, batches):
+            if isinstance(r, ChaosRun):
+                pois |= {off + i for i in r._poisoned}
+            off += b
+        cr._poisoned = pois
+        return cr
+
     # -- fault application ---------------------------------------------------
 
     def _strike(self, rs: ChaosRun) -> None:

@@ -64,17 +64,26 @@ class ResiliencePolicy:
     ``BatchFault`` s raised mid-advance are recovered instead of
     propagated, the stall guard sheds (reason ``stalled``) instead of
     raising, and — when ``watchdog_factor`` is set — an advance whose
-    wall/virtual duration exceeds ``estimate × factor + floor`` (per the
-    engine's :class:`~repro.slo.admission.ServiceCostModel`) is treated
-    as a ``stuck_batch`` fault: the run is abandoned and every member
-    re-queued at its original arrival.  ``None`` (the engine default)
-    keeps the exact pre-resilience behavior: zero health reads, zero
-    overhead."""
+    wall/virtual duration exceeds ``estimate × factor + floor`` is
+    treated as a ``stuck_batch`` fault: the run is abandoned and every
+    member re-queued at its original arrival.  The estimate comes from
+    the engine's :class:`~repro.slo.admission.ServiceCostModel` keyed on
+    the batch's ``(rung, bucket)``, the same key admission prices with —
+    a ladder move or a regrouped bucket size gets its own deadline, not
+    another shape's.  ``None`` (the engine default) keeps the exact
+    pre-resilience behavior: zero health reads, zero overhead."""
     retry: RetryPolicy = dataclasses.field(default_factory=RetryPolicy)
-    #: advance deadline = cost_model.estimate(steps) × factor + floor;
-    #: None disables the watchdog (health sentinels stay active)
+    #: advance deadline = cost_model.estimate(steps, rung, bucket) ×
+    #: factor + floor; None disables the watchdog (health sentinels stay
+    #: active)
     watchdog_factor: Optional[float] = None
     watchdog_floor_s: float = 1.0
+    #: when a per-row fault hits a divisible run (the executor exposes
+    #: ``split_run`` and the solver is deterministic), split the faulted
+    #: rows out and let survivors *continue* with their run-state intact
+    #: instead of abandoning the whole batch; faulted rows still follow
+    #: the retry/degradation ladder.  False restores restart-everyone.
+    split_retry: bool = True
     #: step faulted requests down the store's degradation ladder
     #: (current rung → τ=0 → no_cache) on each retry; False retries on
     #: the original entry

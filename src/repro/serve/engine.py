@@ -92,6 +92,13 @@ class BatchRecord:
     decisions: Optional[Tuple[tuple, ...]] = None   # adaptive runs only
     tau: float = 0.0                          # realized τ (rung at launch)
     quality_cost: Optional[float] = None      # predicted, from proxy map
+    #: continuous-batching provenance: every join / regroup / coalesce /
+    #: split-retry event this batch's run-state went through, in order
+    #: (``join@<step>:<rids>``, ``regroup@<step>:<rids>``, …).  Empty for
+    #: a batch that rode formation → finish unchanged; with per-row keys
+    #: replay stays per-request (``generate(params, batch_key([seed]),
+    #: 1)``) no matter the lineage.
+    lineage: Tuple[str, ...] = ()
 
 
 class _EagerState:
@@ -119,6 +126,15 @@ class _Inflight:
     #: exclude this batch's service time from the cost-model EWMA (it
     #: faulted / stalled — retries must not poison admission estimates)
     cost_excluded: bool = False
+    #: continuous-batching linkage: a *chaser* replays joiners from step 0
+    #: up to its target's boundary (``chaser_for`` points at the parked
+    #: target, whose ``parked_by`` points back); ``row_keyed`` records the
+    #: per-row PRNG contract that makes join/split/regroup replayable
+    #: per request; ``lineage`` accumulates the run-state's history
+    chaser_for: object = None
+    parked_by: object = None
+    row_keyed: bool = False
+    lineage: Tuple[str, ...] = ()
 
 
 class ServeEngine:
@@ -129,7 +145,8 @@ class ServeEngine:
                  max_inflight: int = 2, scheduler="interleave",
                  adaptive_chunk: int = 4, eager: bool = False,
                  check: bool = False, admission=None, cost_model=None,
-                 resilience=None):
+                 resilience=None, continuous: bool = False,
+                 join_horizon: float = 0.5):
         # lazy so repro.serve stays importable without the slo layer
         # loaded (and the layering acyclic: slo never imports the engine)
         from repro.slo.admission import LoadEstimator, ServiceCostModel
@@ -157,10 +174,25 @@ class ServeEngine:
                            else ServiceCostModel())
         self.load = LoadEstimator(self.cost_model,
                                   batch_factor=max_batch)
+        if not (0.0 <= join_horizon <= 1.0):
+            raise ValueError(f"join_horizon must be in [0, 1], got "
+                             f"{join_horizon}")
         self.max_inflight = max_inflight
         self.adaptive_chunk = adaptive_chunk
         self.eager = eager
         self.check = check
+        #: continuous in-flight batching: waiting compatible requests may
+        #: join an in-flight run at its next boundary (catch-up chaser +
+        #: run-state merge), and τ>0 fused batches regroup by realized
+        #: mask signature.  Requires an executor with ``split_run``/
+        #: ``merge_runs`` and a deterministic solver; launches switch to
+        #: per-row PRNG keys so each request replays as
+        #: ``generate(params, batch_key([seed]), 1)``.
+        self.continuous = continuous
+        #: latest join point as a fraction of the run (a joiner replays
+        #: the target's past steps, so late joins cost more than they
+        #: save)
+        self.join_horizon = float(join_horizon)
         #: repro.resilience.ResiliencePolicy, or None — None keeps the
         #: exact pre-resilience behavior: no health reads, no watchdog,
         #: BatchFaults propagate, the stall guard raises
@@ -277,16 +309,33 @@ class ServeEngine:
 
     # -- scheduling ----------------------------------------------------------
 
+    def _active_inflight(self) -> int:
+        """In-flight runs that actually advance — parked join targets
+        wait on their chaser and don't occupy a timeslice."""
+        return sum(1 for f in self._inflight if f.parked_by is None)
+
     def _admit(self, now: float) -> None:
-        while len(self._inflight) < self.max_inflight:
+        while self._active_inflight() < self.max_inflight:
             mb = self.batcher.next_batch(now)
             if mb is None:
-                return
+                break
             self._launch(mb, now)
+        if self.continuous:
+            self._join_waiting(now)
 
-    def _launch(self, mb: MicroBatch, now: float) -> None:
+    def _launch(self, mb: MicroBatch, now: float, *,
+                chaser_for=None) -> _Inflight:
         entry = mb.entry
         key = batch_key(mb.seeds)
+        extra = {}
+        row_keyed = False
+        if (self.continuous and not self.eager
+                and getattr(self.executor, "supports_split", False)):
+            # per-row PRNG contract: row i's latent is the B=1 draw of
+            # its own key, so join/split/regroup never change any
+            # request's bits and replay is per-request
+            extra["row_keys"] = [batch_key([s]) for s in mb.seeds]
+            row_keyed = True
         label = None
         if any(lab is not None for lab in mb.labels):
             label = jnp.asarray([0 if lab is None else int(lab)
@@ -298,22 +347,26 @@ class ServeEngine:
             rs = self.executor.start_adaptive_fused_run(
                 self.params, key, mb.bucket, schedule=entry.schedule,
                 tau=entry.tau, proxy_map=entry.proxy_map,
-                pool=entry.pool(), k_max=entry.k_max, label=label)
+                pool=entry.pool(), k_max=entry.k_max, label=label,
+                **extra)
         elif entry.adaptive:
             kind = "adaptive"
             rs = self.executor.start_adaptive_run(
                 self.params, key, mb.bucket, schedule=entry.schedule,
                 tau=entry.tau, proxy_map=entry.proxy_map,
-                pool=entry.pool(), k_max=entry.k_max, label=label)
+                pool=entry.pool(), k_max=entry.k_max, label=label,
+                **extra)
         else:
             kind = "plan"
             rs = self.executor.start_run(
                 self.params, key, mb.bucket, plan=entry.plan,
-                schedule=entry.schedule, label=label)
+                schedule=entry.schedule, label=label, **extra)
         for r in mb.requests:
             r.started = now
-        self._inflight.append(_Inflight(mb=mb, kind=kind, rs=rs,
-                                        label=label))
+        fl = _Inflight(mb=mb, kind=kind, rs=rs, label=label,
+                       row_keyed=row_keyed, chaser_for=chaser_for)
+        self._inflight.append(fl)
+        return fl
 
     @property
     def _fused_adaptive(self) -> bool:
@@ -331,11 +384,19 @@ class ServeEngine:
                                               check=self.check)
         elif fl.kind == "adaptive_fused":
             # the whole chunk is one program dispatch — the timeslice
-            # granularity costs no extra host round-trips
+            # granularity costs no extra host round-trips.  A chaser
+            # clamps to its parked target's boundary so the two align
+            # exactly for the merge.
+            n = self.adaptive_chunk
+            if fl.chaser_for is not None:
+                n = min(n, fl.chaser_for.rs.step - fl.rs.step)
             fl.rs = self.executor.advance_adaptive_fused(
-                self.params, fl.rs, n_steps=self.adaptive_chunk)
+                self.params, fl.rs, n_steps=max(n, 1))
         elif fl.kind == "adaptive":
-            for _ in range(self.adaptive_chunk):
+            n = self.adaptive_chunk
+            if fl.chaser_for is not None:
+                n = min(n, fl.chaser_for.rs.step - fl.rs.step)
+            for _ in range(max(n, 1)):
                 if fl.rs.done:
                     break
                 fl.rs = self.executor.advance_adaptive_run(self.params,
@@ -345,6 +406,186 @@ class ServeEngine:
             fl.rs.x = self.executor.sample(
                 self.params, key, fl.mb.bucket, schedule=entry.schedule,
                 label=fl.label)
+
+    # -- continuous batching (join / regroup / coalesce) ---------------------
+
+    @staticmethod
+    def _p2_groups(rows: List[int]) -> List[List[int]]:
+        """Decompose a row list into power-of-two-sized groups, largest
+        first — every sub-run lands on an already-compiled bucket shape,
+        so split/regroup never grow ``xla_program_count``."""
+        out = []
+        rows = list(rows)
+        while rows:
+            take = 1
+            while take * 2 <= len(rows):
+                take *= 2
+            out.append(rows[:take])
+            rows = rows[take:]
+        return out
+
+    def _is_linked(self, fl: _Inflight) -> bool:
+        return (fl.parked_by is not None or fl.chaser_for is not None
+                or any(o.chaser_for is fl for o in self._inflight))
+
+    def _unlink(self, fl: _Inflight) -> None:
+        """Detach a run leaving flight (fault/abort) from any join pair
+        so its partner doesn't wait forever: a dying chaser unparks its
+        target; a dying target releases its chaser to run to completion
+        on its own."""
+        if fl.chaser_for is not None and fl.chaser_for.parked_by is fl:
+            fl.chaser_for.parked_by = None
+        fl.chaser_for = None
+        if fl.parked_by is not None:
+            fl.parked_by.chaser_for = None
+            fl.parked_by = None
+        for o in self._inflight:
+            if o.chaser_for is fl:
+                o.chaser_for = None
+
+    def _join_waiting(self, now: float) -> None:
+        """Continuous feeder: waiting compatible requests join an
+        in-flight run at its next boundary instead of queuing for a
+        fresh slot.  The join is a *catch-up chaser*: the joiners launch
+        as their own p2 batch at step 0 (their queue wait ends here),
+        the target parks, the chaser replays to the target's boundary
+        (clamped advances), and the two run-states merge — pure row
+        concat, bit-identical per row — once aligned."""
+        from repro.slo.slo import remaining_steps
+        if not getattr(self.executor, "supports_split", False):
+            return
+        for fl in list(self._inflight):
+            if (fl.kind == "eager" or not fl.row_keyed or fl.rs.done
+                    or self._is_linked(fl)):
+                continue
+            steps = fl.mb.entry.plan.num_steps
+            done_steps = steps - remaining_steps(fl.rs)
+            if done_steps > self.join_horizon * steps:
+                continue                      # too far gone to chase
+            joiners = self.batcher.take_join(now, fl.mb.entry,
+                                             fl.mb.bucket)
+            if not joiners:
+                continue
+            mb = MicroBatch(requests=tuple(joiners), entry=fl.mb.entry,
+                            formed_at=now)
+            chaser = self._launch(mb, now, chaser_for=fl)
+            fl.parked_by = chaser
+            for r in joiners:
+                r.joined_at = now
+            self.metrics.observe_join(len(joiners))
+            self._try_merge(chaser)           # step-0 target: merge now
+
+    def _merge_pair(self, a: _Inflight, b: _Inflight,
+                    tag: str) -> _Inflight:
+        """Merge two aligned in-flight runs (rows of ``a`` first, matching
+        ``merge_runs``'s concat order) into one new in-flight record."""
+        merged_rs = self.executor.merge_runs([a.rs, b.rs])
+        mb = MicroBatch(requests=a.mb.requests + b.mb.requests,
+                        entry=a.mb.entry, formed_at=a.mb.formed_at)
+        taint = None
+        if a.taint is not None or b.taint is not None:
+            ta = (a.taint if a.taint is not None
+                  else np.ones(a.mb.bucket, bool))
+            tb = (b.taint if b.taint is not None
+                  else np.ones(b.mb.bucket, bool))
+            taint = np.concatenate([ta, tb])
+        label = None
+        if any(lab is not None for lab in mb.labels):
+            label = jnp.asarray([0 if lab is None else int(lab)
+                                 for lab in mb.labels], jnp.int32)
+        rids = ",".join(str(r) for r in b.mb.rids)
+        merged = _Inflight(
+            mb=mb, kind=a.kind, rs=merged_rs, label=label, taint=taint,
+            cost_excluded=a.cost_excluded or b.cost_excluded,
+            row_keyed=True,
+            lineage=a.lineage + b.lineage
+            + (f"{tag}@{a.rs.step}:{rids}",))
+        idx = self._inflight.index(a)
+        self._inflight[idx] = merged
+        self._inflight.remove(b)
+        self.metrics.observe_merge()
+        return merged
+
+    def _try_merge(self, chaser: _Inflight) -> None:
+        target = chaser.chaser_for
+        if target is None or chaser.rs.step != target.rs.step:
+            return
+        target.parked_by = None
+        chaser.chaser_for = None
+        self._merge_pair(target, chaser, "join")
+
+    def _maybe_regroup(self, fl: _Inflight) -> None:
+        """At a fused chunk boundary, split a τ>0 batch whose rows now
+        *want* different masks into per-signature sub-runs (p2 sizes
+        only): each sub-run's executed mask is the AND over fewer rows,
+        so cache-willing rows stop being dragged to full compute by one
+        conservative neighbor."""
+        if (fl.kind != "adaptive_fused" or fl.mb.entry.tau <= 0
+                or fl.mb.bucket <= 1 or not fl.row_keyed or fl.rs.done
+                or self._is_linked(fl)
+                or not getattr(self.executor, "supports_split", False)):
+            return
+        sigs = fl.rs.row_signatures()
+        if sigs is None or len(set(sigs)) <= 1:
+            return
+        bysig: Dict[tuple, List[int]] = {}
+        for j, s in enumerate(sigs):
+            bysig.setdefault(s, []).append(j)
+        groups = []
+        for s in sorted(bysig):               # deterministic order
+            groups.extend(self._p2_groups(bysig[s]))
+        subs = self.executor.split_run(fl.rs, groups)
+        idx = self._inflight.index(fl)
+        repl = []
+        for g, sub in zip(groups, subs):
+            mb = MicroBatch(
+                requests=tuple(fl.mb.requests[j] for j in g),
+                entry=fl.mb.entry, formed_at=fl.mb.formed_at)
+            rids = ",".join(str(r.rid) for r in mb.requests)
+            repl.append(_Inflight(
+                mb=mb, kind=fl.kind, rs=sub, label=fl.label,
+                taint=(None if fl.taint is None
+                       else fl.taint[np.asarray(g)]),
+                cost_excluded=fl.cost_excluded, row_keyed=True,
+                lineage=fl.lineage
+                + (f"regroup@{fl.rs.step}:{rids}",)))
+        self._inflight[idx:idx + 1] = repl
+        self.metrics.observe_regroup(len(repl))
+
+    def _coalesce(self) -> None:
+        """Opportunistic reverse of regroup: two unlinked runs of the
+        same entry/version/kind, aligned at the same step with equal
+        buckets, merge back into one (2·b stays p2, so still on budget).
+        A τ>0 fused pair must currently want the same mask — merging
+        divergent rows would re-impose the shared-mask AND regroup just
+        removed."""
+        if not getattr(self.executor, "supports_split", False):
+            return
+        for a in list(self._inflight):
+            if a not in self._inflight:
+                continue
+            if (a.kind == "eager" or not a.row_keyed or a.rs.done
+                    or self._is_linked(a)):
+                continue
+            for b in list(self._inflight):
+                if (b is a or b not in self._inflight
+                        or a not in self._inflight):
+                    continue
+                if (b.kind != a.kind or not b.row_keyed or b.rs.done
+                        or self._is_linked(b)
+                        or b.mb.entry.name != a.mb.entry.name
+                        or b.mb.entry.version != a.mb.entry.version
+                        or b.mb.bucket != a.mb.bucket
+                        or a.mb.bucket + b.mb.bucket
+                        > self.batcher.max_batch
+                        or b.rs.step != a.rs.step):
+                    continue
+                if a.kind == "adaptive_fused" and a.mb.entry.tau > 0:
+                    sa, sb = a.rs.row_signatures(), b.rs.row_signatures()
+                    if sa is None or sb is None or set(sa) != set(sb) \
+                            or len(set(sa)) != 1:
+                        continue
+                self._merge_pair(a, b, "coalesce")
 
     # -- fault handling (degrade, don't die) ---------------------------------
 
@@ -378,6 +619,7 @@ class ServeEngine:
         batches are bounded too — past the retry budget they join the
         fault path instead of looping forever."""
         mb = fl.mb
+        self._unlink(fl)
         if count:
             self.metrics.observe_fault(mb.group, kind)
             self.store.report_fault(mb.group, kind)
@@ -434,9 +676,13 @@ class ServeEngine:
             self.shed[r.rid] = (reason, now)
             self.metrics.observe_shed(r, reason, now)
 
-    def _watchdog_deadline(self, steps: int, group: str) -> float:
+    def _watchdog_deadline(self, steps: int, group: str,
+                           bucket: Optional[int] = None) -> float:
+        # keyed on the same (rung, bucket) the cost model learns on, so
+        # a ladder move or a regrouped bucket size gets its own deadline
         pol = self.resilience
-        est = self.cost_model.estimate(max(int(steps), 1), group=group)
+        est = self.cost_model.estimate(max(int(steps), 1), group=group,
+                                       bucket=bucket)
         return est * pol.watchdog_factor + pol.watchdog_floor_s
 
     def _advance_guarded(self, i: int, fl: _Inflight) -> bool:
@@ -458,8 +704,8 @@ class ServeEngine:
         after = self.clock.now()
         if pol.watchdog_factor is not None:
             steps_adv = steps_before - remaining_steps(fl.rs)
-            if after - before > self._watchdog_deadline(steps_adv,
-                                                        fl.mb.group):
+            if after - before > self._watchdog_deadline(
+                    steps_adv, fl.mb.group, fl.mb.bucket):
                 if fl.rs.done:
                     # too late to re-queue — deliver, but keep the stall
                     # out of the cost model and on the books
@@ -477,7 +723,39 @@ class ServeEngine:
             self._inflight.pop(i)
             self._fault_abort(fl, NAN_LATENT, flags, after, count=False)
             return True
+        if (flags is not None and not flags.all() and not fl.rs.done
+                and getattr(pol, "split_retry", False)
+                and fl.mb.bucket > 1 and fl.kind != "eager"
+                and not self._is_linked(fl)
+                and getattr(self.executor, "supports_split", False)):
+            # per-row retry within a continuing batch: faulted rows split
+            # out and sent down the ladder NOW, survivors keep their
+            # run-state (p2 sub-batches — no new shapes) instead of
+            # dragging dead rows to the finish line
+            self._split_retry(i, fl, flags, after)
+            return True
         return False
+
+    def _split_retry(self, i: int, fl: _Inflight, flags,
+                     now: float) -> None:
+        good = [j for j in range(fl.mb.bucket) if flags[j]]
+        bad = [j for j in range(fl.mb.bucket) if not flags[j]]
+        groups = self._p2_groups(good)
+        subs = self.executor.split_run(fl.rs, groups)
+        self._inflight.pop(i)
+        for g, sub in zip(groups, subs):
+            mb = MicroBatch(
+                requests=tuple(fl.mb.requests[j] for j in g),
+                entry=fl.mb.entry, formed_at=fl.mb.formed_at)
+            rids = ",".join(str(r.rid) for r in mb.requests)
+            self._inflight.append(_Inflight(
+                mb=mb, kind=fl.kind, rs=sub, label=fl.label, taint=None,
+                cost_excluded=fl.cost_excluded, row_keyed=fl.row_keyed,
+                lineage=fl.lineage
+                + (f"split_retry@{fl.rs.step}:{rids}",)))
+        for j in bad:
+            self._retry_or_fail(fl.mb.requests[j], NAN_LATENT, now)
+        self.metrics.observe_row_retry(len(bad))
 
     def _finish(self, fl: _Inflight) -> None:
         mb, rs = fl.mb, fl.rs
@@ -532,7 +810,8 @@ class ServeEngine:
         # batches are excluded so retries don't poison admission estimates
         if flags is None and not fl.cost_excluded:
             self.cost_model.observe(mb.group, service,
-                                    entry.plan.num_steps)
+                                    entry.plan.num_steps,
+                                    bucket=mb.bucket)
         qcost = entry.predicted_quality_cost(decisions)
         self.metrics.observe_quality(entry.tau, qcost, n=mb.bucket)
         record = BatchRecord(
@@ -540,7 +819,7 @@ class ServeEngine:
             rids=mb.rids, seeds=mb.seeds, labels=mb.labels,
             num_steps=entry.plan.num_steps, compute_fraction=frac,
             formed_at=mb.formed_at, finished_at=done, decisions=decisions,
-            tau=entry.tau, quality_cost=qcost)
+            tau=entry.tau, quality_cost=qcost, lineage=fl.lineage)
         self.records.append(record)
         self.policy.on_finish(self, record,
                               delivered if flags is not None
@@ -560,6 +839,11 @@ class ServeEngine:
             return False
         i = self.policy.select(self, now)
         fl = self._inflight[i]
+        if fl.parked_by is not None:
+            # a parked join target doesn't advance — its timeslice goes
+            # to the chaser catching up to it
+            fl = fl.parked_by
+            i = self._inflight.index(fl)
         if self.resilience is None:
             self._advance(fl)
         elif self._advance_guarded(i, fl):
@@ -567,9 +851,16 @@ class ServeEngine:
         if fl.rs.done:
             self._inflight.pop(i)
             self._finish(fl)
-        elif self.policy.rotate():
-            self._inflight.pop(i)
-            self._inflight.append(fl)
+        else:
+            if self.continuous:
+                if fl.chaser_for is not None:
+                    self._try_merge(fl)
+                else:
+                    self._maybe_regroup(fl)
+                self._coalesce()
+            if fl in self._inflight and self.policy.rotate():
+                self._inflight.remove(fl)
+                self._inflight.append(fl)
         return True
 
     def run_until_drained(self) -> Dict[int, np.ndarray]:

@@ -88,6 +88,14 @@ class ServerMetrics:
         self.requeued = 0                     # healthy survivors re-queued
         self.degraded = 0                     # requests stepped down-ladder
         self.rejects: Dict[str, int] = {}     # submit-time rejections
+        # continuous batching: boundary joins, mask-signature regroups,
+        # opportunistic coalesces, and per-row retries (faulted rows split
+        # out while survivors keep their run-state)
+        self.joins = 0                        # chaser launches
+        self.joined_requests = 0
+        self.regroups = 0                     # signature-driven splits
+        self.merges = 0                       # run-state merges
+        self.row_retries = 0                  # rows split out for retry
 
     # -- observation ---------------------------------------------------------
 
@@ -149,6 +157,28 @@ class ServerMetrics:
         (``no_entry``, ``duplicate_rid``) instead of an engine-killing
         exception."""
         self.rejects[reason] = self.rejects.get(reason, 0) + 1
+
+    # -- continuous batching -------------------------------------------------
+
+    def observe_join(self, n: int = 1) -> None:
+        """``n`` waiting requests joined an in-flight run at a boundary —
+        their queue wait ends at the join launch, not at batch finish."""
+        self.joins += 1
+        self.joined_requests += int(n)
+
+    def observe_regroup(self, n_subruns: int) -> None:
+        """One in-flight batch split into ``n_subruns`` by realized mask
+        signature at a chunk/segment boundary."""
+        self.regroups += 1
+
+    def observe_merge(self, n: int = 1) -> None:
+        """``n`` run-state merges (chaser catch-up or coalesce)."""
+        self.merges += int(n)
+
+    def observe_row_retry(self, n: int = 1) -> None:
+        """``n`` faulted rows split out of a continuing batch for retry
+        while the survivors kept their run-state."""
+        self.row_retries += int(n)
 
     def observe_quality(self, tau: float, quality_cost: Optional[float],
                         n: int = 1) -> None:
@@ -219,6 +249,13 @@ class ServerMetrics:
             "requeued": self.requeued,
             "degraded": self.degraded,
             "rejected_submissions": dict(sorted(self.rejects.items())),
+        }
+        out["continuous"] = {
+            "joins": self.joins,
+            "joined_requests": self.joined_requests,
+            "regroups": self.regroups,
+            "merges": self.merges,
+            "row_retries": self.row_retries,
         }
         out["realized_tau"] = {f"{t:g}": c for t, c in
                                sorted(self.tau_counts.items())}

@@ -110,6 +110,7 @@ class Request:
     arrival: Optional[float] = None
     started: Optional[float] = None           # micro-batch launch time
     finished: Optional[float] = None          # result materialized
+    joined_at: Optional[float] = None         # boundary join, if any
 
     @property
     def queue_wait(self) -> Optional[float]:

@@ -36,8 +36,14 @@ class ServiceCostModel:
     batch over its step count — batching amortizes, so this is a per-batch
     step cost, and under interleaving it includes contention from
     co-scheduled runs, which is exactly the pessimism an admission wait
-    estimate wants).  ``per_step(group)`` prefers the entry-specific
-    estimate and falls back to the global one, then to the seed default.
+    estimate wants).  EWMAs are keyed on ``(group, bucket)`` — the group
+    is the *resolved* store entry, i.e. the ladder rung a batch actually
+    ran, and the bucket its power-of-two batch size — so a ladder move or
+    a continuous-batching regroup never transiently mis-prices the
+    backlog with another rung's (or another batch shape's) step cost.
+    ``per_step(group, bucket)`` falls back ``(rung, bucket)`` → rung →
+    global → seed default, so coarse estimates remain available before
+    a key has observations.
     """
 
     def __init__(self, default_step_cost: float = 0.1, alpha: float = 0.3):
@@ -50,27 +56,39 @@ class ServiceCostModel:
         self.alpha = float(alpha)
         self._global: Optional[float] = None
         self._per_group: Dict[str, float] = {}
+        self._per_key: Dict[tuple, float] = {}
 
-    def observe(self, group: str, service_s: float, num_steps: int) -> None:
+    def _ewma(self, prev: Optional[float], c: float) -> float:
+        return c if prev is None else \
+            (1 - self.alpha) * prev + self.alpha * c
+
+    def observe(self, group: str, service_s: float, num_steps: int,
+                bucket: Optional[int] = None) -> None:
         if num_steps < 1 or service_s < 0:
             return
         c = service_s / float(num_steps)
-        self._global = c if self._global is None else \
-            (1 - self.alpha) * self._global + self.alpha * c
-        prev = self._per_group.get(group)
-        self._per_group[group] = c if prev is None else \
-            (1 - self.alpha) * prev + self.alpha * c
+        self._global = self._ewma(self._global, c)
+        self._per_group[group] = self._ewma(self._per_group.get(group), c)
+        if bucket is not None:
+            key = (group, int(bucket))
+            self._per_key[key] = self._ewma(self._per_key.get(key), c)
 
-    def per_step(self, group: Optional[str] = None) -> float:
+    def per_step(self, group: Optional[str] = None,
+                 bucket: Optional[int] = None) -> float:
+        if group is not None and bucket is not None:
+            key = (group, int(bucket))
+            if key in self._per_key:
+                return self._per_key[key]
         if group is not None and group in self._per_group:
             return self._per_group[group]
         if self._global is not None:
             return self._global
         return self.default_step_cost
 
-    def estimate(self, num_steps: int, group: Optional[str] = None) -> float:
+    def estimate(self, num_steps: int, group: Optional[str] = None,
+                 bucket: Optional[int] = None) -> float:
         """Estimated service seconds for a run of ``num_steps`` steps."""
-        return self.per_step(group) * max(int(num_steps), 0)
+        return self.per_step(group, bucket) * max(int(num_steps), 0)
 
 
 class LoadEstimator:

@@ -1,0 +1,495 @@
+"""Continuous in-flight batching: run-state split/merge bitwise
+row-equivalence across all three run kinds, boundary joins / regroups /
+per-row retries on a virtual clock, the (rung, bucket) cost-model key,
+and the program-budget / host-sync regressions with joining enabled."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import test_serve as ts
+from repro import serve
+from repro.serve.batcher import bucket_sizes
+
+
+# ---------------------------------------------------------------------------
+# Fakes: the split/merge surface over test_serve's virtual-clock executor
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SplitRunState(ts.FakeRunState):
+    keys: tuple = ()                          # per-row PRNG keys (opaque)
+
+    @property
+    def step(self):
+        if self.done:
+            return self.plan.num_steps
+        return self.plan.runs[self.run_index].start
+
+    @property
+    def num_steps(self):
+        return self.plan.num_steps
+
+
+def _payload(keys, batch):
+    """Row j's 'latent' identifies its PRNG key — the same function of
+    the same key no matter which batch the row rode in, which is exactly
+    the per-row determinism contract split/merge must preserve."""
+    if keys:
+        return np.asarray([np.asarray(k, np.uint32).astype(np.float64)
+                           for k in keys])
+    return np.arange(batch, dtype=np.float64)[:, None]
+
+
+class SplitFakeExecutor(ts.FakeExecutor):
+    supports_split = True
+
+    def start_run(self, params, key, batch, *, plan, schedule=None,
+                  label=None, memory=None, row_keys=None):
+        return SplitRunState(plan=plan, batch=batch,
+                             keys=tuple(row_keys or ()))
+
+    def advance_run(self, params, rs, *, check=False):
+        run = rs.plan.runs[rs.run_index]
+        self._programs.add(("seg", run.sig, rs.batch))
+        self._charge(run.sig.skip, run.length)
+        rs = dataclasses.replace(rs, run_index=rs.run_index + 1)
+        if rs.done:
+            rs.x = _payload(rs.keys, rs.batch)
+        return rs
+
+    def split_run(self, rs, groups):
+        return [dataclasses.replace(
+            rs, batch=len(g), keys=tuple(rs.keys[j] for j in g))
+            for g in groups]
+
+    def merge_runs(self, runs):
+        r0 = runs[0]
+        assert all(r.plan is r0.plan and r.run_index == r0.run_index
+                   for r in runs)
+        return dataclasses.replace(
+            r0, batch=sum(r.batch for r in runs),
+            keys=tuple(k for r in runs for k in r.keys))
+
+
+@dataclasses.dataclass
+class SplitFusedState:
+    """Fused-adaptive fake whose rows *want* different masks mid-run:
+    per-row signatures diverge by key parity on steps [2, 4) and
+    reconverge after — driving one boundary regroup and one coalesce."""
+    schedule: object
+    batch: int
+    step: int = 0
+    x: object = None
+    keys: tuple = ()
+    decisions = None
+
+    @property
+    def done(self):
+        return self.step >= self.schedule.num_steps
+
+    @property
+    def num_steps(self):
+        return self.schedule.num_steps
+
+    def row_signatures(self):
+        if 2 <= self.step < 4:
+            return tuple((int(np.asarray(k, np.uint32)[-1]) & 1,)
+                         for k in self.keys)
+        return tuple((9,) for _ in self.keys)
+
+
+class SplitFusedExecutor(SplitFakeExecutor):
+    supports_fused_adaptive = True
+
+    def start_adaptive_fused_run(self, params, key, batch, *, schedule,
+                                 tau, proxy_map=None, pool=None, k_max=3,
+                                 label=None, memory=None, row_keys=None):
+        self._programs.add(("fused", tuple(sorted(
+            tuple(s.live_in) for s in pool)), batch))
+        return SplitFusedState(schedule=schedule, batch=batch,
+                               keys=tuple(row_keys or ()))
+
+    def advance_adaptive_fused(self, params, rs, n_steps=None):
+        remaining = rs.schedule.num_steps - rs.step
+        length = remaining if n_steps is None else min(n_steps, remaining)
+        for s in range(rs.step, rs.step + length):
+            self._charge({t: bool(v[s])
+                          for t, v in rs.schedule.skip.items()}, 1)
+        rs = dataclasses.replace(rs, step=rs.step + length)
+        if rs.done:
+            rs.x = _payload(rs.keys, rs.batch)
+        return rs
+
+    def merge_runs(self, runs):
+        r0 = runs[0]
+        if isinstance(r0, SplitFusedState):
+            assert all(r.schedule is r0.schedule and r.step == r0.step
+                       for r in runs)
+            return dataclasses.replace(
+                r0, batch=sum(r.batch for r in runs),
+                keys=tuple(k for r in runs for k in r.keys))
+        return super().merge_runs(runs)
+
+
+def make_continuous_engine(store=None, **kw):
+    clock = serve.VirtualClock()
+    store = store if store is not None else ts.make_store(
+        8, static2="static:n=2")
+    ex = SplitFakeExecutor(clock)
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_inflight", 1)
+    kw.setdefault("continuous", True)
+    eng = serve.ServeEngine(ex, params=None, store=store, clock=clock,
+                            **kw)
+    return eng, clock, ex
+
+
+def _expected_row(seed):
+    return _payload([serve.batch_key([seed])], 1)[0]
+
+
+def _run_join_scenario(continuous):
+    """Two requests form a batch; two more become ready while it is in
+    flight.  With one in-flight slot the late pair can only run by
+    joining at a boundary (continuous) or waiting for the slot
+    (baseline)."""
+    eng, clock, ex = make_continuous_engine(continuous=continuous)
+    eng.submit(ts.req(0, "static2"), ts.req(1, "static2"))
+    assert eng.step()                  # launch [0, 1], advance one segment
+    eng.submit(ts.req(2, "static2"), ts.req(3, "static2"))
+    res = eng.run_until_drained()
+    return eng, res
+
+
+def test_join_at_boundary_routes_and_is_deterministic():
+    eng, res = _run_join_scenario(True)
+    assert sorted(res) == [0, 1, 2, 3]
+    for rid in range(4):
+        np.testing.assert_array_equal(res[rid], _expected_row(rid))
+    m = eng.metrics
+    assert m.joins == 1 and m.joined_requests == 2 and m.merges == 1
+    # the joiners' queue wait ended at the join launch, and lineage
+    # records the join for replay
+    assert any("join@" in t for r in eng.records for t in r.lineage)
+    # exact determinism: the same trace replays to the same schedule
+    eng2, res2 = _run_join_scenario(True)
+    assert [r.lineage for r in eng2.records] == \
+        [r.lineage for r in eng.records]
+    assert eng2.metrics.queue_waits == eng.metrics.queue_waits
+    for rid in res:
+        np.testing.assert_array_equal(res2[rid], res[rid])
+
+
+def test_join_beats_join_disabled_on_p95_wait():
+    eng_c, _ = _run_join_scenario(True)
+    eng_b, _ = _run_join_scenario(False)
+    assert eng_b.metrics.joins == 0
+    p95 = lambda e: serve.percentile(e.metrics.queue_waits, 95)
+    assert p95(eng_c) < p95(eng_b)
+
+
+def test_join_respects_program_budget():
+    eng, _ = _run_join_scenario(True)
+    rep = eng.report()
+    assert rep["compiles"]["xla_programs"] <= rep["program_budget"]
+    # every shape the join path touched is an admissible p2 bucket
+    sizes = set(bucket_sizes(eng.batcher.max_batch))
+    assert {p[2] for p in eng.executor._programs} <= sizes
+
+
+def test_take_join_only_lands_on_p2_shapes():
+    eng, clock, ex = make_continuous_engine()
+    entry = eng.store.get("static2")
+    eng.queue.submit_many([ts.req(i, "static2") for i in range(3)])
+    # bucket 2 can only grow to 4 (k=2): a lone third request fits, the
+    # join takes exactly two
+    taken = eng.batcher.take_join(0.0, entry, 2)
+    assert [r.rid for r in taken] == [0, 1]
+    # bucket at max_batch never joins
+    assert eng.batcher.take_join(0.0, entry, 4) == []
+    # k=1 only fits bucket 1 (1+1=2); 2+1=3 is not a shape we compile
+    assert eng.batcher.take_join(0.0, entry, 2) == []
+    taken = eng.batcher.take_join(0.0, entry, 1)
+    assert [r.rid for r in taken] == [2]
+
+
+def test_join_requires_matching_entry_version():
+    eng, clock, ex = make_continuous_engine(
+        store=ts.make_store(8, static2="static:n=2", other="none"))
+    entry = eng.store.get("static2")
+    eng.queue.submit_many([ts.req(0, "other")])
+    assert eng.batcher.take_join(0.0, entry, 1) == []
+
+
+def _parity(seed):
+    return int(np.asarray(serve.batch_key([seed]), np.uint32)[-1]) & 1
+
+
+def test_regroup_and_coalesce_on_diverging_masks():
+    """A τ>0 fused batch whose rows realize different mask signatures
+    splits into per-signature sub-runs at the boundary, and the sub-runs
+    merge back once their signatures reconverge — with every row's bits
+    untouched."""
+    evens = [s for s in range(64) if _parity(s) == 0][:2]
+    odds = [s for s in range(64) if _parity(s) == 1][:2]
+    seeds = evens + odds
+    clock = serve.VirtualClock()
+    store = ts.make_store(8, static2="static:n=2")
+    store.add_artifact("adaptive", ts._adaptive_artifact(num_steps=8))
+    ex = SplitFusedExecutor(clock)
+    eng = serve.ServeEngine(ex, params=None, store=store, clock=clock,
+                            max_batch=4, max_inflight=2,
+                            adaptive_chunk=1, continuous=True)
+    eng.submit(*[serve.Request(rid=i, seed=s, policy="adaptive")
+                 for i, s in enumerate(seeds)])
+    res = eng.run_until_drained()
+    assert sorted(res) == [0, 1, 2, 3]
+    m = eng.metrics
+    assert m.regroups == 1 and m.merges == 1 and m.joins == 0
+    tags = [t for r in eng.records for t in r.lineage]
+    assert any(t.startswith("regroup@2:") for t in tags)
+    assert any(t.startswith("coalesce@4:") for t in tags)
+    for i, s in enumerate(seeds):
+        np.testing.assert_array_equal(res[i], _expected_row(s))
+
+
+def test_split_retry_keeps_survivor_run_state():
+    """A row poisoned mid-run is split out and retried while the
+    surviving row keeps its run-state (lineage shows the split, no
+    survivor re-queue)."""
+    from repro.resilience import chaos, faults
+    from repro.resilience.recovery import ResiliencePolicy, RetryPolicy
+
+    clock = serve.VirtualClock()
+    store = ts.make_store(8, static2="static:n=2")
+    plan = chaos.FaultPlan(faults={0: chaos.FaultSpec(
+        faults.NAN_LATENT, row=1, chunk=1)})
+    ex = chaos.ChaosExecutor(SplitFakeExecutor(clock), plan, clock)
+    pol = ResiliencePolicy(
+        retry=RetryPolicy(max_retries=2, backoff_base=0.0, jitter=0.0),
+        degrade=False, split_retry=True)
+    eng = serve.ServeEngine(ex, params=None, store=store, clock=clock,
+                            max_batch=4, continuous=True, resilience=pol)
+    eng.submit(ts.req(0, "static2"), ts.req(1, "static2"))
+    res = eng.run_until_drained()
+    assert sorted(res) == [0, 1]
+    m = eng.metrics
+    assert m.row_retries == 1 and m.retries == 1 and m.requeued == 0
+    survivor = [r for r in eng.records if r.rids == (0,)]
+    assert survivor and any("split_retry@" in t
+                            for t in survivor[0].lineage)
+    # the survivor kept its bits
+    np.testing.assert_array_equal(res[0], _expected_row(0))
+
+
+def test_split_retry_off_restores_carry_to_finish():
+    from repro.resilience import chaos, faults
+    from repro.resilience.recovery import ResiliencePolicy, RetryPolicy
+
+    clock = serve.VirtualClock()
+    store = ts.make_store(8, static2="static:n=2")
+    plan = chaos.FaultPlan(faults={0: chaos.FaultSpec(
+        faults.NAN_LATENT, row=1, chunk=1)})
+    ex = chaos.ChaosExecutor(SplitFakeExecutor(clock), plan, clock)
+    pol = ResiliencePolicy(
+        retry=RetryPolicy(max_retries=2, backoff_base=0.0, jitter=0.0),
+        degrade=False, split_retry=False)
+    eng = serve.ServeEngine(ex, params=None, store=store, clock=clock,
+                            max_batch=4, continuous=True, resilience=pol)
+    eng.submit(ts.req(0, "static2"), ts.req(1, "static2"))
+    res = eng.run_until_drained()
+    assert sorted(res) == [0, 1]
+    assert eng.metrics.row_retries == 0
+
+
+def test_cost_model_keys_on_rung_and_bucket():
+    from repro.slo.admission import ServiceCostModel
+    m = ServiceCostModel(default_step_cost=0.5, alpha=0.3)
+    m.observe("rung", 8.0, 8, bucket=4)       # 1.0 s/step at (rung, 4)
+    m.observe("rung", 1.6, 8, bucket=1)       # 0.2 s/step at (rung, 1)
+    assert m.per_step("rung", bucket=4) == pytest.approx(1.0)
+    assert m.per_step("rung", bucket=1) == pytest.approx(0.2)
+    # unseen (rung, bucket) falls back to the rung EWMA, unseen rung to
+    # the global one, a fresh model to the seed default
+    assert m.per_step("rung", bucket=2) == m.per_step("rung")
+    assert m.per_step("other") == m.per_step()
+    assert ServiceCostModel(default_step_cost=0.5).per_step(
+        "g", bucket=1) == 0.5
+    assert m.estimate(10, "rung", bucket=1) == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# Real executor: bitwise split/merge over all three run kinds, and the
+# end-to-end continuous determinism contract on the smoke DiT
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_dit():
+    import jax
+    from repro import configs
+    from repro.core import diffusion
+    cfg = configs.get("dit-xl-256", "smoke")
+    params = diffusion.init_params(jax.random.PRNGKey(0), cfg)
+    params = jax.tree.map(
+        lambda a: a + 0.05 * jax.random.normal(jax.random.PRNGKey(7),
+                                               a.shape),
+        params)
+    return cfg, params
+
+
+def _row_keys(n):
+    return [serve.batch_key([100 + i]) for i in range(n)]
+
+
+def _drain(ex, advance, rs):
+    while not rs.done:
+        rs = advance(rs)
+    return rs
+
+
+def test_split_merge_bitwise_all_three_kinds(small_dit):
+    """split → advance → merge produces bit-identical rows to advancing
+    the unsplit batch, for segmented, host-adaptive, and fused-adaptive
+    run states (static masks, so every row's trajectory is row-local)."""
+    import jax.numpy as jnp
+    from repro.core import calibration, plan as plan_lib
+    from repro.core import schedule as S, solvers
+    from repro.core.executor import SmoothCacheExecutor
+
+    cfg, params = small_dit
+    steps = 6
+    sch = S.fora(cfg.layer_types(), steps, 2)
+    pm = calibration.ProxyMap(
+        {t: (0.5, 0.01) for t in cfg.layer_types()})
+    pool = plan_lib.mask_lattice(sch)
+    ex = SmoothCacheExecutor(cfg, solvers.ddim(steps), cfg_scale=1.5)
+    assert ex.supports_split
+    keys = _row_keys(2)
+    label = jnp.zeros((2,), jnp.int32)
+
+    def seg_start():
+        return ex.start_run(params, None, 2, plan=ex.plan_for(sch),
+                            schedule=sch, label=label, row_keys=keys)
+
+    def host_start():
+        return ex.start_adaptive_run(params, None, 2, schedule=sch,
+                                     tau=0.0, proxy_map=pm, pool=pool,
+                                     k_max=2, label=label, row_keys=keys)
+
+    def fused_start():
+        return ex.start_adaptive_fused_run(params, None, 2, schedule=sch,
+                                           tau=0.0, proxy_map=pm,
+                                           pool=pool, k_max=2,
+                                           label=label, row_keys=keys)
+
+    cases = [
+        (seg_start, lambda rs: ex.advance_run(params, rs)),
+        (host_start, lambda rs: ex.advance_adaptive_run(params, rs)),
+        (fused_start,
+         lambda rs: ex.advance_adaptive_fused(params, rs, n_steps=2)),
+    ]
+    for start, advance in cases:
+        whole = _drain(ex, advance, start())
+        rs = advance(start())                 # one boundary in
+        subs = ex.split_run(rs, [[0], [1]])
+        subs = [_drain(ex, advance, s) for s in subs]
+        merged = ex.merge_runs(subs)
+        np.testing.assert_array_equal(np.asarray(merged.x),
+                                      np.asarray(whole.x))
+        # rows survive a plain split+merge round-trip mid-run too
+        rs2 = advance(start())
+        rt = ex.merge_runs(ex.split_run(rs2, [[0], [1]]))
+        np.testing.assert_array_equal(np.asarray(rt.x),
+                                      np.asarray(rs2.x))
+
+
+def test_split_rows_match_solo_runs(small_dit):
+    """Row i of a split sub-run finishes bit-identical to a B=1 run from
+    row i's own key — the per-request replay contract joins rely on."""
+    import jax.numpy as jnp
+    from repro.core import schedule as S, solvers
+    from repro.core.executor import SmoothCacheExecutor
+
+    cfg, params = small_dit
+    steps = 6
+    sch = S.fora(cfg.layer_types(), steps, 2)
+    ex = SmoothCacheExecutor(cfg, solvers.ddim(steps), cfg_scale=1.5)
+    keys = _row_keys(2)
+    label = jnp.zeros((2,), jnp.int32)
+    rs = ex.start_run(params, None, 2, plan=ex.plan_for(sch),
+                      schedule=sch, label=label, row_keys=keys)
+    rs = ex.advance_run(params, rs)
+    sub = _drain(ex, lambda r: ex.advance_run(params, r),
+                 ex.split_run(rs, [[1]])[0])
+    solo = _drain(ex, lambda r: ex.advance_run(params, r),
+                  ex.start_run(params, None, 1, plan=ex.plan_for(sch),
+                               schedule=sch,
+                               label=jnp.zeros((1,), jnp.int32),
+                               row_keys=[keys[1]]))
+    np.testing.assert_array_equal(np.asarray(sub.x), np.asarray(solo.x))
+
+
+def test_stochastic_solver_rejects_split(small_dit):
+    import jax.numpy as jnp
+    from repro.core import schedule as S, solvers
+    from repro.core.executor import SmoothCacheExecutor
+
+    cfg, params = small_dit
+    sch = S.fora(cfg.layer_types(), 4, 2)
+    ex = SmoothCacheExecutor(cfg, solvers.dpmpp_3m_sde(4), cfg_scale=1.5)
+    assert not ex.supports_split
+    with pytest.raises(ValueError, match="stochastic"):
+        ex.start_run(params, None, 1, plan=ex.plan_for(sch), schedule=sch,
+                     label=jnp.zeros((1,), jnp.int32),
+                     row_keys=_row_keys(1))
+    import jax
+    rs = ex.start_run(params, jax.random.PRNGKey(0), 1,
+                      plan=ex.plan_for(sch), schedule=sch,
+                      label=jnp.zeros((1,), jnp.int32))
+    with pytest.raises(ValueError, match="stochastic"):
+        ex.split_run(rs, [[0]])
+
+
+def test_continuous_serving_real_dit_bit_identical(small_dit):
+    """End-to-end with joining enabled on the smoke DiT: late arrivals
+    join an in-flight static batch at a segment boundary; every served
+    latent is bit-identical to a solo ``generate`` of that request's own
+    key; programs stay within budget and the fused path never syncs."""
+    import jax.numpy as jnp
+    from repro import cache
+    from repro.core import solvers
+    from repro.core.executor import SmoothCacheExecutor
+
+    cfg, params = small_dit
+    steps = 6
+    solver = solvers.ddim(steps)
+    ex = SmoothCacheExecutor(cfg, solver, cfg_scale=1.5)
+    store = serve.ArtifactStore(cfg, solver, cfg_scale=1.5)
+    store.add_policy("static2", "static:n=2")
+    eng = serve.ServeEngine(ex, params, store, max_batch=4,
+                            max_inflight=1, clock=serve.VirtualClock(),
+                            check=True, continuous=True)
+
+    def rq(i):
+        return serve.Request(rid=i, seed=100 + i, policy="static2",
+                             label=i % cfg.num_classes)
+
+    eng.submit(rq(0), rq(1))
+    assert eng.step()                        # in flight at a boundary
+    eng.submit(rq(2), rq(3))
+    res = eng.run_until_drained()
+    assert sorted(res) == [0, 1, 2, 3]
+    assert eng.metrics.joins == 1 and eng.metrics.joined_requests == 2
+    assert ex.host_sync_count == 0
+    rep = eng.report()
+    assert rep["compiles"]["xla_programs"] <= rep["program_budget"]
+
+    pipe = cache.DiffusionPipeline(cfg, solvers.ddim(steps), "static:n=2",
+                                   cfg_scale=1.5)
+    pipe.prepare()
+    for i in range(4):
+        x = pipe.generate(params, serve.batch_key([100 + i]), 1,
+                          label=jnp.asarray([i % cfg.num_classes],
+                                            jnp.int32))
+        np.testing.assert_array_equal(np.asarray(x[0]), res[i])
