@@ -1,0 +1,263 @@
+"""Observability benchmark: tracing overhead, trace validity, and the
+zero-sync telemetry contract.
+
+Two sections, both hard-asserted in-run:
+
+* **virtual** — one fixed arrival trace drains through a fake-executor
+  ``ServeEngine`` twice, tracer off vs tracer on (full lifecycle spans +
+  instants + registry metrics).  Asserts the traced drain's best-of-N
+  wall time stays within ``OBS_BENCH_MAX_OVERHEAD`` (default 5%) of the
+  untraced one, that the served results and virtual makespan are
+  identical (observation changes nothing observable), and that the
+  exported Chrome trace JSON structurally validates (monotonic
+  timestamps per track, every B matched by its E).  The trace is written
+  to ``results/obs.trace.json`` — load it in Perfetto.
+* **real** — the smoke DiT serving a calibrated τ>0 adaptive entry with
+  tracer + step telemetry on vs both off: asserts the fused path's
+  ``host_sync_count`` stays 0 with telemetry on, served latents are
+  bit-identical on vs off, every request got a CacheReport whose
+  realized decisions match the batch record, and the trace validates.
+
+Writes ``BENCH_obs.json`` (results dir + repo-root mirror).
+
+    PYTHONPATH=src python -m benchmarks.run --only obs
+    OBS_BENCH_REAL_STEPS=4 PYTHONPATH=src python -m benchmarks.obs_bench
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro import serve
+from repro.obs import Tracer, validate_chrome_trace
+
+MAX_OVERHEAD = float(os.environ.get("OBS_BENCH_MAX_OVERHEAD", "0.05"))
+VIRT_REQUESTS = int(os.environ.get("OBS_BENCH_VIRT_REQUESTS", "256"))
+VIRT_REPEATS = int(os.environ.get("OBS_BENCH_VIRT_REPEATS", "7"))
+REAL_STEPS = int(os.environ.get("OBS_BENCH_REAL_STEPS", "6"))
+REAL_REQUESTS = int(os.environ.get("OBS_BENCH_REAL_REQUESTS", "4"))
+CFG_SCALE = 1.5
+
+
+# ---------------------------------------------------------------------------
+# Virtual section (fake executor mirrors the test fakes — benchmarks are
+# standalone modules, tests/ is not importable here)
+# ---------------------------------------------------------------------------
+
+class _FakeCfg:
+    name = "fake-arch"
+
+    def layer_types(self):
+        return ("attn", "ffn")
+
+
+class _FakeSolver:
+    name = "ddim"
+
+    def __init__(self, num_steps):
+        self.num_steps = num_steps
+
+
+@dataclasses.dataclass
+class _FakeRunState:
+    plan: object
+    batch: int
+    run_index: int = 0
+    x: object = None
+    decisions = None
+
+    @property
+    def done(self):
+        return self.run_index >= len(self.plan.runs)
+
+
+class _FakeExecutor:
+    def __init__(self, clock, step_cost=1.0):
+        self.clock = clock
+        self.step_cost = step_cost
+        self._programs = set()
+
+    def start_run(self, params, key, batch, *, plan, schedule=None,
+                  label=None, memory=None):
+        return _FakeRunState(plan=plan, batch=batch)
+
+    def advance_run(self, params, rs, *, check=False):
+        run = rs.plan.runs[rs.run_index]
+        self._programs.add(("seg", run.sig, rs.batch))
+        computed = sum(1 for sk in run.sig.skip.values() if not sk)
+        self.clock.advance(self.step_cost * run.length
+                           * computed / max(len(run.sig.skip), 1))
+        rs = dataclasses.replace(rs, run_index=rs.run_index + 1)
+        if rs.done:
+            rs.x = np.arange(rs.batch, dtype=np.float64)[:, None]
+        return rs
+
+    def compiled_variant_count(self, kind=None):
+        if kind is None:
+            return len(self._programs)
+        return len({p for p in self._programs if p[0] == kind})
+
+    def xla_program_count(self, kind=None):
+        return self.compiled_variant_count(kind)
+
+
+def _drain_virtual(traced: bool):
+    """One full drain of the fixed virtual trace; returns (wall seconds,
+    results, makespan, engine)."""
+    clock = serve.VirtualClock()
+    store = serve.ArtifactStore(_FakeCfg(), _FakeSolver(8))
+    store.add_policy("static2", "static:n=2")
+    store.add_policy("no_cache", "none")
+    kw = {"tracer": Tracer(clock)} if traced else {}
+    eng = serve.ServeEngine(_FakeExecutor(clock), params=None, store=store,
+                            clock=clock, max_batch=4, max_inflight=2, **kw)
+    eng.submit(*[serve.Request(
+        rid=i, seed=i, policy="static2" if i % 3 else "no_cache",
+        arrival=0.05 * i) for i in range(VIRT_REQUESTS)])
+    t0 = time.perf_counter()
+    res = eng.run_until_drained()
+    wall = time.perf_counter() - t0
+    return wall, res, clock.now(), eng
+
+
+def _virtual_section() -> dict:
+    best_off, best_on = float("inf"), float("inf")
+    ref = None
+    for _ in range(VIRT_REPEATS):
+        w_off, res_off, mk_off, _ = _drain_virtual(False)
+        w_on, res_on, mk_on, eng_on = _drain_virtual(True)
+        best_off, best_on = min(best_off, w_off), min(best_on, w_on)
+        # observation changes nothing observable: identical rows, same
+        # virtual makespan, same batch shapes
+        assert sorted(res_on) == sorted(res_off)
+        for rid in res_on:
+            np.testing.assert_array_equal(res_on[rid], res_off[rid])
+        assert mk_on == mk_off
+        ref = eng_on
+    overhead = best_on / best_off - 1.0
+    assert overhead < MAX_OVERHEAD, (
+        f"tracing overhead {overhead:.1%} exceeds the "
+        f"{MAX_OVERHEAD:.0%} budget (off {best_off * 1e3:.2f} ms, "
+        f"on {best_on * 1e3:.2f} ms)")
+    # the exported trace validates and lands on disk for Perfetto
+    tracer = ref.tracer
+    assert not tracer.open_spans()
+    obj = tracer.to_chrome_trace()
+    n_events = validate_chrome_trace(obj)
+    os.makedirs(common.RESULTS_DIR, exist_ok=True)
+    trace_path = os.path.join(common.RESULTS_DIR, "obs.trace.json")
+    tracer.save(trace_path)
+    with open(trace_path) as f:
+        validate_chrome_trace(json.load(f))
+    # metrics surface: same registry serves snapshot + exposition
+    snap = ref.registry.snapshot()
+    json.dumps(snap)
+    expo = ref.registry.exposition()
+    assert "# TYPE serve.batches counter" in expo
+    assert snap["counters"]["serve.batches"] == len(ref.records)
+    common.emit("obs/virtual_drain_off", best_off * 1e6,
+                f"requests={VIRT_REQUESTS}")
+    common.emit("obs/virtual_drain_on", best_on * 1e6,
+                f"overhead={overhead:.2%}")
+    common.emit("obs/trace_events", float(n_events), f"path={trace_path}")
+    return {
+        "requests": VIRT_REQUESTS,
+        "repeats": VIRT_REPEATS,
+        "drain_off_us": best_off * 1e6,
+        "drain_on_us": best_on * 1e6,
+        "overhead_fraction": overhead,
+        "overhead_budget": MAX_OVERHEAD,
+        "trace_events": n_events,
+        "trace_path": trace_path,
+        "results_bit_identical": True,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Real section: smoke DiT, tracer + telemetry on vs off
+# ---------------------------------------------------------------------------
+
+def _real_section() -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro import cache, configs
+    from repro.core import diffusion, solvers
+    from repro.core.executor import SmoothCacheExecutor
+
+    cfg = configs.get("dit-xl-256", "smoke")
+    params = diffusion.init_params(jax.random.PRNGKey(0), cfg)
+    params = jax.tree.map(
+        lambda a: a + 0.05 * jax.random.normal(jax.random.PRNGKey(7),
+                                               a.shape), params)
+    tau = 0.3
+    pipe = cache.DiffusionPipeline(
+        cfg, solvers.ddim(REAL_STEPS),
+        f"adaptive:base=smoothcache(alpha=0.5),tau={tau}",
+        cfg_scale=CFG_SCALE)
+    pipe.calibrate(params, jax.random.PRNGKey(1), 2,
+                   cond_args={"label": jnp.zeros((2,), jnp.int32)})
+    art = pipe.artifact
+
+    def serve_once(obs: bool):
+        clock = serve.VirtualClock()
+        solver = solvers.ddim(REAL_STEPS)
+        ex = SmoothCacheExecutor(cfg, solver, cfg_scale=CFG_SCALE)
+        store = serve.ArtifactStore(cfg, solver, cfg_scale=CFG_SCALE)
+        store.add_artifact("gen", art)
+        kw = {"tracer": Tracer(clock), "telemetry": True} if obs else {}
+        eng = serve.ServeEngine(ex, params, store, clock=clock,
+                                max_batch=2, adaptive_chunk=3, **kw)
+        eng.submit(*[serve.Request(rid=i, seed=100 + i, policy="gen",
+                                   label=i % cfg.num_classes,
+                                   arrival=0.0)
+                     for i in range(REAL_REQUESTS)])
+        res = eng.run_until_drained()
+        return eng, res, ex
+
+    eng_on, res_on, ex_on = serve_once(True)
+    eng_off, res_off, _ = serve_once(False)
+    # telemetry + tracing never change the served bits
+    assert sorted(res_on) == sorted(res_off)
+    for rid in res_on:
+        np.testing.assert_array_equal(res_on[rid], res_off[rid])
+    # the fused path stayed sync-free with the decision-trace carry on
+    assert ex_on.host_sync_count == 0, ex_on.host_sync_count
+    # every served request has an explainer consistent with its batch
+    assert sorted(eng_on.cache_reports) == sorted(res_on)
+    for rec in eng_on.records:
+        for rid in rec.rids:
+            rep = eng_on.cache_reports[rid]
+            assert rep.realized == rec.decisions
+            assert rep.tau == tau and rep.proxy is not None
+            assert rep.proxy[0] is None
+    assert not eng_off.cache_reports
+    assert validate_chrome_trace(eng_on.tracer.to_chrome_trace()) > 0
+    frac = eng_on.cache_reports[0].realized_compute_fraction()
+    common.emit("obs/real_requests", float(REAL_REQUESTS),
+                f"steps={REAL_STEPS} sync=0")
+    common.emit("obs/real_compute_fraction", frac * 100, "percent")
+    return {
+        "steps": REAL_STEPS,
+        "requests": REAL_REQUESTS,
+        "tau": tau,
+        "host_sync_count": int(ex_on.host_sync_count),
+        "latents_bit_identical": True,
+        "cache_reports": len(eng_on.cache_reports),
+        "realized_compute_fraction": frac,
+    }
+
+
+def run() -> None:
+    virtual = _virtual_section()
+    real = _real_section()
+    common.write_bench_json("BENCH_obs.json",
+                            {"virtual": virtual, "real": real})
+
+
+if __name__ == "__main__":
+    run()

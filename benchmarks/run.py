@@ -21,6 +21,7 @@ MODULES = [
     ("slo", "benchmarks.slo_bench"),
     ("resilience", "benchmarks.resilience_bench"),
     ("continuous", "benchmarks.continuous_bench"),
+    ("obs", "benchmarks.obs_bench"),
     ("table2", "benchmarks.table2_video"),
     ("table3", "benchmarks.table3_audio"),
     ("kernels", "benchmarks.kernel_bench"),

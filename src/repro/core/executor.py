@@ -332,6 +332,14 @@ class FusedAdaptiveRunState:
     #: fused loop carry (acc finiteness folded in), so divergence
     #: detection costs zero extra host syncs
     healthy: Any = None
+    #: (S, B) float32 device array of per-row proxy signals, or None —
+    #: step telemetry (``start_adaptive_fused_run(telemetry=True)``):
+    #: recorded inside the fused loop carry like ``trace``, read only at
+    #: the boundaries the host already syncs, so enabling it keeps
+    #: ``host_sync_count`` at 0.  Step 0's value is meaningless
+    #: (``x_prev`` is zeros before the first step) — report layers mask
+    #: it.
+    proxy_trace: Any = None
 
     @property
     def done(self) -> bool:
@@ -714,7 +722,8 @@ class SmoothCacheExecutor:
 
     # -- fused adaptive program ---------------------------------------------
 
-    def _get_fused_fn(self, table: plan_lib.SwitchTable, runtime: bool):
+    def _get_fused_fn(self, table: plan_lib.SwitchTable, runtime: bool,
+                      telemetry: bool = False):
         """The whole adaptive sampling loop as ONE donated program: proxy
         computation, ``runtime_rule`` over stacked proxy-map coefficients,
         accumulator/lag state carried as device arrays, ``lax.switch``
@@ -728,8 +737,16 @@ class SmoothCacheExecutor:
 
         ``runtime=False`` (τ=0) replaces the rule with a lookup into the
         static schedule's precomputed ``skip_table`` — same program
-        structure, bit-identical to ``sample_compiled``."""
-        key = ("fused", table, runtime)
+        structure, bit-identical to ``sample_compiled``.
+
+        ``telemetry=True`` additionally records the per-row proxy signal
+        into a ``(S, B)`` carry array each step (computed even under
+        ``runtime=False``, where the rule itself never reads it).  The
+        flag is part of the memo key, so telemetry runs compile their own
+        program and non-telemetry programs are untouched; the latent
+        arithmetic is identical either way (asserted bit-for-bit by the
+        obs bench)."""
+        key = ("fused", table, runtime, telemetry)
         if key in self._fns:
             return self._fns[key]
         if not self.solver.scannable:
@@ -744,8 +761,8 @@ class SmoothCacheExecutor:
         weights = jnp.asarray([1 << i for i in range(n_types)], jnp.int32)
 
         def fn(params, x, x_prev, state, cache, acc, lag, trace, healthy,
-               start, length, kloop, label, memory, a, b, tau, k_max,
-               skip_table):
+               proxy_trace, start, length, kloop, label, memory, a, b,
+               tau, k_max, skip_table):
             def make_branch(sig):
                 def branch(bx, bt, bcache):
                     return self._sig_step(params, bx, bt, label, memory,
@@ -756,18 +773,25 @@ class SmoothCacheExecutor:
             branches = [make_branch(sig) for sig in table.branches]
 
             def body(s, carry):
-                x, x_prev, state, cache, acc, lag, trace, healthy = carry
+                x, x_prev, state, cache, acc, lag, trace, healthy, \
+                    proxy_trace = carry
+                proxy_rows = None
+                if runtime or telemetry:
+                    proxy_rows = calibration.rel_l1_change_rows(x, x_prev)
                 if runtime:
                     # per-sample rule: each row wants its own skip set from
                     # its own (B, T) acc/lag state; the batch realizes the
                     # AND (one compute refreshes every row's cache)
-                    proxy_rows = calibration.rel_l1_change_rows(x, x_prev)
                     want, bits, acc, lag = calibration.batch_rule(
                         proxy_rows, acc, lag, a, b, tau, k_max,
                         force_compute=(s == 0))
                 else:
                     bits = skip_table[s]
                     want = jnp.broadcast_to(bits, acc.shape)
+                if telemetry:
+                    # step telemetry rides the same carry as the decision
+                    # trace: recorded on device, read only at boundaries
+                    proxy_trace = proxy_trace.at[s].set(proxy_rows)
                 code = (jnp.sum(bits.astype(jnp.int32) * weights)
                         if n_types else jnp.int32(0))
                 t = jnp.full((x.shape[0],), solver.model_times[s])
@@ -784,16 +808,18 @@ class SmoothCacheExecutor:
                 # flag — still zero host syncs inside the loop
                 healthy = (healthy & _rows_finite(x_next)
                            & jnp.all(jnp.isfinite(acc), axis=-1))
-                return (x_next, x, state, cache, acc, lag, trace, healthy)
+                return (x_next, x, state, cache, acc, lag, trace, healthy,
+                        proxy_trace)
 
             return jax.lax.fori_loop(
                 start, start + length, body,
-                (x, x_prev, state, cache, acc, lag, trace, healthy))
+                (x, x_prev, state, cache, acc, lag, trace, healthy,
+                 proxy_trace))
 
         if self._jit:
             # donate everything the successor state replaces; kloop /
             # label / memory / coefficients are reused across chunks
-            donate = (1, 2, 3, 4, 5, 6, 7, 8) if self._donate else ()
+            donate = (1, 2, 3, 4, 5, 6, 7, 8, 9) if self._donate else ()
             fn = jax.jit(fn, donate_argnums=donate)
         self._fns[key] = fn
         return fn
@@ -1200,13 +1226,19 @@ class SmoothCacheExecutor:
     def start_adaptive_fused_run(self, params, key, batch: int, *,
                                  schedule, tau: float, proxy_map=None,
                                  pool=None, k_max: int = 3, label=None,
-                                 memory=None,
-                                 row_keys=None) -> FusedAdaptiveRunState:
+                                 memory=None, row_keys=None,
+                                 telemetry: bool = False
+                                 ) -> FusedAdaptiveRunState:
         """Begin a resumable fused adaptive run.  Drive it with
         :meth:`advance_adaptive_fused` — a serving engine timeslices with
         ``n_steps`` chunks, each a single program dispatch.  ``row_keys``
         draws per-row initial latents (see :meth:`start_run`) so the run
-        can be split/merged bit-identically per row."""
+        can be split/merged bit-identically per row.  ``telemetry=True``
+        additionally records the per-row proxy signal into the loop carry
+        (``rs.proxy_trace``) for per-request
+        :class:`repro.obs.CacheReport` explainers — still zero per-step
+        host syncs, and the latent bits are unchanged (the telemetry
+        program differs only in the extra carry writes)."""
         if not self.supports_fused_adaptive:
             raise ValueError(
                 f"solver {self.solver.name!r} is not scannable; the fused "
@@ -1253,7 +1285,9 @@ class SmoothCacheExecutor:
             k_max=int(k_max), table=table, runtime=runtime,
             skip_table=skip_table, coeff_a=coeff_a, coeff_b=coeff_b,
             label=label, memory=memory,
-            healthy=jnp.ones((batch,), jnp.bool_))
+            healthy=jnp.ones((batch,), jnp.bool_),
+            proxy_trace=(jnp.zeros((s_total, batch), jnp.float32)
+                         if telemetry else None))
 
     def advance_adaptive_fused(self, params, rs: FusedAdaptiveRunState,
                                n_steps: Optional[int] = None
@@ -1271,18 +1305,24 @@ class SmoothCacheExecutor:
                                                        remaining)
         if length < 1:
             raise ValueError(f"n_steps must be >= 1, got {n_steps}")
-        fn = self._get_fused_fn(rs.table, rs.runtime)
+        telemetry = rs.proxy_trace is not None
+        fn = self._get_fused_fn(rs.table, rs.runtime, telemetry)
         healthy = rs.healthy
         if healthy is None:                  # pre-sentinel state: assume ok
             healthy = jnp.ones((rs.x.shape[0],), jnp.bool_)
-        x, x_prev, state, cache, acc, lag, trace, healthy = fn(
-            params, rs.x, rs.x_prev, rs.state, rs.cache, rs.acc, rs.lag,
-            rs.trace, healthy, rs.step, length, rs.kloop, rs.label,
-            rs.memory, rs.coeff_a, rs.coeff_b, rs.tau, rs.k_max,
-            rs.skip_table)
+        # telemetry-off runs carry a shape-stable dummy through the loop
+        # (the program never touches it; the memo key separates variants)
+        proxy_trace = (rs.proxy_trace if telemetry
+                       else jnp.zeros((0, 0), jnp.float32))
+        x, x_prev, state, cache, acc, lag, trace, healthy, proxy_trace = \
+            fn(params, rs.x, rs.x_prev, rs.state, rs.cache, rs.acc,
+               rs.lag, rs.trace, healthy, proxy_trace, rs.step, length,
+               rs.kloop, rs.label, rs.memory, rs.coeff_a, rs.coeff_b,
+               rs.tau, rs.k_max, rs.skip_table)
         return dataclasses.replace(
             rs, x=x, x_prev=x_prev, state=state, cache=cache, acc=acc,
-            lag=lag, trace=trace, step=rs.step + length, healthy=healthy)
+            lag=lag, trace=trace, step=rs.step + length, healthy=healthy,
+            proxy_trace=proxy_trace if telemetry else None)
 
     # -- run-state split / merge (continuous batching) ------------------------
 
@@ -1362,6 +1402,9 @@ class SmoothCacheExecutor:
             elif isinstance(rs, FusedAdaptiveRunState):
                 sel = jnp.asarray(np.asarray(g, np.int32))
                 upd["trace"] = jnp.take(rs.trace, sel, axis=1)
+                if rs.proxy_trace is not None:
+                    upd["proxy_trace"] = jnp.take(rs.proxy_trace, sel,
+                                                  axis=1)
             out.append(dataclasses.replace(rs, **upd))
         return out
 
@@ -1425,6 +1468,12 @@ class SmoothCacheExecutor:
             # per-row desired traces concat exactly; `decisions` (the AND
             # over rows) becomes conservative for pre-merge steps
             upd["trace"] = jnp.concatenate([r.trace for r in runs], axis=1)
+            if all(r.proxy_trace is not None for r in runs):
+                upd["proxy_trace"] = jnp.concatenate(
+                    [r.proxy_trace for r in runs], axis=1)
+            elif any(r.proxy_trace is not None for r in runs):
+                # mixed telemetry: no honest merged trace exists
+                upd["proxy_trace"] = None
         return dataclasses.replace(r0, **upd)
 
     # -- whole-sampler lowering (for FLOP / roofline accounting) ------------

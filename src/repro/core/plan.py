@@ -158,6 +158,17 @@ class ExecutionPlan:
         (same ``run_index``)."""
         return tuple(r.start for r in self.runs) + (self.num_steps,)
 
+    def run_label(self, i: int) -> str:
+        """Human-readable tag of segment ``i`` for trace spans and logs:
+        step range plus the skipped types of its mask."""
+        if not 0 <= i < len(self.runs):
+            raise IndexError(f"segment {i} outside plan of "
+                             f"{len(self.runs)} segments")
+        r = self.runs[i]
+        skips = sorted(t for t, sk in r.sig.skip.items() if sk)
+        return (f"seg[{i}] steps[{r.start},{r.start + r.length}) "
+                f"skip={','.join(skips) if skips else '-'}")
+
     def summary(self) -> str:
         rows = [f"ExecutionPlan: {self.num_steps} steps, {len(self.runs)} "
                 f"segments, {self.num_unique_signatures} unique signatures"]

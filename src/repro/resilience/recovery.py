@@ -93,6 +93,16 @@ class ResiliencePolicy:
     #: None never trips
     entry_fault_threshold: Optional[int] = None
 
+    def deadline(self, est_s: float) -> float:
+        """Watchdog deadline for an advance with estimated service time
+        ``est_s`` — the ``est × factor + floor`` formula lives here (the
+        policy layer) so the engine only supplies the estimate.  Raises
+        when the watchdog is disabled (``watchdog_factor=None``); callers
+        gate on that, as the engine does."""
+        if self.watchdog_factor is None:
+            raise ValueError("watchdog disabled (watchdog_factor=None)")
+        return float(est_s) * self.watchdog_factor + self.watchdog_floor_s
+
     def __post_init__(self):
         if self.watchdog_factor is not None and self.watchdog_factor <= 0:
             raise ValueError("watchdog_factor must be > 0 or None")

@@ -28,6 +28,7 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Tuple
 
+from repro.obs import NULL_TRACER
 from repro.serve.request import Request, RequestQueue
 from repro.serve.store import ArtifactStore, ServableEntry
 
@@ -96,6 +97,9 @@ class MicroBatcher:
         self.max_batch = max_batch
         self.max_wait = max_wait
         self._rr: List[str] = []              # round-robin group order
+        #: observability hook; the engine installs its tracer so batch
+        #: formation emits instant events on the engine track
+        self.tracer = NULL_TRACER
 
     def _group_order(self, groups) -> List[str]:
         for g in sorted(groups):
@@ -148,6 +152,11 @@ class MicroBatcher:
             # move the drained group to the back of the rotation
             self._rr.remove(g)
             self._rr.append(g)
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "form", group=g, entry=entry.name, bucket=len(reqs),
+                    rids=[r.rid for r in reqs],
+                    oldest_wait_s=now - reqs[0].arrival)
             return MicroBatch(requests=reqs, entry=entry, formed_at=now)
         return None
 

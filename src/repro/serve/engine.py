@@ -51,6 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import NULL_TRACER, MetricsRegistry, run_cache_reports
 from repro.resilience.faults import NAN_LATENT, STUCK_BATCH, BatchFault
 from repro.serve.batcher import MicroBatch, MicroBatcher, bucket_sizes
 from repro.serve.metrics import ServerMetrics
@@ -135,6 +136,12 @@ class _Inflight:
     parked_by: object = None
     row_keyed: bool = False
     lineage: Tuple[str, ...] = ()
+    #: observability: tracer track id of this run's span (0 = engine
+    #: track, i.e. tracing disabled at launch) and the engine-wide batch
+    #: serial the track is named after — merge/regroup/split events
+    #: reference serials so lineage survives as span links in the trace
+    track: int = 0
+    serial: int = 0
 
 
 class ServeEngine:
@@ -146,7 +153,8 @@ class ServeEngine:
                  adaptive_chunk: int = 4, eager: bool = False,
                  check: bool = False, admission=None, cost_model=None,
                  resilience=None, continuous: bool = False,
-                 join_horizon: float = 0.5):
+                 join_horizon: float = 0.5, tracer=None, registry=None,
+                 telemetry: bool = False):
         # lazy so repro.serve stays importable without the slo layer
         # loaded (and the layering acyclic: slo never imports the engine)
         from repro.slo.admission import LoadEstimator, ServiceCostModel
@@ -163,7 +171,25 @@ class ServeEngine:
         self.queue = RequestQueue(self.clock)
         self.batcher = MicroBatcher(self.queue, store, max_batch=max_batch,
                                     max_wait=max_wait)
-        self.metrics = ServerMetrics()
+        #: observability (repro.obs): one MetricsRegistry backs every
+        #: ServerMetrics counter plus the controller/backlog time series;
+        #: the tracer (NULL_TRACER by default — all hooks are no-ops)
+        #: records the full batch lifecycle as Chrome trace events, one
+        #: track per in-flight batch.  ``telemetry=True`` additionally
+        #: asks fused adaptive runs to carry their per-step proxy values
+        #: on device (read only at finish — zero extra host syncs) so
+        #: every served request gets a :class:`repro.obs.CacheReport` in
+        #: ``cache_reports``.
+        self.registry = registry if registry is not None else \
+            MetricsRegistry()
+        self.metrics = ServerMetrics(registry=self.registry)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        if tracer is not None:
+            store.tracer = tracer
+            self.batcher.tracer = tracer
+        self.telemetry = bool(telemetry)
+        self.cache_reports: Dict[int, object] = {}   # rid → CacheReport
+        self._serial = 0                      # batch serial (trace tracks)
         #: the scheduling policy object; ``scheduler`` may be a built-in
         #: name ("interleave"/"fcfs"/"edf") or any
         #: repro.slo.SchedulingPolicy (e.g. ElasticPolicy(controller))
@@ -229,17 +255,23 @@ class ServeEngine:
         for r in reqs:
             if r.rid in self._rids:
                 self.metrics.observe_reject("duplicate_rid")
+                self.tracer.instant("reject", rid=r.rid,
+                                    reason="duplicate_rid")
                 continue
             if r.policy not in self.store:
                 self._rids.add(r.rid)
                 self.shed[r.rid] = ("no_entry", now)
                 self.metrics.observe_shed(r, "no_entry", now)
                 self.metrics.observe_reject("no_entry")
+                self.tracer.instant("reject", rid=r.rid, reason="no_entry")
                 continue
             self._rids.add(r.rid)
             accepted.append(r)
             if getattr(r, "max_tau", None) is not None:
                 self._sweep_needed = True
+            if self.tracer.enabled:
+                self.tracer.instant("submit", rid=r.rid, policy=r.policy,
+                                    priority=r.priority)
         self.queue.submit_many(accepted)
 
     def outcome(self, rid: int):
@@ -272,6 +304,7 @@ class ServeEngine:
         self.queue.take_rids(req.policy, [req.rid], now)
         self.shed[req.rid] = (reason, now)
         self.metrics.observe_shed(req, reason, now)
+        self.tracer.instant("shed", rid=req.rid, reason=reason)
 
     def _slo_sweep(self, now: float) -> None:
         """Walk the ready queue: shed requests whose quality floor no
@@ -296,6 +329,8 @@ class ServeEngine:
                     continue
                 if backlog is None:
                     backlog = self._backlog_seconds(now)
+                    self.registry.series("slo.backlog_s").record(now,
+                                                                 backlog)
                 est = self.cost_model.estimate(entry.plan.num_steps,
                                                group=entry.name)
                 d = self.admission.decide(r, now, backlog_s=backlog,
@@ -305,6 +340,8 @@ class ServeEngine:
                 elif d.action == "defer":
                     self.queue.take_rids(g, [r.rid], now)
                     self.metrics.observe_defer(r, now)
+                    self.tracer.instant("defer", rid=r.rid,
+                                        retry_at=d.retry_at)
                     self.queue.resubmit(r, d.retry_at)
 
     # -- scheduling ----------------------------------------------------------
@@ -322,6 +359,29 @@ class ServeEngine:
             self._launch(mb, now)
         if self.continuous:
             self._join_waiting(now)
+
+    def _begin_track(self, mb: MicroBatch, kind: str, *, parent=None,
+                     via=None, chaser_for=None) -> Tuple[int, int]:
+        """Allocate the next batch serial and — when tracing — a tracer
+        track with an open ``run`` span.  Lineage events (join / regroup /
+        split_retry) name the parent serial in the child span's args, the
+        trace-side mirror of ``BatchRecord.lineage``."""
+        self._serial += 1
+        serial, track = self._serial, 0
+        if self.tracer.enabled:
+            track = self.tracer.new_track(
+                f"batch#{serial} {mb.entry.name} b{mb.bucket}")
+            args = {"group": mb.entry.name, "version": mb.entry.version,
+                    "bucket": mb.bucket, "kind": kind,
+                    "rids": list(mb.rids)}
+            if parent is not None:
+                args["parent"] = parent
+            if via is not None:
+                args["via"] = via
+            if chaser_for is not None:
+                args["chaser_for"] = chaser_for
+            self.tracer.begin(track, "run", **args)
+        return serial, track
 
     def _launch(self, mb: MicroBatch, now: float, *,
                 chaser_for=None) -> _Inflight:
@@ -344,6 +404,11 @@ class ServeEngine:
             kind, rs = "eager", _EagerState()
         elif entry.adaptive and self._fused_adaptive:
             kind = "adaptive_fused"
+            if self.telemetry:
+                # decision-trace carry rides the fused program; passed
+                # only when on so executors (and test fakes) without the
+                # kwarg keep working
+                extra["telemetry"] = True
             rs = self.executor.start_adaptive_fused_run(
                 self.params, key, mb.bucket, schedule=entry.schedule,
                 tau=entry.tau, proxy_map=entry.proxy_map,
@@ -363,8 +428,13 @@ class ServeEngine:
                 schedule=entry.schedule, label=label, **extra)
         for r in mb.requests:
             r.started = now
+        serial, track = self._begin_track(
+            mb, kind,
+            chaser_for=chaser_for.serial if chaser_for is not None
+            else None)
         fl = _Inflight(mb=mb, kind=kind, rs=rs, label=label,
-                       row_keyed=row_keyed, chaser_for=chaser_for)
+                       row_keyed=row_keyed, chaser_for=chaser_for,
+                       track=track, serial=serial)
         self._inflight.append(fl)
         return fl
 
@@ -406,6 +476,37 @@ class ServeEngine:
             fl.rs.x = self.executor.sample(
                 self.params, key, fl.mb.bucket, schedule=entry.schedule,
                 label=fl.label)
+
+    def _advance_traced(self, fl: _Inflight) -> None:
+        """``_advance`` under a per-advance span on the batch's track —
+        the try/finally keeps B/E pairs matched even when the advance
+        raises (fault injection), so exported traces always validate."""
+        tr = self.tracer
+        if not tr.enabled or not fl.track:
+            self._advance(fl)
+            return
+        args = {"kind": fl.kind}
+        step = getattr(fl.rs, "step", None)
+        if step is not None:
+            args["step_from"] = int(step)
+        if fl.kind == "plan":
+            plan = getattr(fl.rs, "plan", None)
+            ri = getattr(fl.rs, "run_index", None)
+            if plan is not None and ri is not None \
+                    and hasattr(plan, "run_label"):
+                try:
+                    args["segment"] = plan.run_label(int(ri))
+                except (IndexError, TypeError):
+                    pass
+        tr.begin(fl.track, "advance", **args)
+        try:
+            self._advance(fl)
+        finally:
+            end = {}
+            step = getattr(fl.rs, "step", None)
+            if step is not None:
+                end["step_to"] = int(step)
+            tr.end(fl.track, "advance", **end)
 
     # -- continuous batching (join / regroup / coalesce) ---------------------
 
@@ -473,6 +574,11 @@ class ServeEngine:
             for r in joiners:
                 r.joined_at = now
             self.metrics.observe_join(len(joiners))
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "join", tid=fl.track, at_step=int(fl.rs.step),
+                    chaser=chaser.serial,
+                    rids=[r.rid for r in joiners])
             self._try_merge(chaser)           # step-0 target: merge now
 
     def _merge_pair(self, a: _Inflight, b: _Inflight,
@@ -494,16 +600,23 @@ class ServeEngine:
             label = jnp.asarray([0 if lab is None else int(lab)
                                  for lab in mb.labels], jnp.int32)
         rids = ",".join(str(r) for r in b.mb.rids)
+        # the merged run keeps a's track/serial — in the trace, b's span
+        # ends here with a "merged into a" outcome (a span link by serial)
+        if self.tracer.enabled and b.track:
+            self.tracer.end(b.track, "run", outcome=f"merged:{tag}",
+                            into=a.serial)
         merged = _Inflight(
             mb=mb, kind=a.kind, rs=merged_rs, label=label, taint=taint,
             cost_excluded=a.cost_excluded or b.cost_excluded,
             row_keyed=True,
             lineage=a.lineage + b.lineage
-            + (f"{tag}@{a.rs.step}:{rids}",))
+            + (f"{tag}@{a.rs.step}:{rids}",),
+            track=a.track, serial=a.serial)
         idx = self._inflight.index(a)
         self._inflight[idx] = merged
         self._inflight.remove(b)
-        self.metrics.observe_merge()
+        self.metrics.observe_merge(kind=tag)
+        self.metrics.observe_lineage(tag)
         return merged
 
     def _try_merge(self, chaser: _Inflight) -> None:
@@ -535,6 +648,9 @@ class ServeEngine:
         for s in sorted(bysig):               # deterministic order
             groups.extend(self._p2_groups(bysig[s]))
         subs = self.executor.split_run(fl.rs, groups)
+        if self.tracer.enabled and fl.track:
+            self.tracer.end(fl.track, "run",
+                            outcome=f"regroup:{len(groups)}")
         idx = self._inflight.index(fl)
         repl = []
         for g, sub in zip(groups, subs):
@@ -542,15 +658,20 @@ class ServeEngine:
                 requests=tuple(fl.mb.requests[j] for j in g),
                 entry=fl.mb.entry, formed_at=fl.mb.formed_at)
             rids = ",".join(str(r.rid) for r in mb.requests)
+            serial, track = self._begin_track(mb, fl.kind,
+                                              parent=fl.serial,
+                                              via="regroup")
             repl.append(_Inflight(
                 mb=mb, kind=fl.kind, rs=sub, label=fl.label,
                 taint=(None if fl.taint is None
                        else fl.taint[np.asarray(g)]),
                 cost_excluded=fl.cost_excluded, row_keyed=True,
                 lineage=fl.lineage
-                + (f"regroup@{fl.rs.step}:{rids}",)))
+                + (f"regroup@{fl.rs.step}:{rids}",),
+                track=track, serial=serial))
         self._inflight[idx:idx + 1] = repl
         self.metrics.observe_regroup(len(repl))
+        self.metrics.observe_lineage("regroup", len(repl))
 
     def _coalesce(self) -> None:
         """Opportunistic reverse of regroup: two unlinked runs of the
@@ -620,6 +741,8 @@ class ServeEngine:
         fault path instead of looping forever."""
         mb = fl.mb
         self._unlink(fl)
+        if self.tracer.enabled and fl.track:
+            self.tracer.end(fl.track, "run", outcome=f"fault:{kind}")
         if count:
             self.metrics.observe_fault(mb.group, kind)
             self.store.report_fault(mb.group, kind)
@@ -652,6 +775,7 @@ class ServeEngine:
         if att > pol.retry.max_retries:
             self.shed[r.rid] = (f"fault:{kind}", now)
             self.metrics.observe_shed(r, f"fault:{kind}", now)
+            self.tracer.instant("shed", rid=r.rid, reason=f"fault:{kind}")
             return
         origin = self._origin.setdefault(r.rid, r.policy)
         if pol.degrade:
@@ -666,6 +790,8 @@ class ServeEngine:
                 self.metrics.observe_degrade(r)
         r.started = None
         self.metrics.observe_retry(r)
+        self.tracer.instant("retry", rid=r.rid, attempt=att,
+                            policy=r.policy)
         self.queue.resubmit(r, now + pol.retry.delay(att, r.rid))
 
     def _stall_shed(self, reason: str, now: float) -> None:
@@ -675,15 +801,15 @@ class ServeEngine:
         for r in self.queue.drain_all():
             self.shed[r.rid] = (reason, now)
             self.metrics.observe_shed(r, reason, now)
+            self.tracer.instant("shed", rid=r.rid, reason=reason)
 
     def _watchdog_deadline(self, steps: int, group: str,
                            bucket: Optional[int] = None) -> float:
         # keyed on the same (rung, bucket) the cost model learns on, so
         # a ladder move or a regrouped bucket size gets its own deadline
-        pol = self.resilience
         est = self.cost_model.estimate(max(int(steps), 1), group=group,
                                        bucket=bucket)
-        return est * pol.watchdog_factor + pol.watchdog_floor_s
+        return self.resilience.deadline(est)
 
     def _advance_guarded(self, i: int, fl: _Inflight) -> bool:
         """Advance under the fault net: a ``BatchFault`` raised
@@ -695,7 +821,7 @@ class ServeEngine:
         before = self.clock.now()
         steps_before = remaining_steps(fl.rs)
         try:
-            self._advance(fl)
+            self._advance_traced(fl)
         except BatchFault as bf:
             self._inflight.pop(i)
             self._fault_abort(fl, bf.kind, bf.sample_flags,
@@ -704,8 +830,13 @@ class ServeEngine:
         after = self.clock.now()
         if pol.watchdog_factor is not None:
             steps_adv = steps_before - remaining_steps(fl.rs)
-            if after - before > self._watchdog_deadline(
-                    steps_adv, fl.mb.group, fl.mb.bucket):
+            deadline = self._watchdog_deadline(steps_adv, fl.mb.group,
+                                               fl.mb.bucket)
+            if after - before > deadline:
+                self.tracer.instant("watchdog_fire", tid=fl.track,
+                                    group=fl.mb.group,
+                                    elapsed_s=after - before,
+                                    deadline_s=deadline)
                 if fl.rs.done:
                     # too late to re-queue — deliver, but keep the stall
                     # out of the cost model and on the books
@@ -742,20 +873,28 @@ class ServeEngine:
         bad = [j for j in range(fl.mb.bucket) if not flags[j]]
         groups = self._p2_groups(good)
         subs = self.executor.split_run(fl.rs, groups)
+        if self.tracer.enabled and fl.track:
+            self.tracer.end(fl.track, "run",
+                            outcome=f"split_retry:{len(bad)}")
         self._inflight.pop(i)
         for g, sub in zip(groups, subs):
             mb = MicroBatch(
                 requests=tuple(fl.mb.requests[j] for j in g),
                 entry=fl.mb.entry, formed_at=fl.mb.formed_at)
             rids = ",".join(str(r.rid) for r in mb.requests)
+            serial, track = self._begin_track(mb, fl.kind,
+                                              parent=fl.serial,
+                                              via="split_retry")
             self._inflight.append(_Inflight(
                 mb=mb, kind=fl.kind, rs=sub, label=fl.label, taint=None,
                 cost_excluded=fl.cost_excluded, row_keyed=fl.row_keyed,
                 lineage=fl.lineage
-                + (f"split_retry@{fl.rs.step}:{rids}",)))
+                + (f"split_retry@{fl.rs.step}:{rids}",),
+                track=track, serial=serial))
         for j in bad:
             self._retry_or_fail(fl.mb.requests[j], NAN_LATENT, now)
         self.metrics.observe_row_retry(len(bad))
+        self.metrics.observe_lineage("split_retry", len(groups))
 
     def _finish(self, fl: _Inflight) -> None:
         mb, rs = fl.mb, fl.rs
@@ -814,6 +953,19 @@ class ServeEngine:
                                     bucket=mb.bucket)
         qcost = entry.predicted_quality_cost(decisions)
         self.metrics.observe_quality(entry.tau, qcost, n=mb.bucket)
+        if self.tracer.enabled and fl.track:
+            self.tracer.end(fl.track, "run", outcome="done",
+                            compute_fraction=frac)
+        if self.telemetry:
+            # per-request cache-decision explainers; one boundary read
+            # per finished batch (the fused path device_gets its decision
+            # trace exactly once here — zero per-step syncs)
+            reports = run_cache_reports(rs, mb.bucket,
+                                        schedule=entry.schedule,
+                                        tau=entry.tau)
+            for j, r in enumerate(mb.requests):
+                if j < len(reports) and (flags is None or flags[j]):
+                    self.cache_reports[r.rid] = reports[j]
         record = BatchRecord(
             group=mb.group, version=entry.version, bucket=mb.bucket,
             rids=mb.rids, seeds=mb.seeds, labels=mb.labels,
@@ -845,7 +997,7 @@ class ServeEngine:
             fl = fl.parked_by
             i = self._inflight.index(fl)
         if self.resilience is None:
-            self._advance(fl)
+            self._advance_traced(fl)
         elif self._advance_guarded(i, fl):
             return True                       # batch aborted into recovery
         if fl.rs.done:
@@ -943,5 +1095,12 @@ class ServeEngine:
         compiles["xla_programs"] = sum(
             self.executor.xla_program_count(kind)
             for kind in self.MODEL_PROGRAM_KINDS)
+        # export the calibrated per-step cost model as registry gauges so
+        # snapshot()/exposition() carry the admission controller's view
+        snap = self.cost_model.snapshot()
+        if snap["global"] is not None:
+            self.registry.set_gauge("slo.step_cost_s", snap["global"])
+        for g, v in snap["per_group"].items():
+            self.registry.set_gauge("slo.step_cost_s", v, group=g)
         return self.metrics.report(compile_counts=compiles,
                                    program_budget=self.program_budget())

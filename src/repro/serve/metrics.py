@@ -17,19 +17,38 @@ throughput over all *offered* traffic — shed and deferred requests are
 explicit outcomes with reasons, counted in the denominator, never
 silently dropped — plus the realized-τ histogram and predicted quality
 cost under the elastic τ controller.
+
+Since the ``repro.obs`` layer landed, :class:`ServerMetrics` is a **view
+over a** :class:`~repro.obs.MetricsRegistry`: every ``observe_*`` call
+writes named registry instruments (counters with labels, histograms with
+raw samples), and the attribute surface tests and callers use —
+``metrics.joins``, ``metrics.fault_kinds``, ``metrics.queue_waits`` — is
+reconstructed from the registry on read.  ``report()`` is byte-stable
+with the pre-registry shape (extended, never reshaped), and the same
+numbers are additionally available as a JSON ``registry.snapshot()`` or
+Prometheus-style ``registry.exposition()``.
 """
 from __future__ import annotations
 
+import math
 from typing import Dict, List, Optional, Sequence
 
+from repro.obs import MetricsRegistry
 from repro.serve.request import Request
 
 
 def percentile(xs: Sequence[float], p: float) -> float:
     """Linear-interpolation percentile (numpy-free so fake-executor tests
-    stay dependency-light).  ``p`` in [0, 100]."""
+    stay dependency-light).  ``p`` in [0, 100]; NaN/inf samples are
+    rejected — sorting them would silently corrupt every quantile (NaN
+    compares unordered, so ``sorted`` leaves it wherever it started)."""
     if not xs:
         raise ValueError("percentile of an empty sequence")
+    if not 0 <= p <= 100:
+        raise ValueError(f"percentile p must be in [0, 100], got {p}")
+    for x in xs:
+        if not math.isfinite(x):
+            raise ValueError(f"percentile over non-finite sample {x!r}")
     s = sorted(xs)
     if len(s) == 1:
         return float(s[0])
@@ -39,16 +58,20 @@ def percentile(xs: Sequence[float], p: float) -> float:
     return float(s[lo] + (s[hi] - s[lo]) * (rank - lo))
 
 
-def _dist(xs: List[float]) -> Dict[str, Optional[float]]:
+def _dist(xs: Sequence[float]) -> Dict[str, Optional[float]]:
     # empty-safe: shed-heavy scenarios legitimately produce zero-sample
     # distributions (e.g. every request of a group rejected) — report
-    # them as null fields, never ZeroDivisionError/IndexError
+    # them as null fields, never ZeroDivisionError/IndexError.  Non-finite
+    # samples raise (via percentile) — they mean an upstream accounting
+    # bug, not a legitimate latency.
+    xs = list(xs)
     if not xs:
         return {"mean": None, "p50": None, "p95": None, "max": None,
                 "n": 0}
+    p50 = percentile(xs, 50)
     return {
         "mean": sum(xs) / len(xs),
-        "p50": percentile(xs, 50),
+        "p50": p50,
         "p95": percentile(xs, 95),
         "max": max(xs),
         "n": len(xs),
@@ -57,53 +80,29 @@ def _dist(xs: List[float]) -> Dict[str, Optional[float]]:
 
 class ServerMetrics:
     """Accumulates per-request and per-batch observations; ``report()``
-    renders one JSON-safe snapshot."""
+    renders one JSON-safe snapshot.  All state lives in the
+    :class:`~repro.obs.MetricsRegistry` (pass one to share it with the
+    engine's tracer/controller plumbing; one is created otherwise)."""
 
-    def __init__(self):
-        self.queue_waits: List[float] = []
-        self.service_times: List[float] = []
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
         self.first_arrival: Optional[float] = None
         self.last_finish: Optional[float] = None
-        self.batches = 0
-        self.bucket_counts: Dict[int, int] = {}
-        self.group_requests: Dict[str, int] = {}
-        self._evals_done = 0.0                # request-weighted layer evals
-        self._evals_total = 0.0
-        # SLO accounting: shed/deferred requests are first-class outcomes,
-        # never silently dropped — they widen goodput's denominator
-        self.shed_total = 0
-        self.shed_reasons: Dict[str, int] = {}
-        self.deferrals = 0
-        self.slo_total = 0                    # requests carrying a deadline
-        self.slo_attained = 0                 # ... that finished in time
-        self.good = 0                         # finished ∧ deadline attained
-        self.tau_counts: Dict[float, int] = {}    # realized-τ histogram
-        self.quality_costs: List[float] = []  # predicted per-request cost
-        # resilience accounting: every fault, retry, survivor re-queue,
-        # ladder degradation, and rejected submission is a counted event
-        self.faults_total = 0
-        self.fault_kinds: Dict[str, int] = {}
-        self.fault_groups: Dict[str, int] = {}
-        self.retries = 0
-        self.requeued = 0                     # healthy survivors re-queued
-        self.degraded = 0                     # requests stepped down-ladder
-        self.rejects: Dict[str, int] = {}     # submit-time rejections
-        # continuous batching: boundary joins, mask-signature regroups,
-        # opportunistic coalesces, and per-row retries (faulted rows split
-        # out while survivors keep their run-state)
-        self.joins = 0                        # chaser launches
-        self.joined_requests = 0
-        self.regroups = 0                     # signature-driven splits
-        self.merges = 0                       # run-state merges
-        self.row_retries = 0                  # rows split out for retry
 
     # -- observation ---------------------------------------------------------
 
     def observe_request(self, req: Request) -> None:
         if req.queue_wait is None or req.service_time is None:
             raise ValueError(f"request {req.rid} is missing timestamps")
-        self.queue_waits.append(req.queue_wait)
-        self.service_times.append(req.service_time)
+        reg = self.registry
+        reg.observe("serve.queue_wait_s", req.queue_wait)
+        reg.observe("serve.service_s", req.service_time)
+        if req.joined_at is not None:
+            # joiner-specific wait: a boundary join ends the queue wait
+            # at the chaser launch — this distribution is what the join
+            # mechanism is supposed to improve
+            reg.observe("serve.queue_wait_joined_s", req.queue_wait)
         if self.first_arrival is None or req.arrival < self.first_arrival:
             self.first_arrival = req.arrival
         if self.last_finish is None or req.finished > self.last_finish:
@@ -111,94 +110,228 @@ class ServerMetrics:
         deadline = getattr(req, "deadline", None)
         attained = deadline is None or req.finished <= deadline
         if deadline is not None:
-            self.slo_total += 1
-            self.slo_attained += int(attained)
-        self.good += int(attained)
+            reg.inc("slo.with_deadline")
+            if attained:
+                reg.inc("slo.attained")
+        if attained:
+            reg.inc("slo.good")
 
     def observe_shed(self, req: Request, reason: str, now: float) -> None:
         """A rejected request: counted against attainment and goodput
         (its deadline — if any — is definitionally missed)."""
-        self.shed_total += 1
-        self.shed_reasons[reason] = self.shed_reasons.get(reason, 0) + 1
+        self.registry.inc("serve.shed", reason=reason)
         if getattr(req, "deadline", None) is not None:
-            self.slo_total += 1
+            self.registry.inc("slo.with_deadline")
         if req.arrival is not None and (
                 self.first_arrival is None
                 or req.arrival < self.first_arrival):
             self.first_arrival = req.arrival
 
     def observe_defer(self, req: Request, now: float) -> None:
-        self.deferrals += 1
+        self.registry.inc("serve.deferrals")
 
     # -- resilience ----------------------------------------------------------
 
     def observe_fault(self, group: str, kind: str) -> None:
         """One micro-batch fault (NaN latent, stuck advance, injected
         error, …) — counted per kind and per serving group."""
-        self.faults_total += 1
-        self.fault_kinds[kind] = self.fault_kinds.get(kind, 0) + 1
-        self.fault_groups[group] = self.fault_groups.get(group, 0) + 1
+        self.registry.inc("resilience.faults", kind=kind)
+        self.registry.inc("resilience.fault_groups", group=group)
 
     def observe_retry(self, req: Request) -> None:
-        self.retries += 1
+        self.registry.inc("resilience.retries")
 
     def observe_requeue(self, n: int = 1) -> None:
         """Healthy survivors of an aborted batch put back in the queue at
         their original arrival."""
-        self.requeued += int(n)
+        self.registry.inc("resilience.requeued", int(n))
 
     def observe_degrade(self, req: Request) -> None:
         """A faulted request stepped down the degradation ladder for its
         retry (rung → τ=0 → no_cache)."""
-        self.degraded += 1
+        self.registry.inc("resilience.degraded")
 
     def observe_reject(self, reason: str) -> None:
         """A submission rejected at the door with a reasoned outcome
         (``no_entry``, ``duplicate_rid``) instead of an engine-killing
         exception."""
-        self.rejects[reason] = self.rejects.get(reason, 0) + 1
+        self.registry.inc("serve.rejects", reason=reason)
 
     # -- continuous batching -------------------------------------------------
 
     def observe_join(self, n: int = 1) -> None:
         """``n`` waiting requests joined an in-flight run at a boundary —
         their queue wait ends at the join launch, not at batch finish."""
-        self.joins += 1
-        self.joined_requests += int(n)
+        self.registry.inc("continuous.joins")
+        self.registry.inc("continuous.joined_requests", int(n))
 
     def observe_regroup(self, n_subruns: int) -> None:
         """One in-flight batch split into ``n_subruns`` by realized mask
         signature at a chunk/segment boundary."""
-        self.regroups += 1
+        self.registry.inc("continuous.regroups")
 
-    def observe_merge(self, n: int = 1) -> None:
-        """``n`` run-state merges (chaser catch-up or coalesce)."""
-        self.merges += int(n)
+    def observe_merge(self, n: int = 1, kind: str = "join") -> None:
+        """``n`` run-state merges; ``kind`` distinguishes chaser catch-up
+        (``join``) from opportunistic ``coalesce``."""
+        self.registry.inc("continuous.merges", int(n), kind=kind)
 
     def observe_row_retry(self, n: int = 1) -> None:
         """``n`` faulted rows split out of a continuing batch for retry
         while the survivors kept their run-state."""
-        self.row_retries += int(n)
+        self.registry.inc("continuous.row_retries", int(n))
+
+    def observe_lineage(self, tag: str, n: int = 1) -> None:
+        """``n`` run-state lineage events of one kind (``join`` /
+        ``regroup`` / ``coalesce`` / ``split_retry``) — the first-class
+        form of the counts encoded in ``BatchRecord.lineage`` tags."""
+        self.registry.inc("continuous.lineage", int(n), event=tag)
 
     def observe_quality(self, tau: float, quality_cost: Optional[float],
                         n: int = 1) -> None:
         """Realized τ (and predicted quality cost, when the entry carries
         a proxy→error map) of ``n`` requests served by one batch."""
         t = round(float(tau), 6)
-        self.tau_counts[t] = self.tau_counts.get(t, 0) + n
+        self.registry.inc("serve.realized_tau", n, tau=repr(t))
         if quality_cost is not None:
-            self.quality_costs.extend([float(quality_cost)] * n)
+            for _ in range(int(n)):
+                self.registry.observe("serve.quality_cost",
+                                      float(quality_cost))
 
     def observe_batch(self, group: str, bucket: int,
                       compute_fraction: float, num_steps: int,
                       num_types: int) -> None:
-        self.batches += 1
-        self.bucket_counts[bucket] = self.bucket_counts.get(bucket, 0) + 1
-        self.group_requests[group] = (self.group_requests.get(group, 0)
-                                      + bucket)
+        reg = self.registry
+        reg.inc("serve.batches")
+        reg.inc("serve.bucket_counts", bucket=int(bucket))
+        reg.inc("serve.group_requests", int(bucket), group=group)
         evals = float(num_steps * num_types * bucket)
-        self._evals_total += evals
-        self._evals_done += compute_fraction * evals
+        reg.inc("serve.evals_total", evals)
+        reg.inc("serve.evals_done", compute_fraction * evals)
+
+    # -- registry-backed attribute view --------------------------------------
+    # The pre-obs ServerMetrics exposed these as plain attributes; tests,
+    # benchmarks, and the SLO/resilience layers read them — keep every one
+    # as a property over the registry.
+
+    @property
+    def queue_waits(self) -> List[float]:
+        return self.registry.samples("serve.queue_wait_s")
+
+    @property
+    def service_times(self) -> List[float]:
+        return self.registry.samples("serve.service_s")
+
+    @property
+    def joined_queue_waits(self) -> List[float]:
+        return self.registry.samples("serve.queue_wait_joined_s")
+
+    @property
+    def quality_costs(self) -> List[float]:
+        return self.registry.samples("serve.quality_cost")
+
+    @property
+    def batches(self) -> int:
+        return int(self.registry.counter("serve.batches"))
+
+    @property
+    def bucket_counts(self) -> Dict[int, int]:
+        return {int(k): int(v) for k, v in
+                self.registry.labeled("serve.bucket_counts",
+                                      "bucket").items()}
+
+    @property
+    def group_requests(self) -> Dict[str, int]:
+        return {k: int(v) for k, v in
+                self.registry.labeled("serve.group_requests",
+                                      "group").items()}
+
+    @property
+    def shed_total(self) -> int:
+        return int(self.registry.counter_total("serve.shed"))
+
+    @property
+    def shed_reasons(self) -> Dict[str, int]:
+        return {k: int(v) for k, v in
+                self.registry.labeled("serve.shed", "reason").items()}
+
+    @property
+    def deferrals(self) -> int:
+        return int(self.registry.counter("serve.deferrals"))
+
+    @property
+    def slo_total(self) -> int:
+        return int(self.registry.counter("slo.with_deadline"))
+
+    @property
+    def slo_attained(self) -> int:
+        return int(self.registry.counter("slo.attained"))
+
+    @property
+    def good(self) -> int:
+        return int(self.registry.counter("slo.good"))
+
+    @property
+    def tau_counts(self) -> Dict[float, int]:
+        return {float(k): int(v) for k, v in
+                self.registry.labeled("serve.realized_tau", "tau").items()}
+
+    @property
+    def faults_total(self) -> int:
+        return int(self.registry.counter_total("resilience.faults"))
+
+    @property
+    def fault_kinds(self) -> Dict[str, int]:
+        return {k: int(v) for k, v in
+                self.registry.labeled("resilience.faults", "kind").items()}
+
+    @property
+    def fault_groups(self) -> Dict[str, int]:
+        return {k: int(v) for k, v in
+                self.registry.labeled("resilience.fault_groups",
+                                      "group").items()}
+
+    @property
+    def retries(self) -> int:
+        return int(self.registry.counter("resilience.retries"))
+
+    @property
+    def requeued(self) -> int:
+        return int(self.registry.counter("resilience.requeued"))
+
+    @property
+    def degraded(self) -> int:
+        return int(self.registry.counter("resilience.degraded"))
+
+    @property
+    def rejects(self) -> Dict[str, int]:
+        return {k: int(v) for k, v in
+                self.registry.labeled("serve.rejects", "reason").items()}
+
+    @property
+    def joins(self) -> int:
+        return int(self.registry.counter("continuous.joins"))
+
+    @property
+    def joined_requests(self) -> int:
+        return int(self.registry.counter("continuous.joined_requests"))
+
+    @property
+    def regroups(self) -> int:
+        return int(self.registry.counter("continuous.regroups"))
+
+    @property
+    def merges(self) -> int:
+        return int(self.registry.counter_total("continuous.merges"))
+
+    @property
+    def row_retries(self) -> int:
+        return int(self.registry.counter("continuous.row_retries"))
+
+    @property
+    def lineage_events(self) -> Dict[str, int]:
+        return {k: int(v) for k, v in
+                self.registry.labeled("continuous.lineage",
+                                      "event").items()}
 
     # -- reporting -----------------------------------------------------------
 
@@ -207,18 +340,22 @@ class ServerMetrics:
         return len(self.queue_waits)
 
     def realized_compute_fraction(self) -> Optional[float]:
-        if self._evals_total == 0:
+        total = self.registry.counter("serve.evals_total")
+        if total == 0:
             return None
-        return self._evals_done / self._evals_total
+        return self.registry.counter("serve.evals_done") / total
 
     def report(self, compile_counts: Optional[Dict[str, int]] = None,
                program_budget: Optional[int] = None) -> Dict:
         """One JSON-safe snapshot.  Throughput is measured over the
         first-arrival → last-finish makespan (open-loop serving: arrival
         gaps count against the server, idle pre-warm time does not)."""
-        offered = self.requests + self.shed_total
+        requests = self.requests
+        offered = requests + self.shed_total
+        merges_by_kind = self.registry.labeled("continuous.merges",
+                                               "kind")
         out: Dict = {
-            "requests": self.requests,
+            "requests": requests,
             "batches": self.batches,
             "buckets": {str(b): c
                         for b, c in sorted(self.bucket_counts.items())},
@@ -255,15 +392,19 @@ class ServerMetrics:
             "joined_requests": self.joined_requests,
             "regroups": self.regroups,
             "merges": self.merges,
+            "join_merges": int(merges_by_kind.get("join", 0)),
+            "coalesces": int(merges_by_kind.get("coalesce", 0)),
             "row_retries": self.row_retries,
+            "lineage_events": dict(sorted(self.lineage_events.items())),
+            "joined_queue_wait_s": _dist(self.joined_queue_waits),
         }
         out["realized_tau"] = {f"{t:g}": c for t, c in
                                sorted(self.tau_counts.items())}
         out["predicted_quality_cost"] = _dist(self.quality_costs)
-        if self.requests:
+        if requests:
             makespan = self.last_finish - self.first_arrival
             out["makespan_s"] = makespan
-            out["throughput_rps"] = (self.requests / makespan
+            out["throughput_rps"] = (requests / makespan
                                      if makespan > 0 else float("inf"))
             out["slo"]["goodput_rps"] = (self.good / makespan
                                          if makespan > 0 else float("inf"))

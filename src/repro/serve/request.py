@@ -125,6 +125,14 @@ class Request:
         return self.finished - self.started
 
     @property
+    def joined(self) -> bool:
+        """Whether this request entered service via a boundary join
+        (chaser launch) rather than a fresh batch formation — the
+        metrics layer keys its joiner-specific wait distribution on
+        this."""
+        return self.joined_at is not None
+
+    @property
     def deadline(self) -> Optional[float]:
         return self.slo.deadline if self.slo is not None else None
 

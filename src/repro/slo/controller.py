@@ -59,7 +59,7 @@ class ElasticTauController:
                  window: int = 64, min_samples: int = 4,
                  interval_s: float = 1.0, band: float = 0.25,
                  cooldown_s: float = 3.0, settle: int = 2,
-                 start_rung: int = 0):
+                 start_rung: int = 0, registry=None, tracer=None):
         if num_rungs < 1:
             raise ValueError(f"num_rungs must be >= 1, got {num_rungs}")
         if target_p95_wait_s <= 0:
@@ -79,6 +79,12 @@ class ElasticTauController:
         self.cooldown_s = float(cooldown_s)
         self.settle = max(int(settle), 1)
         self.rung = int(start_rung)
+        #: optional observability hooks (repro.obs): the registry gets
+        #: ``slo.p95_wait_s`` / ``slo.rung`` ring-buffer time series at
+        #: every evaluation (not just changes — trajectories need the
+        #: holds too); the tracer gets a ``rung_move`` instant per change
+        self.registry = registry
+        self.tracer = tracer
         self.history: List[Tuple[float, int, float]] = []
         self._waits: Deque[float] = deque(maxlen=self.window)
         self._last_eval: Optional[float] = None
@@ -93,11 +99,17 @@ class ElasticTauController:
                 or now - self._last_change >= self.cooldown_s)
 
     def _move(self, now: float, rung: int, p95: float) -> int:
+        old = self.rung
         self.rung = rung
         self.history.append((now, rung, p95))
         self._last_change = now
         self._waits.clear()
         self._calm = 0
+        if self.tracer is not None:
+            self.tracer.instant("rung_move", rung=rung, from_rung=old,
+                                p95_wait_s=p95)
+        if self.registry is not None:
+            self.registry.series("slo.rung").record(now, float(rung))
         return rung
 
     def update(self, now: float) -> Optional[int]:
@@ -110,6 +122,8 @@ class ElasticTauController:
             return None
         self._last_eval = now
         p95 = _p95(self._waits)
+        if self.registry is not None:
+            self.registry.series("slo.p95_wait_s").record(now, p95)
         if p95 > self.target * (1 + self.band):
             self._calm = 0
             if self.rung + 1 < self.num_rungs and self._cooled(now):

@@ -33,6 +33,10 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers", "chaos: seeded fault-injection tests (the CI chaos "
         "lane runs `-m chaos` over the fixed seed matrix)")
+    config.addinivalue_line(
+        "markers", "obs: observability tests — tracer/registry/cache-"
+        "report units plus the zero-sync telemetry regression (the CI "
+        "obs lane runs `-m obs`)")
 
 
 def pytest_collection_modifyitems(config, items):
