@@ -1,0 +1,541 @@
+"""Durability benchmark: crash-safe serving under a seeded kill ramp,
+and the checkpoint cost of earning it.
+
+Four sections, every contract asserted in-run:
+
+**Virtual kill ramp (deterministic).**  A fake executor implementing the
+run-state snapshot seam serves one mixed static/adaptive/eager trace on
+a :class:`~repro.serve.request.VirtualClock` while a seeded
+:class:`~repro.durable.KillPlan` kills the engine at scheduler-tick
+boundaries across ``DURABILITY_BENCH_RATES`` × the kill-seed matrix.
+Every incarnation rebuilds over the same write-ahead journal + snapshot
+dir and calls ``recover()``.  At every (rate, seed) the bench asserts
+**zero lost requests**: offered == finished + shed, and a post-run
+journal replay shows nothing pending.  At rate 0 there are no restarts
+and goodput is exactly 1.
+
+**Checkpoint overhead.**  The same ``DURABILITY_BENCH_N``-request
+(default 256) virtual trace drains with durability off and on.  The on
+drain must produce bit-identical results and a bit-equal virtual
+makespan (checkpointing never perturbs scheduling), and the traced time
+spent writing boundary snapshots must stay under
+``DURABILITY_BENCH_MAX_OVERHEAD`` (default 5%) of the drain wall.
+
+**Real restore path.**  The smoke DiT serves a static + fused-adaptive
+mix with checkpointing on; the process is killed mid-flight at a
+boundary; the restarted engine restores both batches from snapshots and
+finishes.  Asserted: every latent bit-identical to an uninterrupted
+engine, zero host syncs on the fused path with checkpointing on.
+
+**Real replay path.**  Same setup, but every snapshot is tampered before
+recovery: each must be quarantined with a reason, and the replayed-from-
+start requests must still land bit-identical to a solo generate of each
+request's own key (the row-keys determinism contract).
+
+Writes ``BENCH_durability.json`` (results dir + repo-root mirror).
+
+    PYTHONPATH=src python -m benchmarks.run --only durability
+    DURABILITY_BENCH_N=64 PYTHONPATH=src python -m benchmarks.durability_bench
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro import serve
+from repro.cache.artifact import CacheArtifact
+from repro.core import plan as plan_lib
+from repro.core import schedule as S
+from repro.durable import (JournalState, KillPlan, SnapshotStore, crash,
+                           drain_with_kills)
+
+N = int(os.environ.get("DURABILITY_BENCH_N", "256"))
+RAMP_N = int(os.environ.get("DURABILITY_BENCH_RAMP_N", "48"))
+RATES = [float(r) for r in
+         os.environ.get("DURABILITY_BENCH_RATES", "0,0.1,0.3").split(",")]
+SEEDS = [int(s) for s in
+         os.environ.get("DURABILITY_BENCH_SEEDS", "0,7,1234").split(",")]
+EVERY = int(os.environ.get("DURABILITY_BENCH_EVERY", "4"))
+MAX_OVERHEAD = float(os.environ.get("DURABILITY_BENCH_MAX_OVERHEAD",
+                                    "0.05"))
+STEPS = 8
+MAX_BATCH = 8
+ARRIVAL_GAP = 0.25                    # virtual s between arrivals
+
+REAL_STEPS = int(os.environ.get("DURABILITY_BENCH_REAL_STEPS", "6"))
+REAL_REQUESTS = int(os.environ.get("DURABILITY_BENCH_REAL_REQUESTS", "4"))
+
+
+# ---------------------------------------------------------------------------
+# Virtual-clock deployment with the snapshot seam (same fake shape as
+# tests/test_durable.py)
+# ---------------------------------------------------------------------------
+
+class _Cfg:
+    name = "fake-arch"
+
+    def layer_types(self):
+        return ("attn", "ffn")
+
+
+class _Solver:
+    name = "ddim"
+
+    def __init__(self, num_steps):
+        self.num_steps = num_steps
+
+
+@dataclasses.dataclass
+class _RunState:
+    plan: plan_lib.ExecutionPlan
+    batch: int
+    run_index: int = 0
+    x: object = None
+    decisions = None
+
+    @property
+    def done(self):
+        return self.run_index >= len(self.plan.runs)
+
+
+@dataclasses.dataclass
+class _AdaptiveState:
+    schedule: object
+    batch: int
+    step: int = 0
+    x: object = None
+    decisions: tuple = ()
+
+    @property
+    def done(self):
+        return self.step >= self.schedule.num_steps
+
+
+class _FakeExecutor:
+    """Virtual-clock fake with export/import — the protocol the real
+    SmoothCacheExecutor implements for boundary snapshots."""
+
+    supports_export = True
+
+    def __init__(self, clock, step_cost=1.0):
+        self.clock = clock
+        self.step_cost = step_cost
+        self._programs = set()
+
+    def _charge(self, skip, length):
+        computed = sum(1 for sk in skip.values() if not sk)
+        self.clock.advance(self.step_cost * length
+                           * computed / max(len(skip), 1))
+
+    def start_run(self, params, key, batch, *, plan, schedule=None,
+                  label=None, memory=None):
+        return _RunState(plan=plan, batch=batch)
+
+    def advance_run(self, params, rs, *, check=False):
+        run = rs.plan.runs[rs.run_index]
+        self._charge(run.sig.skip, run.length)
+        rs = dataclasses.replace(rs, run_index=rs.run_index + 1)
+        if rs.done:
+            rs.x = np.arange(rs.batch, dtype=np.float64)[:, None]
+        return rs
+
+    def start_adaptive_run(self, params, key, batch, *, schedule, tau,
+                           proxy_map=None, pool=None, k_max=3, label=None,
+                           memory=None):
+        return _AdaptiveState(schedule=schedule, batch=batch)
+
+    def advance_adaptive_run(self, params, rs):
+        mask = {t: bool(v[rs.step]) for t, v in rs.schedule.skip.items()}
+        self._charge(mask, 1)
+        skipset = tuple(sorted(t for t, sk in mask.items() if sk))
+        rs = dataclasses.replace(rs, step=rs.step + 1,
+                                 decisions=rs.decisions + (skipset,))
+        if rs.done:
+            rs.x = np.arange(rs.batch, dtype=np.float64)[:, None]
+        return rs
+
+    def sample(self, params, key, batch, *, schedule=None, label=None,
+               memory=None):
+        for s in range(schedule.num_steps):
+            self._charge({t: bool(v[s])
+                          for t, v in schedule.skip.items()}, 1)
+        return np.arange(batch, dtype=np.float64)[:, None]
+
+    def compiled_variant_count(self, kind=None):
+        return len(self._programs)
+
+    def xla_program_count(self, kind=None):
+        return len(self._programs)
+
+    def export_run(self, rs):
+        if isinstance(rs, _RunState):
+            return "plan", {}, {"batch": rs.batch,
+                                "run_index": rs.run_index}
+        return "adaptive", {}, {
+            "batch": rs.batch, "step": rs.step,
+            "decisions": [list(d) for d in rs.decisions]}
+
+    def import_run(self, params, kind, arrays, static, *, plan=None,
+                   schedule=None, tau=0.0, proxy_map=None, pool=None,
+                   k_max=3):
+        if kind == "plan":
+            return _RunState(plan=plan, batch=int(static["batch"]),
+                             run_index=int(static["run_index"]))
+        return _AdaptiveState(
+            schedule=schedule, batch=int(static["batch"]),
+            step=int(static["step"]),
+            decisions=tuple(tuple(d)
+                            for d in static.get("decisions", ())))
+
+
+def _artifact(num_steps, arch="fake-arch", types=("attn", "ffn"),
+              k_max=1):
+    sch = S.fora(types, num_steps, 2)
+    pool = [list(sig.live_in) for sig in plan_lib.mask_lattice(sch)]
+    return CacheArtifact(
+        arch=arch, solver="ddim", num_steps=num_steps,
+        policy={"name": "adaptive", "base": {"name": "static", "n": 2},
+                "tau": 0.1, "k_max": k_max},
+        curves={}, schedule=sch,
+        plan=plan_lib.analyze(sch).to_jsonable(),
+        adaptive={"tau": 0.1, "k_max": k_max,
+                  "proxy_map": {"coeffs": {t: [0.0, 0.01] for t in types},
+                                "mean_proxy": None},
+                  "pool": pool},
+        meta={})
+
+
+def _store():
+    store = serve.ArtifactStore(_Cfg(), _Solver(STEPS))
+    store.add_policy("static2", "static:n=2")
+    store.add_policy("no_cache", "none")
+    store.add_artifact("adaptive", _artifact(STEPS))
+    return store
+
+
+def _trace(n):
+    policies = ("static2", "adaptive", "no_cache")
+    return [serve.Request(rid=i, seed=i, policy=policies[i % 3],
+                          arrival=ARRIVAL_GAP * i) for i in range(n)]
+
+
+def _factory(tmpdir, **kw):
+    jpath = os.path.join(tmpdir, "journal.jsonl")
+    sdir = os.path.join(tmpdir, "snapshots")
+
+    def make():
+        clock = serve.VirtualClock()
+        return serve.ServeEngine(
+            _FakeExecutor(clock), params=None, store=_store(),
+            clock=clock, max_batch=MAX_BATCH, journal=jpath,
+            snapshot_dir=sdir, checkpoint_every=EVERY, **kw)
+    return make, jpath
+
+
+# ---------------------------------------------------------------------------
+# Section 1: kill ramp — zero lost requests at every (rate, seed)
+# ---------------------------------------------------------------------------
+
+def _kill_ramp():
+    out = {}
+    for rate in RATES:
+        per_seed = {}
+        for seed in SEEDS:
+            with tempfile.TemporaryDirectory() as td:
+                make, jpath = _factory(td)
+                eng0 = make()
+                eng0.submit(*_trace(RAMP_N))
+                crash(eng0)
+                plan = KillPlan(seed=seed, kill_rate=rate, max_kills=25)
+                t0 = time.perf_counter()
+                report = drain_with_kills(make, plan, max_restarts=100)
+                wall = time.perf_counter() - t0
+                # the durability contract, asserted at every ramp point:
+                # offered == finished + shed — nothing vanishes in a kill
+                resolved = (set(report.delivered)
+                            | set(report.engine.shed))
+                assert resolved == set(range(RAMP_N)), (
+                    f"rate={rate} seed={seed}: "
+                    f"{RAMP_N - len(resolved)} requests lost")
+                st = JournalState.replay(jpath)
+                assert st.pending() == {}, "journal still shows pending"
+                if rate == 0:
+                    assert report.restarts == 0
+                    assert len(report.delivered) == RAMP_N
+                per_seed[str(seed)] = {
+                    "restarts": report.restarts,
+                    "ticks": report.ticks,
+                    "delivered": len(report.delivered),
+                    "shed": len(report.engine.shed),
+                    "journal_events": len(st.events),
+                    "wall_s": wall,
+                }
+        agg = sum(v["restarts"] for v in per_seed.values())
+        common.emit(f"durability/ramp@{rate:g}", agg * 1e6,
+                    f"seeds={len(SEEDS)};restarts={agg};lost=0")
+        out[f"{rate:g}"] = per_seed
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Section 2: checkpoint overhead on the N-request virtual drain
+# ---------------------------------------------------------------------------
+
+class _TimedSnapshots(SnapshotStore):
+    """SnapshotStore that accumulates wall time spent writing — the
+    traced checkpoint cost, separated from scheduling."""
+
+    def __init__(self, dirpath):
+        super().__init__(dirpath)
+        self.seconds = 0.0
+
+    def save(self, serial, arrays, meta):
+        t0 = time.perf_counter()
+        out = super().save(serial, arrays, meta)
+        self.seconds += time.perf_counter() - t0
+        return out
+
+
+def _overhead():
+    trace = _trace(N)
+
+    clock = serve.VirtualClock()
+    eng_off = serve.ServeEngine(_FakeExecutor(clock), params=None,
+                                store=_store(), clock=clock,
+                                max_batch=MAX_BATCH)
+    eng_off.submit(*[dataclasses.replace(r) for r in trace])
+    t0 = time.perf_counter()
+    eng_off.run_until_drained()
+    wall_off = time.perf_counter() - t0
+
+    with tempfile.TemporaryDirectory() as td:
+        make, _ = _factory(td)
+        eng_on = make()
+        timed = _TimedSnapshots(os.path.join(td, "snapshots"))
+        eng_on._snapshots = timed
+        eng_on.submit(*[dataclasses.replace(r) for r in trace])
+        t0 = time.perf_counter()
+        eng_on.run_until_drained()
+        wall_on = time.perf_counter() - t0
+
+    # checkpointing must not change a single scheduling decision or bit
+    assert sorted(eng_on.results) == sorted(eng_off.results)
+    assert all(np.array_equal(eng_on.results[r], eng_off.results[r])
+               for r in eng_on.results)
+    assert eng_on.clock.now() == eng_off.clock.now(), (
+        "checkpointing perturbed the virtual makespan")
+    assert eng_on.metrics.checkpoints > 0
+    overhead = timed.seconds / max(wall_on, 1e-9)
+    assert overhead < MAX_OVERHEAD, (
+        f"checkpoint overhead {overhead:.1%} exceeds "
+        f"{MAX_OVERHEAD:.0%} on the {N}-request drain "
+        f"(cadence every={EVERY})")
+    common.emit("durability/overhead", overhead * 1e6,
+                f"ckpt_s={timed.seconds:.4f};wall_s={wall_on:.3f};"
+                f"checkpoints={eng_on.metrics.checkpoints};"
+                f"bytes={eng_on.metrics.checkpoint_bytes}")
+    return {
+        "requests": N,
+        "checkpoint_every": EVERY,
+        "checkpoints": eng_on.metrics.checkpoints,
+        "checkpoint_bytes": eng_on.metrics.checkpoint_bytes,
+        "checkpoint_s": timed.seconds,
+        "wall_on_s": wall_on,
+        "wall_off_s": wall_off,
+        "overhead_fraction": overhead,
+        "max_overhead": MAX_OVERHEAD,
+        "results_bit_identical": True,
+        "virtual_makespan_equal": True,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Sections 3 + 4: real smoke DiT — restore and replay, both bit-identical
+# ---------------------------------------------------------------------------
+
+def _small_dit():
+    import jax
+    from repro import configs
+    from repro.core import diffusion
+    cfg = configs.get("dit-xl-256", "smoke")
+    params = diffusion.init_params(jax.random.PRNGKey(0), cfg)
+    params = jax.tree.map(
+        lambda a: a + 0.05 * jax.random.normal(jax.random.PRNGKey(7),
+                                               a.shape),
+        params)
+    return cfg, params
+
+
+def _step_until(eng, cond, limit):
+    for _ in range(limit):
+        if cond():
+            return
+        assert eng.step(), "engine drained before the kill condition"
+    raise AssertionError("kill condition never reached")
+
+
+def _real_restore(cfg, params):
+    from repro.core import solvers
+    from repro.core.executor import SmoothCacheExecutor
+
+    def build(journal=None, snapshot_dir=None):
+        ex = SmoothCacheExecutor(cfg, solvers.ddim(REAL_STEPS),
+                                 cfg_scale=1.5)
+        store = serve.ArtifactStore(cfg, solvers.ddim(REAL_STEPS),
+                                    cfg_scale=1.5)
+        store.add_policy("static2", "static:n=2")
+        store.add_artifact("adaptive", _artifact(
+            REAL_STEPS, arch=cfg.name, types=cfg.layer_types(), k_max=2))
+        eng = serve.ServeEngine(
+            ex, params, store, max_batch=2, max_inflight=2,
+            clock=serve.VirtualClock(), check=True, adaptive_chunk=2,
+            journal=journal, snapshot_dir=snapshot_dir)
+        return eng, ex
+
+    def reqs():
+        return [serve.Request(
+            rid=i, seed=100 + i,
+            policy="adaptive" if i >= REAL_REQUESTS // 2 else "static2",
+            label=i % cfg.num_classes, arrival=0.0)
+            for i in range(REAL_REQUESTS)]
+
+    base_eng, _ = build()
+    base_eng.submit(*reqs())
+    base = base_eng.run_until_drained()
+
+    with tempfile.TemporaryDirectory() as td:
+        jpath = os.path.join(td, "journal.jsonl")
+        sdir = os.path.join(td, "snapshots")
+        eng, _ = build(jpath, sdir)
+        eng.submit(*reqs())
+        _step_until(eng, lambda: len(eng._snapshots.live()) >= 2
+                    and all(not fl.rs.done for fl in eng._inflight),
+                    limit=8)
+        crash(eng)
+
+        eng2, ex2 = build(jpath, sdir)
+        t0 = time.perf_counter()
+        summary = eng2.recover()
+        wall_recover = time.perf_counter() - t0
+        assert summary["restored_runs"] >= 1, "nothing restored"
+        assert summary["refused"] == []
+        res = eng2.run_until_drained()
+    assert sorted(res) == sorted(base)
+    for rid in base:
+        np.testing.assert_array_equal(res[rid], base[rid])
+    # the fused adaptive path stays sync-free with checkpointing on
+    assert ex2.host_sync_count == 0, (
+        f"{ex2.host_sync_count} host syncs with durability enabled")
+    common.emit("durability/real_restore", wall_recover * 1e6,
+                f"restored_runs={summary['restored_runs']};"
+                f"restored={summary['restored_requests']};"
+                f"replayed={summary['replayed']};bit_identical=True;"
+                f"host_syncs={ex2.host_sync_count}")
+    return {
+        "steps": REAL_STEPS, "requests": REAL_REQUESTS,
+        "restored_runs": summary["restored_runs"],
+        "restored_requests": summary["restored_requests"],
+        "replayed": summary["replayed"],
+        "recover_wall_s": wall_recover,
+        "latents_bit_identical": True,
+        "host_sync_count": ex2.host_sync_count,
+    }
+
+
+def _real_replay(cfg, params):
+    import jax.numpy as jnp
+    from repro import cache
+    from repro.core import solvers
+    from repro.core.executor import SmoothCacheExecutor
+
+    n = max(2, REAL_REQUESTS // 2)
+
+    def build(jpath, sdir):
+        ex = SmoothCacheExecutor(cfg, solvers.ddim(REAL_STEPS),
+                                 cfg_scale=1.5)
+        store = serve.ArtifactStore(cfg, solvers.ddim(REAL_STEPS),
+                                    cfg_scale=1.5)
+        store.add_policy("static2", "static:n=2")
+        return serve.ServeEngine(
+            ex, params, store, max_batch=2, max_inflight=1,
+            clock=serve.VirtualClock(), check=True, continuous=True,
+            journal=jpath, snapshot_dir=sdir)
+
+    with tempfile.TemporaryDirectory() as td:
+        jpath = os.path.join(td, "journal.jsonl")
+        sdir = os.path.join(td, "snapshots")
+        eng = build(jpath, sdir)
+        eng.submit(*[serve.Request(rid=i, seed=100 + i, policy="static2",
+                                   label=i % cfg.num_classes, arrival=0.0)
+                     for i in range(n)])
+        _step_until(eng, lambda: bool(os.listdir(sdir))
+                    and eng._inflight and not eng._inflight[0].rs.done,
+                    limit=8)
+        crash(eng)
+        for name in os.listdir(sdir):         # tamper every snapshot
+            p = os.path.join(sdir, name)
+            raw = open(p, "rb").read()
+            with open(p, "wb") as f:
+                f.write(raw[:-1] + bytes([raw[-1] ^ 0xFF]))
+
+        eng2 = build(jpath, sdir)
+        summary = eng2.recover()
+        assert summary["restored_runs"] == 0
+        assert len(summary["refused"]) >= 1, "tampering went unnoticed"
+        for qname, reason in summary["refused"]:
+            assert eng2.store.health.quarantine_reason(
+                f"snapshot:{qname}") == reason
+        assert summary["replayed"] == n
+        res = eng2.run_until_drained()
+    assert sorted(res) == list(range(n))
+
+    # replay-from-start lands on the row-keys contract: each latent is a
+    # bit-identical solo generate of the request's own key
+    pipe = cache.DiffusionPipeline(cfg, solvers.ddim(REAL_STEPS),
+                                   "static:n=2", cfg_scale=1.5)
+    pipe.prepare()
+    for i in range(n):
+        x = pipe.generate(params, serve.batch_key([100 + i]), 1,
+                          label=jnp.asarray([i % cfg.num_classes],
+                                            jnp.int32))
+        np.testing.assert_array_equal(np.asarray(x[0]), res[i])
+    common.emit("durability/real_replay", len(summary["refused"]) * 1e6,
+                f"quarantined={len(summary['refused'])};replayed={n};"
+                "bit_identical=True")
+    return {
+        "requests": n,
+        "quarantined": len(summary["refused"]),
+        "replayed": summary["replayed"],
+        "latents_bit_identical": True,
+    }
+
+
+def run() -> None:
+    ramp = _kill_ramp()
+    overhead = _overhead()
+    cfg, params = _small_dit()
+    restore = _real_restore(cfg, params)
+    replay = _real_replay(cfg, params)
+    path = common.write_bench_json("BENCH_durability.json", {
+        "meta": {"ramp_requests": RAMP_N, "overhead_requests": N,
+                 "kill_rates": RATES, "seeds": SEEDS,
+                 "checkpoint_every": EVERY,
+                 "max_overhead": MAX_OVERHEAD,
+                 "virtual_steps": STEPS, "max_batch": MAX_BATCH,
+                 "real_steps": REAL_STEPS,
+                 "real_requests": REAL_REQUESTS},
+        "kill_ramp": ramp,
+        "checkpoint_overhead": overhead,
+        "real_restore": restore,
+        "real_replay": replay,
+    })
+    print(f"# wrote {path}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,1 +1,2 @@
-from repro.checkpoint.io import restore, save  # noqa: F401
+from repro.checkpoint.io import (CheckpointError, read_meta,  # noqa: F401
+                                 restore, save)

@@ -1,22 +1,53 @@
 """Checkpoint IO: msgpack + raw numpy buffers (no orbax offline).
 
-Layout: a single ``.ckpt`` file holding a msgpack header (treedef paths,
-shapes, dtypes, offsets) followed by the concatenated raw array bytes.
-Host-gathered save / restore; under pjit the caller re-shards on load via
+Layout: ``MAGIC`` + 8-byte little-endian header length + msgpack header
+(treedef paths, shapes, dtypes, offsets, declared body length + sha256)
+followed by the concatenated raw array bytes.  Host-gathered save /
+restore; under pjit the caller re-shards on load via
 ``jax.device_put(tree, shardings)``.
+
+Robustness contract (the durable-serving layer builds on it):
+
+* writes are atomic — the file is staged as ``.tmp`` and published with
+  ``os.replace``, so a crashed writer never leaves a half-written file
+  under the real name;
+* reads are *refusals, not garbage*: a bad magic, an unreadable header, a
+  torn/truncated body (shorter than the header-declared length, or an
+  entry reaching past the end), or a body whose sha256 disagrees with the
+  header all raise :class:`CheckpointError` — never a bare ``assert``
+  (which vanishes under ``python -O``) and never a silently-short
+  ``np.frombuffer`` read.
 """
 from __future__ import annotations
 
+import hashlib
 import io
 import os
 from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-import msgpack
+
+try:
+    import msgpack
+except ImportError:                            # pragma: no cover
+    msgpack = None                             # gated in _require_msgpack
 import numpy as np
 
 MAGIC = b"REPROCKPT1"
+
+
+class CheckpointError(ValueError):
+    """A checkpoint file was refused: wrong magic, truncated/torn, or its
+    content checksum disagrees with the header.  Callers (e.g. snapshot
+    recovery) treat this as "quarantine and fall back", never as data."""
+
+
+def _require_msgpack() -> None:
+    if msgpack is None:                        # pragma: no cover
+        raise CheckpointError(
+            "checkpoint IO needs the msgpack package, which is not "
+            "installed in this environment")
 
 
 def _flatten_with_paths(tree, prefix=""):
@@ -35,6 +66,7 @@ def _flatten_with_paths(tree, prefix=""):
 
 
 def save(path: str, tree: Any, metadata: Dict | None = None) -> None:
+    _require_msgpack()
     pairs = _flatten_with_paths(tree)
     header = {"meta": metadata or {}, "entries": [], "kinds": _kinds(tree)}
     payload = io.BytesIO()
@@ -48,13 +80,18 @@ def save(path: str, tree: Any, metadata: Dict | None = None) -> None:
         header["entries"].append({
             "name": name, "shape": list(a.shape), "dtype": str(a.dtype),
             "offset": off, "none": False})
+    body = payload.getvalue()
+    # declared length + content hash: restore() detects torn writes and
+    # bit-rot instead of returning silently-short frombuffer reads
+    header["body_len"] = len(body)
+    header["body_sha256"] = hashlib.sha256(body).hexdigest()
     hb = msgpack.packb(header)
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
         f.write(MAGIC)
         f.write(len(hb).to_bytes(8, "little"))
         f.write(hb)
-        f.write(payload.getvalue())
+        f.write(body)
     os.replace(tmp, path)
 
 
@@ -71,25 +108,84 @@ def _kinds(tree):
     return {"t": "leaf"}
 
 
-def restore(path: str):
-    """Returns (tree, metadata)."""
+def _read_header(f, path: str) -> Dict:
+    magic = f.read(len(MAGIC))
+    if magic != MAGIC:
+        raise CheckpointError(f"bad checkpoint magic in {path}")
+    raw = f.read(8)
+    if len(raw) < 8:
+        raise CheckpointError(f"truncated checkpoint header in {path}")
+    hlen = int.from_bytes(raw, "little")
+    hb = f.read(hlen)
+    if len(hb) < hlen:
+        raise CheckpointError(f"truncated checkpoint header in {path}")
+    try:
+        header = msgpack.unpackb(hb)
+    except Exception as e:
+        raise CheckpointError(
+            f"corrupt checkpoint header in {path}: "
+            f"{type(e).__name__}: {e}") from e
+    if not isinstance(header, dict) or "entries" not in header \
+            or "kinds" not in header:
+        raise CheckpointError(f"malformed checkpoint header in {path}")
+    return header
+
+
+def read_meta(path: str) -> Dict:
+    """Read only the metadata dict — magic + header are verified, the
+    (possibly large) array body is not touched.  Recovery scans use this
+    to order/filter snapshots before paying for a full restore."""
+    _require_msgpack()
     with open(path, "rb") as f:
-        magic = f.read(len(MAGIC))
-        assert magic == MAGIC, f"bad checkpoint magic in {path}"
-        hlen = int.from_bytes(f.read(8), "little")
-        header = msgpack.unpackb(f.read(hlen))
+        header = _read_header(f, path)
+    return header.get("meta", {})
+
+
+def restore(path: str):
+    """Returns ``(tree, metadata)``.  Refuses (with
+    :class:`CheckpointError`) files whose magic/header is unreadable,
+    whose body is shorter than the header declares (torn write), whose
+    entries reach past the body, or whose body sha256 disagrees with the
+    header (bit-rot / tamper).  Length and hash checks tolerate
+    pre-``body_len`` files, which simply lack the declared fields."""
+    _require_msgpack()
+    with open(path, "rb") as f:
+        header = _read_header(f, path)
         body = f.read()
+    declared = header.get("body_len")
+    if declared is not None and len(body) != int(declared):
+        raise CheckpointError(
+            f"torn checkpoint {path}: body is {len(body)} bytes, header "
+            f"declares {declared}")
+    want_sha = header.get("body_sha256")
+    if want_sha is not None:
+        got = hashlib.sha256(body).hexdigest()
+        if got != want_sha:
+            raise CheckpointError(
+                f"checkpoint {path} failed its content checksum "
+                f"(sha256 {got[:12]}… != declared {str(want_sha)[:12]}…)")
     leaves = {}
     for e in header["entries"]:
         if e.get("none"):
             leaves[e["name"]] = None
             continue
-        dt = np.dtype(e["dtype"])
+        try:
+            dt = np.dtype(e["dtype"])
+        except TypeError as exc:
+            raise CheckpointError(
+                f"checkpoint {path}: entry {e.get('name')!r} has invalid "
+                f"dtype {e.get('dtype')!r}") from exc
         n = int(np.prod(e["shape"])) if e["shape"] else 1
+        need = int(e["offset"]) + n * dt.itemsize
+        if need > len(body):
+            # pre-body_len files can still tear — per-entry bounds catch it
+            raise CheckpointError(
+                f"torn checkpoint {path}: entry {e['name']!r} needs bytes "
+                f"up to {need}, body has {len(body)}")
         a = np.frombuffer(body, dt, count=n, offset=e["offset"])
         leaves[e["name"]] = jnp.asarray(a.reshape(e["shape"]))
     tree = _rebuild(header["kinds"], leaves, "")
-    return tree, header["meta"]
+    return tree, header.get("meta", {})
 
 
 def _rebuild(kind, leaves, prefix):

@@ -1223,22 +1223,15 @@ class SmoothCacheExecutor:
             return rs.x, rs.decisions
         return rs.x
 
-    def start_adaptive_fused_run(self, params, key, batch: int, *,
-                                 schedule, tau: float, proxy_map=None,
-                                 pool=None, k_max: int = 3, label=None,
-                                 memory=None, row_keys=None,
-                                 telemetry: bool = False
-                                 ) -> FusedAdaptiveRunState:
-        """Begin a resumable fused adaptive run.  Drive it with
-        :meth:`advance_adaptive_fused` — a serving engine timeslices with
-        ``n_steps`` chunks, each a single program dispatch.  ``row_keys``
-        draws per-row initial latents (see :meth:`start_run`) so the run
-        can be split/merged bit-identically per row.  ``telemetry=True``
-        additionally records the per-row proxy signal into the loop carry
-        (``rs.proxy_trace``) for per-request
-        :class:`repro.obs.CacheReport` explainers — still zero per-step
-        host syncs, and the latent bits are unchanged (the telemetry
-        program differs only in the extra carry writes)."""
+    def _fused_setup(self, schedule, tau, proxy_map, pool, k_max):
+        """Shared derivation for the fused start + snapshot-import paths:
+        validates the solver, runs :meth:`_adaptive_setup`, builds the
+        ``lax.switch`` branch table, and materializes the static
+        ``skip_table`` (τ=0) or its shape-stable runtime dummy (τ>0).
+        Returns ``(schedule, tau, table, runtime, skip_table, coeff_a,
+        coeff_b)`` — all deterministic functions of the entry parameters,
+        which is what makes a restored run's continuation bit-identical
+        to the original's."""
         if not self.supports_fused_adaptive:
             raise ValueError(
                 f"solver {self.solver.name!r} is not scannable; the fused "
@@ -1268,6 +1261,28 @@ class SmoothCacheExecutor:
                         "pool — derive the pool from this schedule via "
                         "mask_lattice()")
             skip_table = jnp.asarray(skip_table)
+        return schedule, tau, table, runtime, skip_table, coeff_a, coeff_b
+
+    def start_adaptive_fused_run(self, params, key, batch: int, *,
+                                 schedule, tau: float, proxy_map=None,
+                                 pool=None, k_max: int = 3, label=None,
+                                 memory=None, row_keys=None,
+                                 telemetry: bool = False
+                                 ) -> FusedAdaptiveRunState:
+        """Begin a resumable fused adaptive run.  Drive it with
+        :meth:`advance_adaptive_fused` — a serving engine timeslices with
+        ``n_steps`` chunks, each a single program dispatch.  ``row_keys``
+        draws per-row initial latents (see :meth:`start_run`) so the run
+        can be split/merged bit-identically per row.  ``telemetry=True``
+        additionally records the per-row proxy signal into the loop carry
+        (``rs.proxy_trace``) for per-request
+        :class:`repro.obs.CacheReport` explainers — still zero per-step
+        host syncs, and the latent bits are unchanged (the telemetry
+        program differs only in the extra carry writes)."""
+        schedule, tau, table, runtime, skip_table, coeff_a, coeff_b = \
+            self._fused_setup(schedule, tau, proxy_map, pool, k_max)
+        s_total = schedule.num_steps
+        n_types = len(table.types)
         if row_keys is not None:
             x, kloop = self.initial_latent_rows(row_keys, batch)
         else:
@@ -1475,6 +1490,137 @@ class SmoothCacheExecutor:
                 # mixed telemetry: no honest merged trace exists
                 upd["proxy_trace"] = None
         return dataclasses.replace(r0, **upd)
+
+    # -- run-state snapshot seams (durable serving) ---------------------------
+
+    @property
+    def supports_export(self) -> bool:
+        """Whether run states can cross a process boundary via
+        :meth:`export_run` / :meth:`import_run` — true for all three run
+        kinds of this executor (the durable layer checks the attribute so
+        test fakes opt in explicitly)."""
+        return True
+
+    def export_run(self, rs) -> Tuple[str, Dict, Dict]:
+        """Run state → ``(kind, arrays, static)``, the snapshot seam of
+        the durable serving layer.  ``arrays`` is a pytree of device
+        arrays (serializable host-side by ``repro.checkpoint.io``);
+        ``static`` is the small JSON-safe position/parameter stamp needed
+        to rebuild the rest.  Derived Python objects — plan, schedule,
+        pool index, switch table, cache structs — are deliberately NOT
+        exported: :meth:`import_run` rebuilds them from the serving
+        entry, and the caller's provenance stamp (entry name/version,
+        schedule fingerprint, plan hash) is what guarantees it rebuilds
+        the *same* ones.  Reading the arrays is a boundary transfer the
+        host was already allowed to make — never a per-step sync, so a
+        fused run's ``host_sync_count`` stays untouched."""
+        if isinstance(rs, RunState):
+            arrays = {"x": rs.x, "state": rs.state, "cache": rs.cache,
+                      "kloop": rs.kloop, "label": rs.label,
+                      "memory": rs.memory, "healthy": rs.healthy}
+            static = {"batch": int(rs.x.shape[0]),
+                      "run_index": int(rs.run_index)}
+            return "plan", arrays, static
+        if isinstance(rs, AdaptiveRunState):
+            arrays = {"x": rs.x, "state": rs.state, "cache": rs.cache,
+                      "kloop": rs.kloop, "label": rs.label,
+                      "memory": rs.memory, "healthy": rs.healthy,
+                      "x_prev": rs.x_prev, "acc": rs.acc, "lag": rs.lag,
+                      "want": rs.want}
+            static = {"batch": int(rs.x.shape[0]), "step": int(rs.step),
+                      "tau": float(rs.tau), "k_max": int(rs.k_max),
+                      "decisions": [list(d) for d in rs.decisions]}
+            return "adaptive", arrays, static
+        if isinstance(rs, FusedAdaptiveRunState):
+            arrays = {"x": rs.x, "state": rs.state, "cache": rs.cache,
+                      "kloop": rs.kloop, "label": rs.label,
+                      "memory": rs.memory, "healthy": rs.healthy,
+                      "x_prev": rs.x_prev, "acc": rs.acc, "lag": rs.lag,
+                      "trace": rs.trace, "proxy_trace": rs.proxy_trace}
+            static = {"batch": int(rs.x.shape[0]), "step": int(rs.step),
+                      "tau": float(rs.tau), "k_max": int(rs.k_max)}
+            return "adaptive_fused", arrays, static
+        raise ValueError(
+            f"not an exportable run state: {type(rs).__name__}")
+
+    def import_run(self, params, kind: str, arrays: Dict, static: Dict, *,
+                   plan=None, schedule=None, tau: float = 0.0,
+                   proxy_map=None, pool=None, k_max: int = 3):
+        """``(kind, arrays, static)`` → run state, the inverse of
+        :meth:`export_run`.  The entry-side parameters (``plan`` /
+        ``schedule`` / ``tau`` / ``proxy_map`` / ``pool`` / ``k_max``)
+        come from the serving entry the run launched under; every derived
+        structure is rebuilt exactly as the matching ``start_*`` would
+        build it, so advancing the restored state is bit-identical to
+        advancing the original.  Parameter disagreements between the
+        snapshot stamp and the entry are refused (``ValueError``), not
+        absorbed — the caller quarantines and replays from start."""
+        label = arrays.get("label")
+        memory = arrays.get("memory")
+        healthy = arrays.get("healthy")
+        if kind == "plan":
+            if plan is None:
+                raise ValueError(
+                    "import_run kind='plan' needs the plan= the run was "
+                    "launched with")
+            run_index = int(static["run_index"])
+            if not 0 <= run_index <= len(plan.runs):
+                raise ValueError(
+                    f"snapshot run_index {run_index} out of range for a "
+                    f"{len(plan.runs)}-segment plan — wrong plan?")
+            x = arrays["x"]
+            return RunState(
+                x=x, state=arrays["state"], cache=arrays["cache"],
+                kloop=arrays["kloop"], plan=plan, run_index=run_index,
+                label=label, memory=memory,
+                structs=self._branch_structs(params, x, label, memory),
+                healthy=healthy)
+        if kind not in ("adaptive", "adaptive_fused"):
+            raise ValueError(f"unknown run kind {kind!r}")
+        # defense in depth: the stamp's decision parameters must equal the
+        # entry's — a drifted τ/k_max would silently change every decision
+        # from the restore point on
+        if float(static.get("tau", tau)) != float(tau) \
+                or int(static.get("k_max", k_max)) != int(k_max):
+            raise ValueError(
+                f"snapshot tau/k_max ({static.get('tau')}/"
+                f"{static.get('k_max')}) disagree with the serving entry "
+                f"({float(tau)}/{int(k_max)})")
+        step = int(static["step"])
+        if kind == "adaptive":
+            schedule, tau, pool, by_skipset, pool_types, coeff_a, \
+                coeff_b = self._adaptive_setup(schedule, tau, proxy_map,
+                                               pool, k_max)
+            if step > schedule.num_steps:
+                raise ValueError(
+                    f"snapshot step {step} exceeds the schedule's "
+                    f"{schedule.num_steps} steps — wrong schedule?")
+            return AdaptiveRunState(
+                x=arrays["x"], state=arrays["state"],
+                cache=arrays["cache"], kloop=arrays["kloop"], step=step,
+                x_prev=arrays.get("x_prev"), acc=arrays["acc"],
+                lag=arrays["lag"],
+                decisions=tuple(tuple(d)
+                                for d in static.get("decisions", ())),
+                schedule=schedule, tau=tau, proxy_map=proxy_map,
+                by_skipset=by_skipset, pool_types=pool_types,
+                coeff_a=coeff_a, coeff_b=coeff_b, k_max=int(k_max),
+                label=label, memory=memory, healthy=healthy,
+                want=arrays.get("want"))
+        schedule, tau, table, runtime, skip_table, coeff_a, coeff_b = \
+            self._fused_setup(schedule, tau, proxy_map, pool, k_max)
+        if step > schedule.num_steps:
+            raise ValueError(
+                f"snapshot step {step} exceeds the schedule's "
+                f"{schedule.num_steps} steps — wrong schedule?")
+        return FusedAdaptiveRunState(
+            x=arrays["x"], x_prev=arrays["x_prev"], state=arrays["state"],
+            cache=arrays["cache"], acc=arrays["acc"], lag=arrays["lag"],
+            trace=arrays["trace"], kloop=arrays["kloop"], step=step,
+            schedule=schedule, tau=tau, k_max=int(k_max), table=table,
+            runtime=runtime, skip_table=skip_table, coeff_a=coeff_a,
+            coeff_b=coeff_b, label=label, memory=memory, healthy=healthy,
+            proxy_trace=arrays.get("proxy_trace"))
 
     # -- whole-sampler lowering (for FLOP / roofline accounting) ------------
 

@@ -1,0 +1,28 @@
+"""repro.durable — crash-safe serving: write-ahead request journal,
+boundary run-state snapshots, and the kill–restart chaos harness.
+
+Sits below ``repro.serve`` (like ``repro.resilience``): nothing here
+imports the engine, the store, or the batcher.  ``ServeEngine`` wires
+these pieces in when constructed with ``journal=``/``snapshot_dir=`` and
+replays them in ``recover()``.
+"""
+from repro.durable.harness import (KillPlan, KillReport,  # noqa: F401
+                                   crash, drain_with_kills)
+from repro.durable.journal import (JournalState,  # noqa: F401
+                                   RequestJournal, replay)
+from repro.durable.snapshot import (FORMAT, SnapshotError,  # noqa: F401
+                                    SnapshotStore, plan_hash)
+
+__all__ = [
+    "FORMAT",
+    "JournalState",
+    "KillPlan",
+    "KillReport",
+    "RequestJournal",
+    "SnapshotError",
+    "SnapshotStore",
+    "crash",
+    "drain_with_kills",
+    "plan_hash",
+    "replay",
+]

@@ -300,6 +300,24 @@ class ChaosExecutor:
         cr._poisoned = pois
         return cr
 
+    # -- snapshot seams (durable serving) ------------------------------------
+
+    def export_run(self, rs):
+        """Unwrap the proxy and export the real run state.  Chaos
+        bookkeeping (pending :class:`FaultSpec`, poisoned-row marks) is
+        deliberately NOT serialized — a restart is a fresh process and
+        the plan keys on launch serials, which a restore is not."""
+        inner = rs._inner if isinstance(rs, ChaosRun) else rs
+        return self._inner.export_run(inner)
+
+    def import_run(self, params, kind, arrays, static, **kw):
+        """Import through the wrapped executor, then re-wrap so the
+        engine keeps seeing the proxy type it launched with.  The
+        restored run carries no pending fault (same rationale as
+        :meth:`split_run`)."""
+        rs = self._inner.import_run(params, kind, arrays, static, **kw)
+        return ChaosRun(rs, None, int(static["batch"]), -1)
+
     # -- fault application ---------------------------------------------------
 
     def _strike(self, rs: ChaosRun) -> None:

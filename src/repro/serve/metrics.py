@@ -208,6 +208,32 @@ class ServerMetrics:
         reg.inc("serve.evals_total", evals)
         reg.inc("serve.evals_done", compute_fraction * evals)
 
+    # -- durability ----------------------------------------------------------
+
+    def observe_checkpoint(self, nbytes: int) -> None:
+        """One boundary run-state snapshot written."""
+        self.registry.inc("durable.checkpoints")
+        self.registry.inc("durable.checkpoint_bytes", int(nbytes))
+
+    def observe_checkpoint_error(self) -> None:
+        """A checkpoint attempt failed and was swallowed (degrade, don't
+        die: serving continues, the batch just loses restore coverage)."""
+        self.registry.inc("durable.checkpoint_errors")
+
+    def observe_snapshot_refused(self) -> None:
+        """Recovery refused a snapshot (torn / tampered / provenance
+        drift) and quarantined it — its requests replay from the start."""
+        self.registry.inc("durable.snapshots_refused")
+
+    def observe_recovery(self, restored_runs: int, restored_requests: int,
+                         replayed: int, stale: int) -> None:
+        reg = self.registry
+        reg.inc("durable.recoveries")
+        reg.inc("durable.restored_runs", int(restored_runs))
+        reg.inc("durable.restored_requests", int(restored_requests))
+        reg.inc("durable.replayed_requests", int(replayed))
+        reg.inc("durable.snapshots_stale", int(stale))
+
     # -- registry-backed attribute view --------------------------------------
     # The pre-obs ServerMetrics exposed these as plain attributes; tests,
     # benchmarks, and the SLO/resilience layers read them — keep every one
@@ -308,6 +334,38 @@ class ServerMetrics:
                 self.registry.labeled("serve.rejects", "reason").items()}
 
     @property
+    def checkpoints(self) -> int:
+        return int(self.registry.counter("durable.checkpoints"))
+
+    @property
+    def checkpoint_bytes(self) -> int:
+        return int(self.registry.counter("durable.checkpoint_bytes"))
+
+    @property
+    def checkpoint_errors(self) -> int:
+        return int(self.registry.counter("durable.checkpoint_errors"))
+
+    @property
+    def snapshots_refused(self) -> int:
+        return int(self.registry.counter("durable.snapshots_refused"))
+
+    @property
+    def recoveries(self) -> int:
+        return int(self.registry.counter("durable.recoveries"))
+
+    @property
+    def restored_runs(self) -> int:
+        return int(self.registry.counter("durable.restored_runs"))
+
+    @property
+    def restored_requests(self) -> int:
+        return int(self.registry.counter("durable.restored_requests"))
+
+    @property
+    def replayed_requests(self) -> int:
+        return int(self.registry.counter("durable.replayed_requests"))
+
+    @property
     def joins(self) -> int:
         return int(self.registry.counter("continuous.joins"))
 
@@ -397,6 +455,18 @@ class ServerMetrics:
             "row_retries": self.row_retries,
             "lineage_events": dict(sorted(self.lineage_events.items())),
             "joined_queue_wait_s": _dist(self.joined_queue_waits),
+        }
+        out["durable"] = {
+            "checkpoints": self.checkpoints,
+            "checkpoint_bytes": self.checkpoint_bytes,
+            "checkpoint_errors": self.checkpoint_errors,
+            "snapshots_refused": self.snapshots_refused,
+            "recoveries": self.recoveries,
+            "restored_runs": self.restored_runs,
+            "restored_requests": self.restored_requests,
+            "replayed_requests": self.replayed_requests,
+            "snapshots_stale": int(
+                self.registry.counter("durable.snapshots_stale")),
         }
         out["realized_tau"] = {f"{t:g}": c for t, c in
                                sorted(self.tau_counts.items())}

@@ -58,6 +58,9 @@ class ServableEntry:
     #: memoized candidate pool (adaptive entries) — derived once per
     #: entry, not per launched batch
     _pool: Optional[tuple] = dataclasses.field(default=None, repr=False)
+    #: memoized provenance stamp (durable snapshots) — see provenance()
+    _provenance: Optional[dict] = dataclasses.field(default=None,
+                                                    repr=False)
 
     @property
     def adaptive(self) -> bool:
@@ -106,6 +109,38 @@ class ServableEntry:
         batcher snapshots the current entry atomically when it forms a
         batch, so one micro-batch always serves exactly one version.)"""
         return f"{self.schedule.fingerprint()}/v{self.version}"
+
+    def provenance(self) -> dict:
+        """JSON-safe identity stamp of everything a restored run's bits
+        depend on: entry name + version, schedule fingerprint, execution
+        plan hash, adaptive decision parameters, and the artifact's
+        content checksum.  Durable snapshots embed it at checkpoint time;
+        recovery refuses any snapshot whose stamp disagrees with the
+        entry now in the store — an entry that hot-reloaded across the
+        restart must replay from the start, not continue on drifted
+        parameters.  Memoized: entries are immutable once registered
+        (reload builds a new entry)."""
+        if self._provenance is None:
+            import json as _json
+
+            from repro.durable.snapshot import plan_hash
+            from repro.resilience.integrity import (CHECKSUM_KEY,
+                                                    payload_checksum)
+            art_ck = None
+            if self.artifact is not None:
+                payload = _json.loads(self.artifact.to_json())
+                art_ck = payload.get(CHECKSUM_KEY) \
+                    or payload_checksum(payload)
+            self._provenance = {
+                "entry": self.name,
+                "version": int(self.version),
+                "schedule_fp": self.schedule.fingerprint(),
+                "plan_hash": plan_hash(self.plan),
+                "tau": float(self.tau),
+                "k_max": int(self.k_max) if self.adaptive else None,
+                "artifact_checksum": art_ck,
+            }
+        return dict(self._provenance)
 
     def compute_fraction(self) -> float:
         """Static compute fraction of the entry's schedule (adaptive runs

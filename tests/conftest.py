@@ -37,6 +37,10 @@ def pytest_configure(config):
         "markers", "obs: observability tests — tracer/registry/cache-"
         "report units plus the zero-sync telemetry regression (the CI "
         "obs lane runs `-m obs`)")
+    config.addinivalue_line(
+        "markers", "durability: seeded kill–restart durability tests "
+        "(the CI durability lane runs `-m durability` over the "
+        "kill-seed matrix)")
 
 
 def pytest_collection_modifyitems(config, items):

@@ -1,0 +1,948 @@
+"""repro.durable — crash-safe serving: write-ahead request journal,
+boundary run-state snapshots, and kill–restart recovery.
+
+Units cover the hardened checkpoint IO (refusals, never garbage), the
+journal's torn-tail sealing and replay fold, and the seeded KillPlan.
+Engine tests run a virtual-clock fake with the export/import seam
+(restore-from-snapshot, quarantine of tampered/torn snapshots with a
+reasoned health entry, journal-backed ``outcome`` across restarts, the
+seeded kill matrix under ``-m durability``), then the smoke DiT proves
+the real contract: a run exported at a boundary, saved, restored, and
+advanced to completion is bit-identical to never having crashed — for
+all three run kinds, through the engine, including a mid-join restore
+and the replay-from-start fallback."""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import serve
+from repro.cache.artifact import CacheArtifact
+from repro.core import plan as plan_lib
+from repro.core import schedule as S
+from repro.durable import (FORMAT, JournalState, KillPlan, RequestJournal,
+                           SnapshotError, SnapshotStore, crash,
+                           drain_with_kills, replay)
+
+try:
+    import msgpack  # noqa: F401
+    _HAVE_MSGPACK = True
+except ImportError:                            # pragma: no cover
+    _HAVE_MSGPACK = False
+
+needs_msgpack = pytest.mark.skipif(
+    not _HAVE_MSGPACK, reason="checkpoint IO needs msgpack")
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint IO: refusals, not garbage
+# ---------------------------------------------------------------------------
+
+@needs_msgpack
+def test_checkpoint_roundtrip_with_nones_and_meta(tmp_path):
+    from repro.checkpoint import io as ckpt_io
+    tree = {"x": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "nested": {"a": np.ones((1,), np.int32), "gap": None},
+            "pair": (np.zeros((2,), np.float64), None)}
+    path = str(tmp_path / "t.ckpt")
+    ckpt_io.save(path, tree, {"kind": "unit", "step": 3})
+    out, meta = ckpt_io.restore(path)
+    assert meta["kind"] == "unit" and meta["step"] == 3
+    np.testing.assert_array_equal(out["x"], tree["x"])
+    assert out["nested"]["gap"] is None
+    assert isinstance(out["pair"], tuple) and out["pair"][1] is None
+    # header-only read never touches the body
+    assert ckpt_io.read_meta(path)["kind"] == "unit"
+
+
+@needs_msgpack
+@pytest.mark.parametrize("mutilate,match", [
+    (lambda b: b"NOTACKPT!!" + b[10:], "magic"),
+    (lambda b: b[:12], "truncated"),
+    (lambda b: b[:-5], "torn|truncated|declares"),
+    (lambda b: b[:-1] + bytes([b[-1] ^ 0xFF]), "sha256|checksum"),
+])
+def test_checkpoint_refuses_torn_and_tampered(tmp_path, mutilate, match):
+    """Bad magic, truncated header, torn body, and flipped body bits all
+    raise CheckpointError — never a silently-short array."""
+    from repro.checkpoint import CheckpointError, io as ckpt_io
+    path = str(tmp_path / "t.ckpt")
+    ckpt_io.save(path, {"x": np.arange(32, dtype=np.float32)}, {})
+    raw = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(mutilate(raw))
+    with pytest.raises(CheckpointError, match=match):
+        ckpt_io.restore(path)
+
+
+@needs_msgpack
+def test_checkpoint_atomic_publish_leaves_no_tmp(tmp_path):
+    from repro.checkpoint import io as ckpt_io
+    path = str(tmp_path / "t.ckpt")
+    ckpt_io.save(path, {"x": np.ones((4,), np.float32)}, {})
+    assert os.listdir(tmp_path) == ["t.ckpt"]
+
+
+# ---------------------------------------------------------------------------
+# Write-ahead journal
+# ---------------------------------------------------------------------------
+
+def test_journal_roundtrip_preserves_rid_types(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    j = RequestJournal(path)
+    j.append("submit", rid=7, seed=7, policy="p", arrival=0.0)
+    j.append("finish", sync=True, rids=[7], t=1.5)
+    j.close()
+    events, skipped = replay(path)
+    assert skipped == 0
+    assert [e["ev"] for e in events] == ["submit", "finish"]
+    assert events[0]["rid"] == 7               # int in, int out
+    st = JournalState.replay(path)
+    assert st.pending() == {} and st.done == {7: 1.5}
+
+
+def test_journal_seals_torn_tail(tmp_path):
+    """A crash mid-write leaves a half line; reopening seals it so it
+    fails its checksum at replay instead of merging with the next
+    append."""
+    path = str(tmp_path / "j.jsonl")
+    j = RequestJournal(path)
+    j.append("submit", rid=1, seed=1, policy="p", arrival=0.0)
+    j.close()
+    with open(path, "ab") as f:                # the torn write
+        f.write(b'deadbeef0000 {"ev": "fini')
+    j2 = RequestJournal(path)
+    assert j2.sealed_tail
+    j2.append("shed", rid=1, reason="late", t=2.0)
+    j2.close()
+    events, skipped = replay(path)
+    assert skipped == 1                        # the torn line, counted
+    assert [e["ev"] for e in events] == ["submit", "shed"]
+    st = JournalState.replay(path)
+    assert st.skipped == 1 and st.shed[1] == ("late", 2.0)
+
+
+def test_journal_fold_retry_and_pending(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    j = RequestJournal(path)
+    j.append_many([
+        {"ev": "submit", "rid": 1, "seed": 1, "policy": "a", "arrival": 0.0},
+        {"ev": "submit", "rid": 2, "seed": 2, "policy": "a", "arrival": 0.5},
+    ])
+    j.append("launch", sync=False, serial=0, rids=[1, 2], t=1.0)
+    j.append("retry", sync=False, rid=2, attempt=1, policy="fallback",
+             level=1, t=2.0)
+    j.append("finish", rids=[1], t=3.0)
+    j.close()
+    st = JournalState.replay(path)
+    assert st.started == {1: 1.0, 2: 1.0}
+    assert st.attempts == {2: 1} and st.levels == {2: 1}
+    # retry rewrote the pending record's policy — replay resubmits the
+    # degraded policy, not the one that faulted
+    assert st.pending() == {2: dict(st.submitted[2])}
+    assert st.submitted[2]["policy"] == "fallback"
+
+
+def test_journal_append_many_validates_ev(tmp_path):
+    j = RequestJournal(str(tmp_path / "j.jsonl"))
+    with pytest.raises(ValueError, match="'ev'"):
+        j.append_many([{"rid": 1}])
+    j.close()
+
+
+def test_journal_fsync_on_ack_only(tmp_path):
+    j = RequestJournal(str(tmp_path / "j.jsonl"))
+    j.append("submit", rid=1, seed=1, policy="p", arrival=0.0)  # ack
+    j.append("launch", sync=False, serial=0, rids=[1], t=0.0)   # progress
+    assert j.appended == 2 and j.synced == 1
+    j.close()
+
+
+# ---------------------------------------------------------------------------
+# KillPlan: seeded, memoized, bounded
+# ---------------------------------------------------------------------------
+
+def test_kill_plan_seeded_and_deterministic():
+    a = KillPlan(seed=3, kill_rate=0.3)
+    b = KillPlan(seed=3, kill_rate=0.3)
+    assert [a.should_kill(t) for t in range(50)] \
+        == [b.should_kill(t) for t in range(50)]
+    assert any(a._memo.values())               # the rate actually fires
+
+
+def test_kill_plan_overrides_and_bounds():
+    p = KillPlan(seed=0, kill_rate=0.0, kills={4}, max_kills=1)
+    assert not p.should_kill(3)
+    assert p.should_kill(4)                    # explicit strike
+    assert not p.should_kill(4)                # max_kills exhausted
+    with pytest.raises(ValueError, match="kill_rate"):
+        KillPlan(kill_rate=1.5)
+
+
+# ---------------------------------------------------------------------------
+# Virtual serving stack with the export/import seam (house fake + snapshot
+# protocol, the shape the real SmoothCacheExecutor implements)
+# ---------------------------------------------------------------------------
+
+class _Cfg:
+    name = "fake-arch"
+
+    def layer_types(self):
+        return ("attn", "ffn")
+
+
+class _Solver:
+    name = "ddim"
+
+    def __init__(self, num_steps=8):
+        self.num_steps = num_steps
+
+
+@dataclasses.dataclass
+class _RunState:
+    plan: plan_lib.ExecutionPlan
+    batch: int
+    run_index: int = 0
+    x: object = None
+    decisions = None
+
+    @property
+    def done(self):
+        return self.run_index >= len(self.plan.runs)
+
+
+@dataclasses.dataclass
+class _AdaptiveState:
+    schedule: object
+    batch: int
+    step: int = 0
+    x: object = None
+    decisions: tuple = ()
+
+    @property
+    def done(self):
+        return self.step >= self.schedule.num_steps
+
+
+class DurableFakeExecutor:
+    """test_serve's virtual-clock fake plus the run-state snapshot seam
+    (``supports_export`` / ``export_run`` / ``import_run``)."""
+
+    supports_export = True
+
+    def __init__(self, clock, step_cost=1.0):
+        self.clock = clock
+        self.step_cost = step_cost
+        self._programs = set()
+
+    def _charge(self, skip, length):
+        computed = sum(1 for sk in skip.values() if not sk)
+        self.clock.advance(self.step_cost * length
+                           * computed / max(len(skip), 1))
+
+    def start_run(self, params, key, batch, *, plan, schedule=None,
+                  label=None, memory=None):
+        return _RunState(plan=plan, batch=batch)
+
+    def advance_run(self, params, rs, *, check=False):
+        run = rs.plan.runs[rs.run_index]
+        self._charge(run.sig.skip, run.length)
+        rs = dataclasses.replace(rs, run_index=rs.run_index + 1)
+        if rs.done:
+            rs.x = np.arange(rs.batch, dtype=np.float64)[:, None]
+        return rs
+
+    def start_adaptive_run(self, params, key, batch, *, schedule, tau,
+                           proxy_map=None, pool=None, k_max=3, label=None,
+                           memory=None):
+        return _AdaptiveState(schedule=schedule, batch=batch)
+
+    def advance_adaptive_run(self, params, rs):
+        mask = {t: bool(v[rs.step]) for t, v in rs.schedule.skip.items()}
+        skipset = tuple(sorted(t for t, sk in mask.items() if sk))
+        self._charge(mask, 1)
+        rs = dataclasses.replace(rs, step=rs.step + 1,
+                                 decisions=rs.decisions + (skipset,))
+        if rs.done:
+            rs.x = np.arange(rs.batch, dtype=np.float64)[:, None]
+        return rs
+
+    def compiled_variant_count(self, kind=None):
+        return len(self._programs)
+
+    def xla_program_count(self, kind=None):
+        return len(self._programs)
+
+    # -- the snapshot seam ---------------------------------------------------
+
+    def export_run(self, rs):
+        if isinstance(rs, _RunState):
+            return "plan", {}, {"batch": rs.batch,
+                                "run_index": rs.run_index}
+        if isinstance(rs, _AdaptiveState):
+            return "adaptive", {}, {
+                "batch": rs.batch, "step": rs.step,
+                "decisions": [list(d) for d in rs.decisions]}
+        raise ValueError(f"not exportable: {type(rs).__name__}")
+
+    def import_run(self, params, kind, arrays, static, *, plan=None,
+                   schedule=None, tau=0.0, proxy_map=None, pool=None,
+                   k_max=3):
+        if kind == "plan":
+            return _RunState(plan=plan, batch=int(static["batch"]),
+                             run_index=int(static["run_index"]))
+        if kind == "adaptive":
+            return _AdaptiveState(
+                schedule=schedule, batch=int(static["batch"]),
+                step=int(static["step"]),
+                decisions=tuple(tuple(d)
+                                for d in static.get("decisions", ())))
+        raise ValueError(f"unknown run kind {kind!r}")
+
+
+def _fake_artifact(num_steps):
+    types = ("attn", "ffn")
+    sch = S.fora(types, num_steps, 2)
+    pool = [list(sig.live_in) for sig in plan_lib.mask_lattice(sch)]
+    return CacheArtifact(
+        arch="fake-arch", solver="ddim", num_steps=num_steps,
+        policy={"name": "adaptive", "base": {"name": "static", "n": 2},
+                "tau": 0.1},
+        curves={}, schedule=sch,
+        plan=plan_lib.analyze(sch).to_jsonable(),
+        adaptive={"tau": 0.1, "k_max": 1,
+                  "proxy_map": {"coeffs": {"attn": [0.0, 0.01],
+                                           "ffn": [0.0, 0.01]},
+                                "mean_proxy": None},
+                  "pool": pool},
+        meta={})
+
+
+def make_store(num_steps=8):
+    store = serve.ArtifactStore(_Cfg(), _Solver(num_steps))
+    store.add_policy("static2", "static:n=2")
+    store.add_policy("no_cache", "none")
+    store.add_artifact("adaptive", _fake_artifact(num_steps))
+    return store
+
+
+def durable_factory(tmp_path, *, num_steps=8, **kw):
+    """Fresh-engine factory over one shared journal path + snapshot dir —
+    the contract :func:`drain_with_kills` needs."""
+    jpath = str(tmp_path / "journal.jsonl")
+    sdir = str(tmp_path / "snapshots")
+
+    def make():
+        clock = serve.VirtualClock()
+        ex = DurableFakeExecutor(clock)
+        kw.setdefault("max_batch", 4)
+        return serve.ServeEngine(ex, params=None, store=make_store(
+            num_steps), clock=clock, journal=jpath, snapshot_dir=sdir,
+            **kw)
+    return make, jpath, sdir
+
+
+def vreq(rid, policy, arrival=0.0, seed=None):
+    return serve.Request(rid=rid, seed=rid if seed is None else seed,
+                         policy=policy, arrival=arrival)
+
+
+def _step_until(eng, cond, limit=200):
+    for _ in range(limit):
+        if cond():
+            return
+        if not eng.step():
+            now = eng.clock.now()
+            t = eng.batcher.next_event(now)
+            assert t is not None and t > now, "drained before condition"
+            eng.clock.sleep_until(t)
+    raise AssertionError("condition never reached")
+
+
+# ---------------------------------------------------------------------------
+# Engine: journal WAL + outcome across restarts
+# ---------------------------------------------------------------------------
+
+@needs_msgpack
+def test_submit_is_write_ahead(tmp_path):
+    make, jpath, _ = durable_factory(tmp_path)
+    eng = make()
+    eng.submit(vreq(0, "static2"), vreq(1, "missing_policy"))
+    # on disk (fsynced) before any scheduling happened
+    st = JournalState.replay(jpath)
+    assert set(st.submitted) == {0, 1}
+    assert st.shed[1][0] == "no_entry"         # reasoned, journaled shed
+    assert st.pending() == {0: st.submitted[0]}
+
+
+@needs_msgpack
+def test_outcome_answers_from_journal_after_restart(tmp_path):
+    make, _, _ = durable_factory(tmp_path)
+    eng = make()
+    eng.submit(vreq(0, "static2"), vreq(1, "static2"),
+               vreq(2, "missing_policy"))
+    res = eng.run_until_drained()
+    assert sorted(res) == [0, 1]
+    crash(eng)
+
+    eng2 = make()
+    summary = eng2.recover()
+    assert summary["done"] == 2 and summary["shed"] == 1
+    assert summary["replayed"] == 0
+    # the verdict survives; the payload was the old process's to deliver
+    assert eng2.outcome(0) == ("done", None)
+    assert eng2.outcome(2) == ("shed", "no_entry")
+    with pytest.raises(KeyError):
+        eng2.outcome(99)
+    # a duplicate of a pre-crash rid is still a duplicate
+    eng2.submit(vreq(0, "static2"))
+    assert eng2.metrics.rejects.get("duplicate_rid") == 1
+
+
+# ---------------------------------------------------------------------------
+# Engine: restore-from-snapshot (virtual)
+# ---------------------------------------------------------------------------
+
+@needs_msgpack
+@pytest.mark.parametrize("policy,kind", [("static2", "plan"),
+                                         ("adaptive", "adaptive")])
+def test_kill_midflight_restores_run(tmp_path, policy, kind):
+    """Kill with a batch in flight: the restart restores it from its
+    newest boundary snapshot (not from the start) and finishes it; the
+    restored record carries a ``restore@`` lineage tag and — for the
+    adaptive kind — the pre-crash decision prefix."""
+    make, _, sdir = durable_factory(tmp_path)
+    eng = make()
+    eng.submit(*[vreq(i, policy) for i in range(4)])
+    _step_until(eng, lambda: bool(os.listdir(sdir))
+                and eng._inflight and not eng._inflight[0].rs.done)
+    pre_steps = (eng._inflight[0].rs.run_index if kind == "plan"
+                 else eng._inflight[0].rs.step)
+    assert pre_steps >= 1
+    crash(eng)
+
+    eng2 = make()
+    summary = eng2.recover()
+    assert summary["restored_runs"] == 1
+    assert summary["restored_requests"] == 4
+    assert summary["replayed"] == 0 and summary["refused"] == []
+    res = eng2.run_until_drained()
+    assert sorted(res) == [0, 1, 2, 3]
+    rec = eng2.records[0]
+    assert any(t.startswith("restore@") for t in rec.lineage)
+    assert eng2.metrics.restored_runs == 1
+    if kind == "adaptive":
+        # decisions = snapshot prefix ++ post-restore steps, identical
+        # to an uninterrupted drain of the same entry
+        base = make_store().get("adaptive")
+        eng3_store_steps = base.schedule.num_steps
+        assert len(rec.decisions) == eng3_store_steps
+        clean = serve.ServeEngine(
+            DurableFakeExecutor(serve.VirtualClock()), params=None,
+            store=make_store(), clock=serve.VirtualClock(), max_batch=4)
+        clean.submit(*[vreq(i, policy) for i in range(4)])
+        clean.run_until_drained()
+        assert rec.decisions == clean.records[0].decisions
+
+
+@needs_msgpack
+def test_checkpoint_cadence_and_cleanup(tmp_path):
+    """checkpoint_every thins snapshots; a finished batch deletes its
+    file — an empty engine leaves an empty snapshot dir."""
+    make1, _, sdir1 = durable_factory(tmp_path / "a", checkpoint_every=1)
+    make2, _, sdir2 = durable_factory(tmp_path / "b", checkpoint_every=2)
+    counts = []
+    for make, sdir in ((make1, sdir1), (make2, sdir2)):
+        eng = make()
+        eng.submit(*[vreq(i, "static2") for i in range(4)])
+        eng.run_until_drained()
+        assert os.listdir(sdir) == []          # finish dropped the file
+        counts.append(eng.metrics.checkpoints)
+        crash(eng)
+    # cadence thins the checkpoints over the same trace
+    assert counts[0] > counts[1] >= 1
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        durable_factory(tmp_path / "c", checkpoint_every=0)[0]()
+
+
+@needs_msgpack
+def test_eager_runs_are_not_checkpointed(tmp_path):
+    make, jpath, sdir = durable_factory(tmp_path)
+    eng = make()
+    eng.submit(*[vreq(i, "no_cache") for i in range(2)])
+    eng.run_until_drained()
+    assert sorted(eng.results) == [0, 1]
+    assert eng.metrics.checkpoints == 0 and os.listdir(sdir) == []
+
+
+# ---------------------------------------------------------------------------
+# Engine: tampered / torn snapshots → reasoned quarantine → replay
+# ---------------------------------------------------------------------------
+
+def _kill_with_snapshot(make, sdir, policy="static2"):
+    eng = make()
+    eng.submit(*[vreq(i, policy) for i in range(4)])
+    _step_until(eng, lambda: bool(os.listdir(sdir))
+                and eng._inflight and not eng._inflight[0].rs.done)
+    crash(eng)
+    return [os.path.join(sdir, n) for n in os.listdir(sdir)]
+
+
+@needs_msgpack
+@pytest.mark.parametrize("mutilate,reason_match", [
+    (lambda raw: raw[:-1] + bytes([raw[-1] ^ 0xFF]), "CheckpointError"),
+    (lambda raw: raw[: len(raw) // 2], "CheckpointError"),
+])
+def test_bad_snapshot_quarantined_with_reason_then_replayed(
+        tmp_path, mutilate, reason_match):
+    """A tampered (flipped body bit) or torn (truncated) snapshot is
+    refused: quarantined on disk and in the health ledger with a reason,
+    and its requests replay from the start — nothing is lost."""
+    make, _, sdir = durable_factory(tmp_path)
+    paths = _kill_with_snapshot(make, sdir)
+    for p in paths:
+        raw = open(p, "rb").read()
+        with open(p, "wb") as f:
+            f.write(mutilate(raw))
+
+    eng = make()
+    summary = eng.recover()
+    assert summary["restored_runs"] == 0
+    assert summary["replayed"] == 4
+    assert len(summary["refused"]) == len(paths)
+    qname, reason = summary["refused"][0]
+    assert reason_match in reason
+    # quarantined, not deleted: a human can inspect the evidence
+    assert os.path.exists(os.path.join(sdir, qname + ".quarantined"))
+    assert eng.store.health.quarantine_reason(f"snapshot:{qname}") \
+        == reason
+    assert eng.metrics.snapshots_refused == len(paths)
+    res = eng.run_until_drained()
+    assert sorted(res) == [0, 1, 2, 3]
+
+
+@needs_msgpack
+def test_provenance_drift_refused(tmp_path):
+    """A snapshot taken against one entry version must not restore into
+    a store whose entry has since changed — it is refused with the
+    drifted field in the reason and replayed instead."""
+    make, jpath, sdir = durable_factory(tmp_path)
+    _kill_with_snapshot(make, sdir, policy="adaptive")
+
+    clock = serve.VirtualClock()
+    store = make_store()
+    store.reload("adaptive", _fake_artifact(8))  # hot-swap bumps version
+    eng = serve.ServeEngine(DurableFakeExecutor(clock), params=None,
+                            store=store, clock=clock, max_batch=4,
+                            journal=jpath, snapshot_dir=sdir)
+    summary = eng.recover()
+    assert summary["restored_runs"] == 0 and summary["replayed"] == 4
+    assert any("provenance drift" in r for _, r in summary["refused"])
+    assert sorted(eng.run_until_drained()) == [0, 1, 2, 3]
+
+
+@needs_msgpack
+def test_stale_snapshot_discarded_silently(tmp_path):
+    """A snapshot whose requests already finished is superseded, not
+    suspect: deleted without a quarantine entry."""
+    import shutil
+    make, _, sdir = durable_factory(tmp_path)
+    paths = _kill_with_snapshot(make, sdir)
+    keep = str(tmp_path / "keep.ckpt")
+    shutil.copy(paths[0], keep)
+    eng = make()
+    eng.recover()
+    eng.run_until_drained()
+    crash(eng)
+    # resurrect the (now finished) snapshot and recover again
+    shutil.copy(keep, paths[0])
+    eng2 = make()
+    summary = eng2.recover()
+    assert summary["stale"] >= 1 and summary["refused"] == []
+    assert not os.path.exists(paths[0])
+    assert eng2.metrics.report()["durable"]["snapshots_stale"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# SnapshotStore units
+# ---------------------------------------------------------------------------
+
+@needs_msgpack
+def test_snapshot_store_seq_survives_restart_and_format_guard(tmp_path):
+    store = SnapshotStore(str(tmp_path))
+    name, nbytes = store.save(0, {"x": np.ones((2,), np.float32)},
+                              {"rids": [1, 2]})
+    assert name == "run-1.ckpt" and nbytes > 0
+    arrays, meta = store.load(os.path.join(str(tmp_path), name))
+    assert meta["format"] == FORMAT and meta["rids"] == [1, 2]
+    # seq is scanned from disk: a new store continues, never reuses
+    store2 = SnapshotStore(str(tmp_path))
+    name2, _ = store2.save(0, {}, {})
+    assert name2 == "run-2.ckpt"
+    # a foreign checkpoint without the format tag is refused
+    from repro.checkpoint import io as ckpt_io
+    alien = os.path.join(str(tmp_path), "run-9.ckpt")
+    ckpt_io.save(alien, {}, {"format": "something/else"})
+    with pytest.raises(SnapshotError, match="format"):
+        store2.load(alien)
+
+
+@needs_msgpack
+def test_snapshot_meta_checksum_guard(tmp_path):
+    """Meta tampering (not just body) is caught: the provenance stamp
+    carries its own payload checksum."""
+    from repro.checkpoint import io as ckpt_io
+    from repro.resilience.integrity import CHECKSUM_KEY
+    store = SnapshotStore(str(tmp_path))
+    store.save(0, {}, {"rids": [1], "entry": "e"})
+    path = store.scan()[0]
+    _, meta = ckpt_io.restore(path)
+    meta["rids"] = [999]                       # forge the request list
+    ckpt_io.save(path, {}, meta)               # checksum now stale
+    assert meta[CHECKSUM_KEY]
+    with pytest.raises(SnapshotError, match="checksum"):
+        store.load(path)
+
+
+@needs_msgpack
+def test_snapshot_one_live_file_per_serial(tmp_path):
+    store = SnapshotStore(str(tmp_path))
+    store.save(5, {}, {})
+    store.save(5, {}, {})                      # supersedes
+    assert [os.path.basename(p) for p in store.scan()] == ["run-2.ckpt"]
+    store.drop(5)
+    assert store.scan() == [] and store.live() == ()
+
+
+# ---------------------------------------------------------------------------
+# The kill matrix (CI durability lane): seeded kill–restart ramps lose
+# nothing — every offered request resolves to a result or a reasoned shed
+# ---------------------------------------------------------------------------
+
+@needs_msgpack
+@pytest.mark.durability
+@pytest.mark.parametrize("seed", [0, 7, 1234])
+def test_kill_restart_matrix_zero_lost(tmp_path, seed):
+    make, jpath, _ = durable_factory(tmp_path)
+    n = 18
+    policies = ("static2", "adaptive", "no_cache")
+    trace = [vreq(i, policies[i % 3], arrival=0.25 * i) for i in range(n)]
+    eng0 = make()
+    eng0.submit(*trace)
+    crash(eng0)
+
+    plan = KillPlan(seed=seed, kill_rate=0.2, kills={2}, max_kills=10)
+    report = drain_with_kills(make, plan)
+    assert report.restarts >= 1
+    resolved = set(report.delivered) | set(report.engine.shed)
+    assert resolved == {r.rid for r in trace}, "requests vanished"
+    # a fresh incarnation answers every outcome from the journal alone
+    probe = make()
+    probe.recover()
+    for r in trace:
+        verdict, _ = probe.outcome(r.rid)
+        assert verdict in ("done", "shed")
+    st = JournalState.replay(jpath)
+    assert st.pending() == {}
+
+
+# ---------------------------------------------------------------------------
+# Real smoke DiT: resume ≡ never-crashed, bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_dit():
+    import jax
+    from repro import configs
+    from repro.core import diffusion
+    cfg = configs.get("dit-xl-256", "smoke")
+    params = diffusion.init_params(jax.random.PRNGKey(0), cfg)
+    params = jax.tree.map(
+        lambda a: a + 0.05 * jax.random.normal(jax.random.PRNGKey(7),
+                                               a.shape),
+        params)
+    return cfg, params
+
+
+@needs_msgpack
+def test_real_export_import_bitwise_all_three_kinds(small_dit, tmp_path):
+    """Export at a boundary → save → restore → import → advance to done
+    is bit-identical to an uninterrupted run, for segmented, host-
+    adaptive, and fused-adaptive states; tau/k_max drift is refused and
+    the fused path never syncs across the round-trip."""
+    import jax.numpy as jnp
+    from repro.core import calibration
+    from repro.core import solvers
+    from repro.core.executor import SmoothCacheExecutor
+
+    cfg, params = small_dit
+    steps = 6
+    sch = S.fora(cfg.layer_types(), steps, 2)
+    pm = calibration.ProxyMap(
+        {t: (0.5, 0.01) for t in cfg.layer_types()})
+    pool = plan_lib.mask_lattice(sch)
+    ex = SmoothCacheExecutor(cfg, solvers.ddim(steps), cfg_scale=1.5)
+    assert ex.supports_export
+    label = jnp.zeros((2,), jnp.int32)
+    key = serve.batch_key([100, 101])
+    adaptive_kw = dict(schedule=sch, tau=0.1, proxy_map=pm, pool=pool,
+                       k_max=2)
+
+    def seg_start():
+        return ex.start_run(params, key, 2, plan=ex.plan_for(sch),
+                            schedule=sch, label=label)
+
+    def host_start():
+        return ex.start_adaptive_run(params, key, 2, label=label,
+                                     **adaptive_kw)
+
+    def fused_start():
+        return ex.start_adaptive_fused_run(params, key, 2, label=label,
+                                           **adaptive_kw)
+
+    cases = [
+        ("plan", seg_start, lambda rs: ex.advance_run(params, rs),
+         dict(plan=ex.plan_for(sch))),
+        ("adaptive", host_start,
+         lambda rs: ex.advance_adaptive_run(params, rs), adaptive_kw),
+        ("adaptive_fused", fused_start,
+         lambda rs: ex.advance_adaptive_fused(params, rs, n_steps=2),
+         adaptive_kw),
+    ]
+    from repro.checkpoint import io as ckpt_io
+    for name, start, advance, import_kw in cases:
+        pre_sync = ex.host_sync_count
+        ref = start()                          # the uninterrupted twin
+        while not ref.done:
+            ref = advance(ref)
+        rs = advance(start())                  # one boundary in → crash
+        kind, arrays, static = ex.export_run(rs)
+        assert kind == name
+        path = str(tmp_path / f"{name}.ckpt")
+        ckpt_io.save(path, arrays, {"static": static})
+        del rs, arrays                         # the process died here
+        restored_arrays, meta = ckpt_io.restore(path)
+        rs2 = ex.import_run(params, kind, restored_arrays,
+                            meta["static"], **import_kw)
+        while not rs2.done:
+            rs2 = advance(rs2)
+        np.testing.assert_array_equal(np.asarray(rs2.x),
+                                      np.asarray(ref.x))
+        if name != "plan":
+            assert rs2.decisions == ref.decisions
+        if name == "adaptive_fused":
+            # the round-trip adds zero host syncs on the fused path
+            assert ex.host_sync_count == pre_sync
+    # drifted deployment knobs are refused, not silently reinterpreted
+    rs = ex.advance_adaptive_run(params, host_start())
+    kind, arrays, static = ex.export_run(rs)
+    with pytest.raises(ValueError, match="tau"):
+        ex.import_run(params, kind, arrays, static,
+                      **dict(adaptive_kw, tau=0.3))
+
+
+def _real_artifact(cfg, steps):
+    sch = S.fora(cfg.layer_types(), steps, 2)
+    pool = [list(sig.live_in) for sig in plan_lib.mask_lattice(sch)]
+    return CacheArtifact(
+        arch=cfg.name, solver="ddim", num_steps=steps,
+        policy={"name": "adaptive", "base": {"name": "static", "n": 2},
+                "tau": 0.1, "k_max": 2},
+        curves={}, schedule=sch,
+        plan=plan_lib.analyze(sch).to_jsonable(),
+        adaptive={"tau": 0.1, "k_max": 2,
+                  "proxy_map": {"coeffs": {t: [0.5, 0.01]
+                                           for t in cfg.layer_types()},
+                                "mean_proxy": None},
+                  "pool": pool},
+        meta={})
+
+
+def _real_store(cfg, solver, steps):
+    store = serve.ArtifactStore(cfg, solver, cfg_scale=1.5)
+    store.add_policy("static2", "static:n=2")
+    store.add_artifact("adaptive", _real_artifact(cfg, steps))
+    return store
+
+
+@needs_msgpack
+def test_real_engine_restore_bit_identical(small_dit, tmp_path):
+    """Kill a real engine with a static and a fused-adaptive batch in
+    flight; the restarted engine restores both from snapshots, finishes
+    them, and every latent is bit-identical to an uninterrupted engine —
+    with the fused path still at zero host syncs."""
+    from repro.core import solvers
+    from repro.core.executor import SmoothCacheExecutor
+
+    cfg, params = small_dit
+    steps = 6
+    reqs = [serve.Request(rid=i, seed=100 + i,
+                          policy="adaptive" if i >= 2 else "static2",
+                          label=i % cfg.num_classes, arrival=0.0)
+            for i in range(4)]
+
+    def build(journal=None, snapshot_dir=None):
+        ex = SmoothCacheExecutor(cfg, solvers.ddim(steps), cfg_scale=1.5)
+        eng = serve.ServeEngine(
+            ex, params, _real_store(cfg, solvers.ddim(steps), steps),
+            max_batch=2, max_inflight=2, clock=serve.VirtualClock(),
+            check=True, adaptive_chunk=2, journal=journal,
+            snapshot_dir=snapshot_dir)
+        return eng, ex
+
+    base_eng, _ = build()
+    base_eng.submit(*[dataclasses.replace(r) for r in reqs])
+    base = base_eng.run_until_drained()
+
+    jpath = str(tmp_path / "journal.jsonl")
+    sdir = str(tmp_path / "snapshots")
+    eng, _ = build(jpath, sdir)
+    eng.submit(*[dataclasses.replace(r) for r in reqs])
+    # advance until both batches hold a boundary snapshot mid-flight
+    _step_until(eng, lambda: len(eng._snapshots.live()) == 2
+                and all(not fl.rs.done for fl in eng._inflight), limit=6)
+    crash(eng)
+
+    eng2, ex2 = build(jpath, sdir)
+    summary = eng2.recover()
+    assert summary["restored_runs"] == 2
+    assert summary["restored_requests"] == 4
+    assert summary["replayed"] == 0 and summary["refused"] == []
+    res = eng2.run_until_drained()
+    assert sorted(res) == [0, 1, 2, 3]
+    assert ex2.host_sync_count == 0
+    for rid in base:
+        np.testing.assert_array_equal(res[rid], base[rid])
+    assert all(any(t.startswith("restore@") for t in rec.lineage)
+               for rec in eng2.records)
+
+
+@needs_msgpack
+def test_real_join_then_restore_bit_identical(small_dit, tmp_path):
+    """Continuous mode: late arrivals join an in-flight batch, the
+    merged run checkpoints at the next boundary, the process dies, and
+    the restart restores the *merged* run (join lineage intact) — every
+    latent still equals a solo generate of its own key."""
+    import jax.numpy as jnp
+    from repro import cache
+    from repro.core import solvers
+    from repro.core.executor import SmoothCacheExecutor
+
+    cfg, params = small_dit
+    steps = 6
+    jpath = str(tmp_path / "journal.jsonl")
+    sdir = str(tmp_path / "snapshots")
+
+    def build():
+        ex = SmoothCacheExecutor(cfg, solvers.ddim(steps), cfg_scale=1.5)
+        store = serve.ArtifactStore(cfg, solvers.ddim(steps),
+                                    cfg_scale=1.5)
+        store.add_policy("static2", "static:n=2")
+        return serve.ServeEngine(
+            ex, params, store, max_batch=4, max_inflight=1,
+            clock=serve.VirtualClock(), check=True, continuous=True,
+            journal=jpath, snapshot_dir=sdir)
+
+    def rq(i):
+        return serve.Request(rid=i, seed=100 + i, policy="static2",
+                             label=i % cfg.num_classes)
+
+    eng = build()
+    eng.submit(rq(0), rq(1))
+    assert eng.step()                          # in flight at a boundary
+    eng.submit(rq(2), rq(3))
+    # run until the chaser merged back in AND the merged 4-row run has
+    # checkpointed at a boundary (the journal proves the snapshot covers
+    # all four rids, not a leftover pre-merge one), then pull the plug
+    def merged_and_snapshotted():
+        if eng.metrics.joins != 1 or len(eng._inflight) != 1:
+            return False
+        fl = eng._inflight[0]
+        if fl.rs.done or fl.mb.bucket != 4:
+            return False
+        ck = JournalState.replay(jpath).checkpoints.get(int(fl.serial))
+        return ck is not None and len(ck.get("rids", ())) == 4
+
+    _step_until(eng, merged_and_snapshotted, limit=12)
+    crash(eng)
+
+    eng2 = build()
+    summary = eng2.recover()
+    assert summary["restored_runs"] == 1
+    assert summary["restored_requests"] == 4
+    res = eng2.run_until_drained()
+    assert sorted(res) == [0, 1, 2, 3]
+    rec = eng2.records[0]
+    assert any("join@" in t for t in rec.lineage)      # history survived
+    assert any(t.startswith("restore@") for t in rec.lineage)
+
+    pipe = cache.DiffusionPipeline(cfg, solvers.ddim(steps), "static:n=2",
+                                   cfg_scale=1.5)
+    pipe.prepare()
+    for i in range(4):
+        x = pipe.generate(params, serve.batch_key([100 + i]), 1,
+                          label=jnp.asarray([i % cfg.num_classes],
+                                            jnp.int32))
+        np.testing.assert_array_equal(np.asarray(x[0]), res[i])
+
+
+@needs_msgpack
+def test_real_replay_from_start_bit_identical(small_dit, tmp_path):
+    """Every snapshot tampered → every one quarantined with a reason →
+    the pending requests replay from the start, and the row-keys
+    contract still lands each latent bit-identical to a solo generate
+    of the request's own key."""
+    import jax.numpy as jnp
+    from repro import cache
+    from repro.core import solvers
+    from repro.core.executor import SmoothCacheExecutor
+
+    cfg, params = small_dit
+    steps = 6
+    jpath = str(tmp_path / "journal.jsonl")
+    sdir = str(tmp_path / "snapshots")
+
+    def build():
+        ex = SmoothCacheExecutor(cfg, solvers.ddim(steps), cfg_scale=1.5)
+        store = serve.ArtifactStore(cfg, solvers.ddim(steps),
+                                    cfg_scale=1.5)
+        store.add_policy("static2", "static:n=2")
+        return serve.ServeEngine(
+            ex, params, store, max_batch=2, max_inflight=1,
+            clock=serve.VirtualClock(), check=True, continuous=True,
+            journal=jpath, snapshot_dir=sdir)
+
+    eng = build()
+    eng.submit(*[serve.Request(rid=i, seed=100 + i, policy="static2",
+                               label=i % cfg.num_classes, arrival=0.0)
+                 for i in range(2)])
+    _step_until(eng, lambda: bool(os.listdir(sdir))
+                and eng._inflight and not eng._inflight[0].rs.done,
+                limit=6)
+    crash(eng)
+    for name in os.listdir(sdir):
+        p = os.path.join(sdir, name)
+        raw = open(p, "rb").read()
+        with open(p, "wb") as f:               # flip one body bit
+            f.write(raw[:-1] + bytes([raw[-1] ^ 0xFF]))
+
+    eng2 = build()
+    summary = eng2.recover()
+    assert summary["restored_runs"] == 0 and summary["replayed"] == 2
+    assert len(summary["refused"]) >= 1
+    for qname, reason in summary["refused"]:
+        assert eng2.store.health.quarantine_reason(
+            f"snapshot:{qname}") == reason
+    res = eng2.run_until_drained()
+    assert sorted(res) == [0, 1]
+
+    pipe = cache.DiffusionPipeline(cfg, solvers.ddim(steps), "static:n=2",
+                                   cfg_scale=1.5)
+    pipe.prepare()
+    for i in range(2):
+        x = pipe.generate(params, serve.batch_key([100 + i]), 1,
+                          label=jnp.asarray([i % cfg.num_classes],
+                                            jnp.int32))
+        np.testing.assert_array_equal(np.asarray(x[0]), res[i])
